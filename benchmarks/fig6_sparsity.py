@@ -1,0 +1,59 @@
+"""Fig. 6(c): OR-accumulation error vs product sparsity.
+
+Conventional S-CIM (independent PRNGs per row, [27]) saturates as sparsity
+drops; DS-CIM's remapped OR is collision-free at every sparsity, with a
+uniform error floor — the paper's core qualitative claim.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.macro import DSCIMMacro
+from repro.core.ormac import naive_or_count
+from repro.core.seed_search import calibrated_config
+
+
+def run(H: int = 128, L: int = 256, n_trials: int = 8):
+    """Sweep input magnitude (=> product sparsity) and measure relative
+    error of OR-accumulated vs exact sums, both circuits."""
+    rng = np.random.default_rng(0)
+    mac = DSCIMMacro(calibrated_config("dscim1", L, "paper"))
+    rows = []
+    for level in (16, 48, 96, 160, 224, 255):   # activation magnitude cap
+        err_naive, err_ds = [], []
+        for t in range(n_trials):
+            a = rng.integers(0, level + 1, H)
+            w = rng.integers(0, level + 1, H)
+            # conventional: unsigned OR-MAC16, independent streams
+            or_c, _ = naive_or_count(a, w, L=L, group=16, seed=t)
+            exact_p = float((a * w).sum()) / 65536 * L   # expected sum of 1s
+            err_naive.append(abs(or_c - exact_p) / max(L, 1))
+            # DS-CIM: estimate of the same unsigned sum via remapped OR
+            x = (a.astype(np.int64) - 128)[None, :]
+            wm = (w.astype(np.int64) - 128)[:, None]
+            est = float(np.asarray(mac.mvm(x, wm))[0, 0])
+            exact = float((x * wm.T).sum())
+            err_ds.append(abs(est - exact) / (H * 255 * 255))
+        sparsity = 1.0 - (level / 255.0 / 2) ** 2
+        rows.append({
+            "name": f"fig6c/level{level}",
+            "product_sparsity": round(sparsity, 3),
+            "naive_or_err": float(np.mean(err_naive)),
+            "dscim_err_pct": 100 * float(np.mean(err_ds)),
+        })
+    return rows
+
+
+def main():
+    rows = run()
+    for r in rows:
+        print(f"{r['name']},0,sparsity={r['product_sparsity']};"
+              f"naive={r['naive_or_err']:.4f};dscim={r['dscim_err_pct']:.3f}%")
+    # headline check: naive error grows >3x from sparse to dense; DS-CIM ~flat
+    lo, hi = rows[0], rows[-1]
+    print(f"fig6c/summary,0,naive_growth={hi['naive_or_err']/max(lo['naive_or_err'],1e-9):.1f}x;"
+          f"dscim_growth={hi['dscim_err_pct']/max(lo['dscim_err_pct'],1e-9):.1f}x")
+
+
+if __name__ == "__main__":
+    main()

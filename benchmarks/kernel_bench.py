@@ -1,0 +1,70 @@
+"""Kernel microbenches: DS-CIM bitstream-matmul kernel vs exact int8 matmul
+(interpret mode on CPU — correctness-grade timing; TPU roofline terms are
+derived analytically from the kernel's tile structure and reported as
+`derived`)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timed
+from repro.core.seed_search import calibrated_config
+from repro.kernels import ops
+
+# v5e constants
+PEAK = 197e12
+HBM = 819e9
+
+
+def kernel_roofline(M, K, N, L, k):
+    """Analytic TPU roofline for the dscim_mvm kernel: HBM traffic is
+    int8 operands + f32 out; MXU work is the L-expanded bitstream matmul."""
+    flops = 2.0 * M * N * K * L
+    byts = M * K + K * N + 4 * M * N
+    t_c = flops / PEAK
+    t_m = byts / HBM
+    return t_c, t_m, ("compute" if t_c > t_m else "memory"), flops / byts
+
+
+def run():
+    from repro.kernels.dscim_mvm_blocked import (block_point_tables,
+                                                 dscim_counts_blocked)
+    rows = []
+    rng = np.random.default_rng(0)
+    for (M, K, N) in [(128, 256, 128)]:
+        x = jnp.asarray(rng.integers(-128, 128, (M, K)), jnp.int8)
+        w = jnp.asarray(rng.integers(-128, 128, (K, N)), jnp.int8)
+        us_exact = timed(lambda: ops.int8_matmul(x, w), n=3)
+        rows.append({
+            "name": f"kernel/int8_matmul/{M}x{K}x{N}", "us": us_exact,
+            "derived": "interpret-mode;tpu_t_comp=%.2e" % (
+                2.0 * M * N * K / PEAK)})
+        for variant, L in (("dscim1", 256), ("dscim2", 64)):
+            cfg = calibrated_config(variant, L, "paper")
+            us = timed(lambda: ops.dscim_mvm(x, w, cfg), n=2)
+            t_c, t_m, dom, ai = kernel_roofline(M, K, N, L, cfg.k)
+            rows.append({
+                "name": f"kernel/dscim_mvm/{variant}/L{L}/{M}x{K}x{N}",
+                "us": us,
+                "derived": (f"tpu_t_comp={t_c:.2e}s;tpu_t_mem={t_m:.2e}s;"
+                            f"dom={dom};AI={ai:.0f}flops/B")})
+            # beyond-paper blocked-points kernel (§Perf cell C)
+            _, _, pmax = block_point_tables(cfg)
+            us_b = timed(lambda: dscim_counts_blocked(x, w, cfg, bk=16), n=2)
+            t_cb, t_mb, domb, aib = kernel_roofline(M, K, N, pmax, cfg.k)
+            rows.append({
+                "name": f"kernel/dscim_blocked/{variant}/L{L}/{M}x{K}x{N}",
+                "us": us_b,
+                "derived": (f"pmax={pmax};mxu_reduction={L/pmax:.1f}x;"
+                            f"tpu_t_comp={t_cb:.2e}s;"
+                            f"overhead_vs_exact={pmax:.0f}x")})
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"{r['name']},{r['us']:.0f},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

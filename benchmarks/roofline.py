@@ -1,0 +1,63 @@
+"""Roofline report generator: reads experiments/dryrun/*.json (produced by
+repro.launch.dryrun) and emits the per-cell table for EXPERIMENTS.md
+§Dry-run and §Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+V5E = {"peak_flops": 197e12, "hbm_bw": 819e9, "link_bw": 50e9}
+
+
+def load(dirname: str = "experiments/dryrun"):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        recs.append(json.load(open(p)))
+    return recs
+
+
+def one_line(r) -> str:
+    if r.get("skipped"):
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | skip | — | — "
+                f"| — | — | — | full-attention arch (spec skip) |")
+    if not r.get("ok"):
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | FAIL | — | — "
+                f"| — | — | — | {r.get('error', '')[:60]} |")
+    rf = r["roofline"]
+    mem_gib = r["memory"].get("total_per_device", 0) / 2 ** 30
+    t = max(rf["t_compute_s"], rf["t_memory_s"], rf["t_collective_s"])
+    frac = rf["t_compute_s"] / t if t else 0.0
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+            f"| {mem_gib:.1f} | {rf['t_compute_s']:.2e} "
+            f"| {rf['t_memory_s']:.2e} | {rf['t_collective_s']:.2e} "
+            f"| {rf['dominant']} | useful={r['useful_flops_ratio']:.2f} "
+            f"roofline_frac={frac:.3f} |")
+
+
+def summarize(recs):
+    ok = [r for r in recs if r.get("ok")]
+    print(f"cells: {len(recs)} total, {len(ok)} compiled, "
+          f"{sum(1 for r in recs if r.get('skipped'))} spec-skips, "
+          f"{sum(1 for r in recs if not r.get('ok') and not r.get('skipped'))}"
+          " failures")
+    by_dom = {}
+    for r in ok:
+        by_dom.setdefault(r["roofline"]["dominant"], []).append(r)
+    for dom, rs in sorted(by_dom.items()):
+        print(f"  dominant={dom}: {len(rs)} cells")
+    return ok
+
+
+def main():
+    recs = load()
+    print("| arch | shape | mesh | status | GiB/dev | t_comp | t_mem "
+          "| t_coll | dominant | notes |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        print(one_line(r))
+    summarize(recs)
+
+
+if __name__ == "__main__":
+    main()

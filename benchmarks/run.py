@@ -1,0 +1,41 @@
+"""Benchmark harness entry point — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.  Sections:
+  t1_rmse       — Table I RMSE rows (DS-CIM1/2 x L, paper + beyond-paper)
+  t1_accuracy   — Table I accuracy methodology (synthetic classifier)
+  t2_llm        — Table II methodology (trained LM + FP8->INT8 DS-CIM)
+  t3_efficiency — Table III + Fig. 4 + Fig. 7 (calibrated hw model)
+  fig6_sparsity — Fig. 6(c) saturation-vs-sparsity
+  seedsearch    — Sec. IV-C PRNG/seed optimization
+  kernel_bench  — Pallas kernel microbench + TPU roofline terms
+  roofline      — per-(arch x shape x mesh) table from the dry-run JSONs
+
+Run everything:  PYTHONPATH=src python -m benchmarks.run
+One section:     PYTHONPATH=src python -m benchmarks.run t1_rmse
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+SECTIONS = ("t1_rmse", "fig6_sparsity", "t3_efficiency", "seedsearch",
+            "t1_accuracy", "t2_llm", "kernel_bench", "roofline")
+
+
+def main() -> None:
+    want = sys.argv[1:] or SECTIONS
+    for name in want:
+        print(f"# === {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            mod.main()
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:  # noqa: BLE001 — keep the harness going
+            print(f"# {name} FAILED:\n{traceback.format_exc()[-1500:]}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Table II methodology on our own stack: train a small LM, then evaluate
+with FP8->INT8-aligned DS-CIM error injection vs exact, reporting the
+accuracy/perplexity deltas (LLaMA-7B weights are not available offline; the
+paper's *mechanism* — FP8 quantize, align to INT8 groups of 128, apply the
+DS-CIM error pattern to MVM outputs — is reproduced end-to-end).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.data.synthetic import SyntheticLM
+from repro.launch.train import TrainLoop
+from repro.models import get_model
+from repro.models.lm import lm_loss
+
+
+def run(steps: int = 120, eval_batches: int = 4):
+    cfg = ARCHS["qwen3-0.6b"].reduced()
+    loop = TrainLoop(cfg, steps=steps, batch=8, seq=32, ckpt_dir=None,
+                     lr=2e-3, log=lambda *a: None)
+    state = loop.run()
+    params = state["params"]
+    model = get_model(cfg)
+    # same synthetic language as training (seed 0); unseen steps >= 10k
+    data = SyntheticLM(cfg.vocab, seed=0)
+
+    def eval_under(dscim_spec: str):
+        c = dataclasses.replace(cfg, dscim=dscim_spec)
+        losses, accs = [], []
+        for i in range(eval_batches):
+            b = data.batch(8, 32, step=10_000 + i)
+            logits, _ = model.forward(params, c, {
+                "tokens": b["tokens"], "labels": b["labels"]})
+            losses.append(float(lm_loss(logits, b["labels"])))
+            accs.append(float((np.asarray(logits).argmax(-1)
+                               == b["labels"]).mean()))
+        return float(np.mean(losses)), float(np.mean(accs))
+
+    rows = []
+    base_loss, base_acc = eval_under("off")
+    rows.append({"name": "t2/float", "loss": base_loss, "acc": base_acc,
+                 "delta": 0.0})
+    for spec in ("exact:dscim1:256", "paper_inject:dscim1:256",
+                 "paper_inject:dscim2:64", "lut:dscim1:256",
+                 "lut:dscim1:256:opt"):
+        loss, acc = eval_under(spec)
+        rows.append({"name": f"t2/{spec.replace(':', '_')}",
+                     "loss": loss, "acc": acc,
+                     "delta": base_acc - acc})
+    # NOTE: this reduced LM has K = 64-96 (<< one 128-row window), the
+    # worst case for DS-CIM — see t1_accuracy's K-sweep for the trend that
+    # reconciles these drops with the paper's near-zero ResNet/LLaMA drops.
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"{r['name']},0,loss={r['loss']:.4f};acc={r['acc']:.4f};"
+              f"acc_drop={r['delta']:+.4f}")
+
+
+if __name__ == "__main__":
+    main()

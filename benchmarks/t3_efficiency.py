@@ -1,0 +1,58 @@
+"""Table III + Fig. 4 + Fig. 7: hardware efficiency from the calibrated
+analytical 40nm model (hwmodel.py).  These are model numbers reproducing the
+paper's post-layout results — labeled as such."""
+from __future__ import annotations
+
+from repro.core.hwmodel import DSCIM1_HW, DSCIM2_HW
+
+PAPER = {
+    ("dscim1", 256): (669.7, 117.1), ("dscim1", 64): (2677.2, 468.4),
+    ("dscim2", 64): (3566.1, 363.7), ("dscim2", 256): (891.5, 90.9),
+}
+
+
+def run():
+    rows = []
+    for variant, mk in (("dscim1", DSCIM1_HW), ("dscim2", DSCIM2_HW)):
+        for L in (64, 128, 256):
+            hw = mk(L)
+            s = hw.summary(signed=True)
+            paper = PAPER.get((variant, L))
+            rows.append({
+                "name": f"t3/{variant}/L{L}",
+                "tops_w": s["tops_per_watt"],
+                "tops_mm2": s["tops_per_mm2"],
+                "area_mm2": s["area_mm2"],
+                "paper": paper,
+                "pwr_breakdown": s["power_breakdown"],
+            })
+    # Fig. 4: CMR sweep
+    for cmr in (1, 4, 16, 64):
+        hw = DSCIM2_HW(64, cmr=cmr)
+        rows.append({
+            "name": f"fig4/cmr{cmr}",
+            "tops_w": hw.tops_per_watt(),
+            "tops_mm2": hw.tops_per_mm2(),
+            "area_mm2": hw.area_mm2(),
+            "paper": None,
+            "pwr_breakdown": None,
+        })
+    return rows
+
+
+def main():
+    for r in run():
+        extra = ""
+        if r["paper"]:
+            extra = f";paper={r['paper'][0]}/{r['paper'][1]}"
+        if r["pwr_breakdown"]:
+            top = sorted(r["pwr_breakdown"].items(),
+                         key=lambda kv: -kv[1])[:3]
+            extra += ";pwr=" + "+".join(f"{k}:{v:.0%}" for k, v in top)
+        print(f"{r['name']},0,TOPS/W={r['tops_w']:.1f};"
+              f"TOPS/mm2={r['tops_mm2']:.1f};area={r['area_mm2']:.3f}mm2"
+              + extra)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,132 @@
+"""Sharded checkpointing: npz leaf files + JSON manifest, atomic renames,
+async writes, keep-N retention, and reshard-on-restore (elastic restarts).
+
+Layout:
+  <dir>/step_000123/
+      manifest.json          # tree structure, shapes, dtypes, step, extras
+      arr_00000.npy ...      # one file per leaf (host-local full arrays)
+  <dir>/LATEST               # atomic pointer file
+
+Single-host container: each leaf is saved unsharded (device arrays are
+gathered);  restore re-`device_put`s against *whatever shardings the new
+mesh provides*, so a 16x16 checkpoint restores onto 2x16x16 or 1-device
+meshes unchanged — that is the elastic-restart contract, covered by
+tests/test_checkpoint.py.  On multi-host deployments the same manifest
+format extends with per-host shard files (process_index suffix).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+__all__ = ["Checkpointer"]
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._pending: threading.Thread | None = None
+
+    # -- save -----------------------------------------------------------------
+    def save(self, step: int, tree, extras: dict | None = None,
+             blocking: bool = False):
+        """Async by default; the previous pending save is joined first."""
+        self.wait()
+        host_leaves = [np.asarray(x) for x in _flatten(tree)[0]]
+        treedef = jax.tree_util.tree_structure(tree)
+
+        def _write():
+            tmp = os.path.join(self.dir, f".tmp_step_{step:09d}")
+            final = os.path.join(self.dir, f"step_{step:09d}")
+            os.makedirs(tmp, exist_ok=True)
+            for i, leaf in enumerate(host_leaves):
+                np.save(os.path.join(tmp, f"arr_{i:05d}.npy"), leaf)
+            manifest = {
+                "step": step,
+                "n_leaves": len(host_leaves),
+                "treedef": str(treedef),
+                "extras": extras or {},
+                "time": time.time(),
+            }
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)                      # atomic publish
+            with open(os.path.join(self.dir, ".LATEST_tmp"), "w") as f:
+                f.write(os.path.basename(final))
+            os.replace(os.path.join(self.dir, ".LATEST_tmp"),
+                       os.path.join(self.dir, "LATEST"))
+            self._gc()
+
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        self._pending = t
+        if blocking:
+            self.wait()
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _gc(self):
+        steps = sorted(d for d in os.listdir(self.dir)
+                       if d.startswith("step_"))
+        for d in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
+
+    # -- restore ----------------------------------------------------------------
+    def latest_step(self) -> int | None:
+        p = os.path.join(self.dir, "LATEST")
+        if not os.path.exists(p):
+            return None
+        name = open(p).read().strip()
+        if not os.path.exists(os.path.join(self.dir, name, "manifest.json")):
+            return None
+        return int(name.split("_")[1])
+
+    def restore(self, step: int, target_tree, shardings=None):
+        """Load leaves and place them against ``shardings`` (or CPU).
+
+        ``target_tree`` provides the pytree structure (values ignored).
+        Reshard-on-restore: shardings may describe any mesh.
+        """
+        d = os.path.join(self.dir, f"step_{step:09d}")
+        manifest = json.load(open(os.path.join(d, "manifest.json")))
+        leaves, treedef = _flatten(target_tree)
+        assert manifest["n_leaves"] == len(leaves), (
+            "checkpoint/model structure mismatch",
+            manifest["n_leaves"], len(leaves))
+        out = []
+        shard_leaves = (_flatten(shardings)[0] if shardings is not None
+                        else [None] * len(leaves))
+        for i, (ref, shard) in enumerate(zip(leaves, shard_leaves)):
+            arr = np.load(os.path.join(d, f"arr_{i:05d}.npy"))
+            assert tuple(arr.shape) == tuple(ref.shape), (
+                f"leaf {i} shape {arr.shape} != expected {ref.shape}")
+            if shard is not None:
+                out.append(jax.device_put(arr, shard))
+            else:
+                out.append(jax.device_put(arr))
+        return jax.tree_util.tree_unflatten(treedef, out), manifest["extras"]
+
+    def restore_latest(self, target_tree, shardings=None):
+        step = self.latest_step()
+        if step is None:
+            return None
+        tree, extras = self.restore(step, target_tree, shardings)
+        return step, tree, extras

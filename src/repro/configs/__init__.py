@@ -1,0 +1,19 @@
+"""Assigned-architecture registry: --arch <id> resolves here."""
+from .base import ArchConfig, LM_SHAPES, Shape  # noqa: F401
+
+from . import (olmo_1b, qwen3_0p6b, starcoder2_7b, codeqwen1p5_7b,
+               deepseek_moe_16b, granite_moe_1b, rwkv6_7b, zamba2_7b,
+               musicgen_large, pixtral_12b)
+
+ARCHS = {
+    m.CONFIG.name: m.CONFIG
+    for m in (olmo_1b, qwen3_0p6b, starcoder2_7b, codeqwen1p5_7b,
+              deepseek_moe_16b, granite_moe_1b, rwkv6_7b, zamba2_7b,
+              musicgen_large, pixtral_12b)
+}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]

@@ -1,0 +1,16 @@
+"""DS-CIM core: the paper's contribution as composable JAX modules.
+
+Layering:
+  prng      — 8-bit PRNG / low-discrepancy point sequences (PRNGA, PRNGW)
+  remap     — sample-region remapping (reflected fold) + count LUT
+  ormac     — cycle-accurate OR-MAC oracle + naive saturating baseline [27]
+  macro     — DS-CIM1/2 MVM estimator (cycle / lut / bitmatmul backends)
+  quant     — int8 / FP8 quantization + FP8->INT8 group alignment [30]
+  seed_search — Sec. IV-C PRNG/seed optimization + calibrated presets
+  error_model — calibrated statistical injection (big-model fast path)
+  dscim_layer — DSCIMLinear: drop-in quantized linear for the LM framework
+  hwmodel   — analytical 40nm energy/area model (Tables III, Figs. 4/7)
+"""
+from .macro import DSCIMConfig, DSCIMMacro, dscim1, dscim2  # noqa: F401
+from .dscim_layer import DSCIMLinear, make_linear           # noqa: F401
+from .seed_search import calibrated_config                  # noqa: F401

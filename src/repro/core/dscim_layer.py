@@ -1,0 +1,136 @@
+"""DSCIMLinear — the framework integration point of the paper's technique.
+
+A drop-in replacement for ``x @ W`` that quantizes to int8 (per-channel) and
+computes the matmul the way a DS-CIM accelerator would:
+
+* ``exact``        — int8 matmul, float rescale (the DCIM adder-tree baseline);
+* ``lut``          — bit-exact DS-CIM emulation via the joint-count LUT;
+* ``bitmatmul``    — bit-exact DS-CIM via the {0,1}-expanded MXU matmul (the
+                     Pallas kernel's math; pure-jnp twin here);
+* ``statistical``  — calibrated Gaussian injection (fast big-model path).
+
+The hardware accumulates in windows of ``cfg.rows`` (=128) physical rows and
+sums window results digitally (exact), so K > 128 decomposes into exact sums
+of 128-row stochastic MACs — which is what all backends implement (the error
+process is per-row i.i.d.-across-windows, so no explicit windowing is needed
+for lut/bitmatmul; ``statistical`` scales moments by K directly).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .error_model import ErrorModel
+from .macro import DSCIMConfig, DSCIMMacro
+from .quant import quantize_int8
+from .seed_search import calibrated_config
+
+__all__ = ["DSCIMLinear", "make_linear"]
+
+Mode = Literal["exact", "lut", "bitmatmul", "kernel", "statistical",
+               "paper_inject", "float"]
+
+
+@dataclasses.dataclass
+class DSCIMLinear:
+    """Functional quantized-linear operator with a DS-CIM compute backend.
+
+    ``group_k`` — quantization granularity along the contraction dim.  The
+    paper's LLaMA recipe ([30], Sec. V) uses granularity 128, matching the
+    macro's 128-row accumulation window: each window gets its own int8
+    scales, windows are computed stochastically and summed digitally (exact),
+    which keeps heavy-tailed outliers from wasting the int8 range.
+    ``group_k=None`` = one scale over all of K (plain per-channel quant).
+    """
+    cfg: DSCIMConfig
+    mode: Mode = "lut"
+    group_k: int | None = 128
+
+    def __post_init__(self):
+        self.macro = DSCIMMacro(self.cfg)
+        self._errmodel = (ErrorModel.from_macro(self.macro)
+                          if self.mode in ("statistical", "paper_inject")
+                          else None)
+
+    def _windowed(self, x2, w2):
+        """Split K into group_k windows -> (x3 (M,nw,g), w3 (nw,g,N))."""
+        M, K = x2.shape
+        g = self.group_k or K
+        pad = (-K) % g
+        if pad:
+            x2 = jnp.pad(x2, ((0, 0), (0, pad)))
+            w2 = jnp.pad(w2, ((0, pad), (0, 0)))
+        nw = x2.shape[1] // g
+        return x2.reshape(M, nw, g), w2.reshape(nw, g, -1), nw, g
+
+    def __call__(self, x, w, key=None):
+        """x: (..., K) float; w: (K, N) float -> (..., N) float32."""
+        if self.mode == "float":
+            return x @ w
+        lead = x.shape[:-1]
+        K = x.shape[-1]
+        N = w.shape[-1]
+        xf = x.reshape(-1, K)
+        x3, w3, nw, g = self._windowed(xf, w)          # float windows
+        xq = quantize_int8(x3, axis=-1)                # (M,nw,1) scales
+        wq = quantize_int8(w3, axis=1)                 # (nw,1,N) scales
+        x2 = xq.q.astype(jnp.int32)                    # (M,nw,g)
+        w2 = wq.q.astype(jnp.int32)                    # (nw,g,N)
+        if self.mode == "exact":
+            psum = jnp.einsum("mug,ugn->mun", x2, w2).astype(jnp.float32)
+        elif self.mode in ("lut", "bitmatmul", "kernel"):
+            if self.mode == "kernel":
+                # blocked-points Pallas kernel (14-43x cheaper emulation,
+                # §Perf cell C); interpret mode off-TPU
+                from repro.kernels.dscim_mvm_blocked import (
+                    dscim_counts_blocked)
+                bk = 16 if g % 16 == 0 else g
+
+                def fn(xw, ww):
+                    return dscim_counts_blocked(
+                        xw.astype(jnp.int8), ww.astype(jnp.int8), self.cfg,
+                        bm=xw.shape[0], bn=ww.shape[1], bk=bk)
+            else:
+                fn = (self.macro.counts_lut if self.mode == "lut"
+                      else self.macro.counts_bitmatmul)
+            mvm_w = jax.vmap(
+                lambda xw, ww: self.macro.mvm_from_counts(xw, ww, fn(xw, ww)),
+                in_axes=(1, 0), out_axes=1)
+            psum = mvm_w(x2, w2)                       # (M,nw,N)
+        elif self.mode == "statistical":
+            psum = jnp.einsum("mug,ugn->mun", x2, w2).astype(jnp.float32)
+            key = key if key is not None else jax.random.PRNGKey(0)
+            psum = self._errmodel.inject(psum, key, g)
+        elif self.mode == "paper_inject":
+            psum = jnp.einsum("mug,ugn->mun", x2, w2).astype(jnp.float32)
+        else:
+            raise ValueError(self.mode)
+        out = jnp.einsum("mun,mu,un->mn", psum,
+                         xq.scale.reshape(-1, nw), wq.scale.reshape(nw, N))
+        if self.mode == "paper_inject":
+            # Sec. V convention: one 128-row-window error magnitude added per
+            # *output* of the MVM result, in float units of the mean window
+            # scale (see EXPERIMENTS.md §Calibration-notes).
+            key = key if key is not None else jax.random.PRNGKey(0)
+            rows = self.macro.cfg.rows
+            s = (jnp.mean(xq.scale.reshape(-1, nw), axis=1, keepdims=True)
+                 * jnp.mean(wq.scale.reshape(nw, N), axis=0, keepdims=True))
+            noise = (self._errmodel.mu1 * rows
+                     + self._errmodel.sig1 * float(np.sqrt(rows))
+                     * jax.random.normal(key, out.shape, out.dtype))
+            out = out + noise * s
+        return out.reshape(*lead, N).astype(jnp.float32)
+
+
+def make_linear(variant: str = "dscim1", length: int = 256,
+                mode: Mode = "lut", calib: str = "paper") -> DSCIMLinear:
+    """Convenience: calibrated DS-CIM1/2 linear ('paper' or 'opt' point sets)."""
+    if variant in ("dscim1", "dscim2"):
+        cfg = calibrated_config(variant, length, calib)
+    else:
+        raise ValueError(variant)
+    return DSCIMLinear(cfg, mode)

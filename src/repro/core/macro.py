@@ -1,0 +1,221 @@
+"""DS-CIM macro model: the paper's MVM estimator with three bit-exact backends.
+
+``psum_hat = scale * C  -  128*Σx  -  128*Σw'``        (Eq. 4)
+
+where ``C`` is the OR-accumulated count over L cycles, ``scale =
+4^k * 2^16 / L``, term (c) ``128*Σx`` is an exact runtime reduction and term
+(d) ``128*Σw'`` is exact/offline.  Backends:
+
+* ``cycle``     — numpy cycle-accurate oracle (ormac.py), O(H*L) per column;
+* ``lut``       — joint-count LUT gather, bit-exact == cycle, fast on CPU;
+* ``bitmatmul`` — {0,1} bitstream-expansion matmul, bit-exact == cycle, the
+                  formulation the Pallas TPU kernel implements.
+
+DS-CIM1 = OR-MAC16 (k=2, 8 OR gates / 128-row column), accuracy-oriented.
+DS-CIM2 = OR-MAC64 (k=3, 2 OR gates / column), efficiency-oriented.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ormac, prng
+from .remap import build_count_lut, fold_jnp, group_size, row_block, shifted_bits
+
+__all__ = ["DSCIMConfig", "DSCIMMacro", "dscim1", "dscim2", "RMSE_NORMS"]
+
+Backend = Literal["cycle", "lut", "bitmatmul"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DSCIMConfig:
+    """Static configuration of one DS-CIM macro variant."""
+    k: int = 2                      # region-remap shift: OR group = 4^k rows
+    length: int = 256               # bitstream length L
+    points: str = "sobol"           # PRNG pair kind (see core.prng)
+    seed_u: int = 0
+    seed_v: int = 0
+    param_u: int | None = None
+    param_v: int | None = None
+    trunc: Literal["floor", "center"] = "floor"   # 'center' = beyond-paper midpoint corr.
+    rows: int = 128                 # physical rows per column (accumulation window)
+    name: str = "dscim"
+
+    @property
+    def group(self) -> int:
+        return group_size(self.k)
+
+    @property
+    def sbits(self) -> int:
+        return shifted_bits(self.k)
+
+    @property
+    def scale(self) -> float:
+        return (4 ** self.k) * 65536.0 / self.length
+
+
+def dscim1(length: int = 256, **kw) -> "DSCIMConfig":
+    """Paper's precise variant: 8x OR-MAC16 per 128-row column."""
+    return DSCIMConfig(k=2, length=length, name=f"DS-CIM1/L{length}", **kw)
+
+
+def dscim2(length: int = 64, **kw) -> "DSCIMConfig":
+    """Paper's efficient variant: 2x OR-MAC64 per 128-row column."""
+    return DSCIMConfig(k=3, length=length, name=f"DS-CIM2/L{length}", **kw)
+
+
+# normalizations for "RMSE %" (the paper does not spell out its convention;
+# calibration in EXPERIMENTS.md selects the one matching Table I)
+RMSE_NORMS = ("signed_fullscale", "unsigned_fullscale")
+
+
+class DSCIMMacro:
+    """Stateful wrapper: point sequence + LUT constants + jit'd MVM paths."""
+
+    def __init__(self, cfg: DSCIMConfig):
+        self.cfg = cfg
+        self.u, self.v = prng.make_points(
+            cfg.points, cfg.length, cfg.seed_u, cfg.seed_v,
+            cfg.param_u, cfg.param_v)
+        self.lut_np = build_count_lut(self.u, self.v, cfg.k)   # (G, S, S) i32
+        # NOTE: only numpy is cached on self — jnp constants are materialized
+        # per trace (caching device arrays created inside a jit trace leaks
+        # tracers into later traces).
+
+    # -- helpers ------------------------------------------------------------
+    def _shift(self, x_i8, w_i8):
+        """int8 -> (a, b) shifted unsigned values in [0, S)."""
+        k = self.cfg.k
+        a = (x_i8.astype(jnp.int32) + 128) >> k
+        b = (w_i8.astype(jnp.int32) + 128) >> k
+        return a, b
+
+    def _corrections(self, x_i8, w_i8, a, b):
+        """Exact terms: -128Σx (runtime SIMD), -128Σw' (offline LUT), and the
+        optional beyond-paper midpoint truncation correction."""
+        cfg = self.cfg
+        x32 = x_i8.astype(jnp.int32)
+        w32 = w_i8.astype(jnp.int32)
+        term_c = 128.0 * jnp.sum(x32, axis=-1, keepdims=True)       # (M,1)
+        term_d = 128.0 * jnp.sum(w32 + 128, axis=0, keepdims=True)  # (1,N)
+        corr = -term_c - term_d
+        if cfg.trunc == "center":
+            delta = (2 ** cfg.k - 1) / 2.0
+            K = x_i8.shape[-1]
+            corr = corr + (2 ** cfg.k) * delta * (
+                jnp.sum(a, axis=-1, keepdims=True)
+                + jnp.sum(b, axis=0, keepdims=True)) + K * delta * delta
+        return corr
+
+    # -- backends -----------------------------------------------------------
+    @functools.partial(jax.jit, static_argnums=0)
+    def counts_lut(self, x_i8, w_i8):
+        """C[m,n] = Σ_h LUT[h mod G, a[m,h], b[h,n]] via a K-scan of gathers."""
+        a, b = self._shift(x_i8, w_i8)
+        K = a.shape[-1]
+        G = self.cfg.group
+        blk = jnp.arange(K, dtype=jnp.int32) % G
+        lut = jnp.asarray(self.lut_np)
+
+        def body(acc, inp):
+            a_h, b_h, g_h = inp            # (M,), (N,), ()
+            tab = lut[g_h]                 # (S, S)
+            acc = acc + tab[a_h][:, b_h]   # (M, N)
+            return acc, None
+
+        M, N = a.shape[0], b.shape[-1]
+        init = jnp.zeros((M, N), jnp.int32)
+        counts, _ = jax.lax.scan(body, init, (a.T, b, blk))
+        return counts
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def counts_bitmatmul(self, x_i8, w_i8):
+        """C = A'W' over {0,1} bitstreams — the MXU/Pallas formulation."""
+        cfg = self.cfg
+        a, b = self._shift(x_i8, w_i8)                  # (M,K), (K,N)
+        K = a.shape[-1]
+        n = 1 << cfg.k
+        blk = jnp.arange(K, dtype=jnp.int32) % cfg.group
+        bc, br = blk % n, blk // n
+        cu, lu = fold_jnp(jnp.asarray(self.u.astype(np.int32)), cfg.k)  # (L,)
+        cv, lv = fold_jnp(jnp.asarray(self.v.astype(np.int32)), cfg.k)
+        abits = ((cu[None, None, :] == bc[None, :, None])
+                 & (lu[None, None, :] < a[:, :, None])).astype(jnp.float32)
+        wbits = ((cv[None, :, None] == br[:, None, None])
+                 & (lv[None, :, None] < b[:, None, :])).astype(jnp.float32)
+        counts = jnp.einsum("mkt,ktn->mn", abits, wbits)
+        return counts.astype(jnp.int32)
+
+    def counts_cycle(self, x_i8, w_i8):
+        """Numpy cycle-accurate oracle (small shapes only)."""
+        x = np.asarray(x_i8); w = np.asarray(w_i8)
+        k = self.cfg.k
+        a = ((x.astype(np.int32) + 128) >> k)
+        b = ((w.astype(np.int32) + 128) >> k)
+        M, K = a.shape
+        N = b.shape[-1]
+        out = np.zeros((M, N), np.int64)
+        for m in range(M):
+            for nn in range(N):
+                c, _ = ormac.dscim_group_count(
+                    a[m], b[:, nn], self.u, self.v, k, assert_disjoint=True)
+                out[m, nn] = c
+        return out
+
+    # -- full MVM estimate ----------------------------------------------------
+    def mvm_from_counts(self, x_i8, w_i8, counts):
+        """psum estimate from a precomputed OR-accumulated count matrix."""
+        a, b = self._shift(jnp.asarray(x_i8), jnp.asarray(w_i8))
+        b_hat = self.cfg.scale * counts.astype(jnp.float32)
+        return b_hat + self._corrections(jnp.asarray(x_i8), jnp.asarray(w_i8), a, b)
+
+    def mvm(self, x_i8, w_i8, backend: Backend = "lut"):
+        """DS-CIM estimate of x_i8 @ w_i8 (int8 signed matmul), float32."""
+        if backend == "lut":
+            counts = self.counts_lut(x_i8, w_i8)
+        elif backend == "bitmatmul":
+            counts = self.counts_bitmatmul(x_i8, w_i8)
+        elif backend == "cycle":
+            counts = jnp.asarray(self.counts_cycle(x_i8, w_i8).astype(np.float32))
+        else:
+            raise ValueError(backend)
+        return self.mvm_from_counts(x_i8, w_i8, counts)
+
+    # -- error statistics ------------------------------------------------------
+    def rmse(self, n_cols: int = 512, n_vec: int = 64, seed: int = 0,
+             dist: str = "uniform"):
+        """Monte-Carlo RMSE of the H-row MAC vs exact int8 matmul.
+
+        Returns dict with absolute RMS error and both %-normalizations
+        (signed fullscale H*128*128, unsigned fullscale H*255*255).
+        """
+        H = self.cfg.rows
+        rng = np.random.default_rng(seed)
+        if dist == "uniform":
+            x = rng.integers(-128, 128, (n_vec, H), dtype=np.int64)
+            w = rng.integers(-128, 128, (H, n_cols), dtype=np.int64)
+        elif dist == "gaussian":
+            x = np.clip(np.round(rng.normal(0, 42, (n_vec, H))), -128, 127).astype(np.int64)
+            w = np.clip(np.round(rng.normal(0, 42, (H, n_cols))), -128, 127).astype(np.int64)
+        elif dist == "sparse":
+            x = rng.integers(-128, 128, (n_vec, H), dtype=np.int64)
+            x *= rng.random((n_vec, H)) < 0.25
+            w = rng.integers(-128, 128, (H, n_cols), dtype=np.int64)
+        else:
+            raise ValueError(dist)
+        exact = x @ w
+        est = np.asarray(self.mvm(jnp.asarray(x, jnp.int32),
+                                  jnp.asarray(w, jnp.int32)))
+        err = est - exact
+        rms = float(np.sqrt(np.mean(err ** 2)))
+        return {
+            "rms_abs": rms,
+            "bias": float(err.mean()),
+            "signed_fullscale": 100.0 * rms / (H * 128 * 128),
+            "unsigned_fullscale": 100.0 * rms / (H * 255 * 255),
+        }

@@ -1,0 +1,114 @@
+"""Cycle-accurate OR-MAC simulation — the hardware oracle.
+
+Two circuits:
+
+* :func:`dscim_group_count` — the paper's remapped OR-MAC (DS-CIM): shared
+  PRNG pair, region-remapped rows, OR per group, per-cycle adder across
+  groups, accumulator over L cycles.  Because regions are disjoint the OR
+  equals the sum; :func:`check_disjoint` asserts that invariant.
+
+* :func:`naive_or_count` — the conventional stochastic OR-MAC of [27]:
+  independent PRNG streams per row, no remapping, so simultaneous 1s
+  *collide* in the OR gate (1s saturation error).  Used for the Fig. 6(c)
+  reproduction and as the paper's baseline.
+
+These run the explicit bitstream × OR × adder pipeline and are O(H·L); the
+LUT/bitmatmul backends in :mod:`repro.core.macro` are the fast bit-exact
+equivalents validated against this module.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from . import prng as prng_lib
+from .remap import fires, fold, group_size, row_block, shifted_bits
+
+__all__ = [
+    "sng_bits", "dscim_bitstreams", "dscim_group_count", "check_disjoint",
+    "naive_or_count",
+]
+
+
+def sng_bits(values: np.ndarray, rand: np.ndarray) -> np.ndarray:
+    """Plain SNG: bit_t = (rand_t < value). values (...,), rand (L,) -> (..., L)."""
+    return (rand[None, :] < values[..., None].astype(np.int32)).astype(np.uint8)
+
+
+def dscim_bitstreams(a_shift: np.ndarray, w_shift: np.ndarray,
+                     u: np.ndarray, v: np.ndarray, k: int):
+    """Per-row remapped A_SC / W_SC bitstreams, shape (H, L).
+
+    a_shift/w_shift: shifted unsigned values in [0, S), one per row (H,).
+    The SNG for row g fires iff the fold of its PRNG coordinate matches the
+    row's block code and the local coordinate is below the data value — the
+    comparator-with-inverted-bits of Fig. 6(d)/(e).
+    """
+    H = a_shift.shape[0]
+    G = group_size(k)
+    g = np.arange(H) % G
+    bc, br = row_block(g, k)
+    cu, lu = fold(u.astype(np.int32), k)
+    cv, lv = fold(v.astype(np.int32), k)
+    a_bits = ((cu[None, :] == bc[:, None]) &
+              (lu[None, :] < a_shift[:, None].astype(np.int32)))
+    w_bits = ((cv[None, :] == br[:, None]) &
+              (lv[None, :] < w_shift[:, None].astype(np.int32)))
+    return a_bits.astype(np.uint8), w_bits.astype(np.uint8)
+
+
+def check_disjoint(p_bits: np.ndarray, k: int) -> bool:
+    """Invariant: within every OR group, at most one product bit fires/cycle."""
+    H, L = p_bits.shape
+    G = group_size(k)
+    per_group = p_bits.reshape(H // G, G, L).sum(axis=1)
+    return bool((per_group <= 1).all())
+
+
+def dscim_group_count(a_shift: np.ndarray, w_shift: np.ndarray,
+                      u: np.ndarray, v: np.ndarray, k: int,
+                      assert_disjoint: bool = False):
+    """Cycle-accurate DS-CIM column: returns (total_count, per_cycle_sums).
+
+    per_cycle_sums[t] = adder output at cycle t (sum of the OR-gate outputs
+    of all H/G groups) — bounded by H/G, e.g. <=8 for DS-CIM1, <=2 for
+    DS-CIM2, matching the paper's addition bitwidths.
+    """
+    a_bits, w_bits = dscim_bitstreams(a_shift, w_shift, u, v, k)
+    p_bits = a_bits & w_bits
+    if assert_disjoint and not check_disjoint(p_bits, k):
+        raise AssertionError("remapped OR groups are not collision-free")
+    H, L = p_bits.shape
+    G = group_size(k)
+    or_out = p_bits.reshape(H // G, G, L).max(axis=1)   # the OR gates
+    per_cycle = or_out.sum(axis=0)                      # the per-cycle adder
+    return int(per_cycle.sum()), per_cycle              # the accumulator
+
+
+def naive_or_count(a_u8: np.ndarray, w_u8: np.ndarray, L: int, group: int,
+                   seed: int = 0, kind: str = "lfsr"):
+    """[27]-style conventional OR-MAC: independent PRNGs/row, no remapping.
+
+    a_u8/w_u8: *unshifted* unsigned values in [0, 256).  Each row compares
+    its own PRNG pair; the OR gate saturates when several product bits are 1
+    in the same cycle.  Returns (count, ideal_sum_of_product_bits) so callers
+    can quantify the saturation loss.
+    """
+    H = a_u8.shape[0]
+    rng = np.random.default_rng(seed)
+    counts_or = 0
+    counts_sum = 0
+    for g0 in range(0, H, group):
+        rows = slice(g0, min(g0 + group, H))
+        n = a_u8[rows].shape[0]
+        # independent hardware PRNG per row (distinct seeds/taps)
+        p = np.empty((n, L), np.uint8)
+        for i in range(n):
+            su, sv = rng.integers(1, 255, 2)
+            uu = prng_lib.make_points(kind, L, int(su), int(sv),
+                                      param_u=i, param_v=i + 1)
+            a_b = sng_bits(a_u8[rows][i:i + 1], uu[0])[0]
+            w_b = sng_bits(w_u8[rows][i:i + 1], uu[1])[0]
+            p[i] = a_b & w_b
+        counts_or += int(p.max(axis=0).sum())
+        counts_sum += int(p.sum())
+    return counts_or, counts_sum

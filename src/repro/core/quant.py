@@ -1,0 +1,70 @@
+"""Quantization substrate: INT8 (per-channel / per-group) and FP8(E4M3),
+including the paper's FP8->INT8 group-128 alignment recipe ([30], used for
+the LLaMA-7B experiment in Table II).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "quantize_int8", "dequantize_int8", "fp8_cast", "fp8_to_int8_aligned",
+    "QuantizedTensor",
+]
+
+
+class QuantizedTensor(tuple):
+    """(q: int8 values, scale: f32 per-channel/group scales, axis meta)."""
+    __slots__ = ()
+
+    def __new__(cls, q, scale, axis):
+        return super().__new__(cls, (q, scale, axis))
+
+    @property
+    def q(self):
+        return self[0]
+
+    @property
+    def scale(self):
+        return self[1]
+
+    @property
+    def axis(self):
+        return self[2]
+
+
+def quantize_int8(x, axis=-1, eps: float = 1e-8) -> QuantizedTensor:
+    """Symmetric per-channel int8: q = round(x / s), s = max|x| / 127."""
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, eps) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return QuantizedTensor(q, scale.astype(jnp.float32), axis)
+
+
+def dequantize_int8(qt: QuantizedTensor):
+    return qt.q.astype(jnp.float32) * qt.scale
+
+
+def fp8_cast(x):
+    """Round-trip through float8_e4m3fn (the paper's LLM-FP4/FP8 recipe [29])."""
+    return x.astype(jnp.float8_e4m3fn).astype(jnp.float32)
+
+
+def fp8_to_int8_aligned(x, group: int = 128):
+    """Paper Sec. V: 'FP8 activations and weights were aligned to INT8 with a
+    granularity of 128 as inputs for DS-CIM' (method of RedCIM [30]).
+
+    The FP8 values within each contiguous group of ``group`` along the last
+    axis share one power-capped scale; each group is then re-quantized to
+    int8 so the DS-CIM macro sees pure int8 operands.  Returns
+    (int8 values, per-group scales); error = fp8 cast error + alignment.
+    """
+    xf = fp8_cast(x)
+    shp = xf.shape
+    pad = (-shp[-1]) % group
+    if pad:
+        xf = jnp.pad(xf, [(0, 0)] * (xf.ndim - 1) + [(0, pad)])
+    g = xf.reshape(*xf.shape[:-1], -1, group)
+    amax = jnp.max(jnp.abs(g), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32), pad

@@ -1,0 +1,119 @@
+"""Sample-region remapping (the paper's core trick, Sec. IV-B).
+
+Rows sharing an OR gate right-shift their (unsigned) data by ``k`` bits and
+are remapped into the 4^k disjoint blocks of a 2^k x 2^k partition of the 2D
+sampling map.  In hardware the remap is "invert data bits + flip comparator
+direction"; mathematically that is a *reflected binary fold* of each
+coordinate: at every level the upper half of the interval is mirrored onto
+the lower half, and the choice bit becomes one block-address bit.  Mirroring
+(rather than plain slicing) makes adjacent regions share anchor corners,
+which anti-correlates adjacent rows' sampling errors.
+
+Everything here is pure NumPy (host-side, used to build LUT constants) plus
+a jnp twin for in-graph use.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+__all__ = [
+    "fold", "fold_jnp", "row_block", "fires", "build_count_lut",
+    "group_size", "shifted_bits",
+]
+
+
+def group_size(k: int) -> int:
+    """Rows per OR gate: OR4 (k=1), OR16 (k=2), OR64 (k=3)."""
+    return 4 ** k
+
+
+def shifted_bits(k: int) -> int:
+    """Post-shift data width S = 2^(8-k); shifted values live in [0, S)."""
+    return 256 >> k
+
+
+def fold(u: np.ndarray, k: int):
+    """Reflected fold of 8-bit coords -> (block_code in [0,2^k), local in [0,S)).
+
+    Level i: if the coordinate is in the upper half of the remaining
+    interval, mirror it (x -> size-1-x) and set block bit i.  This is the
+    vectorized equivalent of the paper's per-row bit inversion + comparator
+    direction flip.
+    """
+    cur = u.astype(np.int32)
+    code = np.zeros_like(cur)
+    size = 256
+    for _ in range(k):
+        half = size >> 1
+        hi = cur >= half
+        cur = np.where(hi, size - 1 - cur, cur)
+        code = (code << 1) | hi.astype(np.int32)
+        size = half
+    return code, cur
+
+
+def fold_jnp(u, k: int):
+    """jnp twin of :func:`fold` (used by the bitmatmul backend & kernels)."""
+    cur = u.astype(jnp.int32)
+    code = jnp.zeros_like(cur)
+    size = 256
+    for _ in range(k):
+        half = size >> 1
+        hi = cur >= half
+        cur = jnp.where(hi, size - 1 - cur, cur)
+        code = (code << 1) | hi.astype(jnp.int32)
+        size = half
+    return code, cur
+
+
+def row_block(row_in_group, k: int):
+    """Fixed wiring row -> (u-block code, v-block code).
+
+    Row g of a 4^k group owns block (g mod 2^k, g div 2^k).
+    """
+    n = 1 << k
+    return row_in_group % n, row_in_group // n
+
+
+def fires(u, v, a, w, row_in_group, k: int, xp=np):
+    """Bit: does sampling point (u,v) land in this row's remapped region?
+
+    a, w are the *shifted* unsigned values in [0, S).  Broadcasts over any
+    leading shapes.
+    """
+    fold_fn = fold if xp is np else fold_jnp
+    cu, lu = fold_fn(u, k)
+    cv, lv = fold_fn(v, k)
+    bc, br = row_block(row_in_group, k)
+    return (cu == bc) & (cv == br) & (lu < a) & (lv < w)
+
+
+def build_count_lut(points_u: np.ndarray, points_v: np.ndarray, k: int) -> np.ndarray:
+    """Joint-count LUT: LUT[g, a, w] = #{t : point_t in region_g(a, w)}.
+
+    Shape (4^k, S, S) int32 with S = 2^(8-k).  Bit-exact against the
+    cycle-accurate simulation by construction: the count for rectangle side
+    lengths (a, w) is the 2D cumulative histogram of the folded in-block
+    points.  LUT[g, a, w] counts points with local coords (lu < a, lv < w),
+    so index 0 is zero and index S-1 covers [0, S-1) (the max shifted value
+    S-1 leaves the last row/col of each block unreachable -- faithful to the
+    hardware's truncation).
+    """
+    S = shifted_bits(k)
+    G = group_size(k)
+    cu, lu = fold(points_u.astype(np.int32), k)
+    cv, lv = fold(points_v.astype(np.int32), k)
+    lut = np.zeros((G, S, S), np.int32)
+    n = 1 << k
+    for g in range(G):
+        bc, br = g % n, g // n
+        m = (cu == bc) & (cv == br)
+        if not m.any():
+            continue
+        hist, _, _ = np.histogram2d(
+            lu[m], lv[m], bins=(S, S), range=((0, S), (0, S)))
+        # cumulative, exclusive on both axes: count of (lu < a, lv < w)
+        cs = np.cumsum(np.cumsum(hist, axis=0), axis=1)
+        lut[g, 1:, 1:] = cs[:-1, :-1]
+    return lut

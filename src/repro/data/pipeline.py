@@ -1,0 +1,61 @@
+"""Host data pipeline: deterministic sharding + background prefetch.
+
+Production posture: each host computes its own shard of the global batch
+from the (step, host) key — no data service needed, restarts are exactly
+resumable from the step counter alone (the checkpoint stores it).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+
+import numpy as np
+
+from .synthetic import SyntheticLM
+
+__all__ = ["DataPipeline"]
+
+
+class DataPipeline:
+    def __init__(self, source: SyntheticLM, global_batch: int, seq: int,
+                 host: int = 0, n_hosts: int = 1, prefetch: int = 2,
+                 start_step: int = 0):
+        assert global_batch % n_hosts == 0
+        self.source = source
+        self.local_batch = global_batch // n_hosts
+        self.seq = seq
+        self.host, self.n_hosts = host, n_hosts
+        self._step = start_step
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        step = self._step
+        while not self._stop.is_set():
+            b = self.source.batch(self.local_batch, self.seq, step=step,
+                                  host=self.host, n_hosts=self.n_hosts)
+            b["step"] = step
+            while not self._stop.is_set():
+                try:
+                    self._q.put(b, timeout=0.2)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def __next__(self) -> dict:
+        return self._q.get()
+
+    def __iter__(self):
+        return self
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2)

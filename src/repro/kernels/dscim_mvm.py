@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: DS-CIM OR-MAC MVM via bitstream-expansion MXU matmul.
+
+TPU adaptation of the macro (DESIGN.md §3): the OR fabric's collision-free
+accumulation equals a sum of {0,1} products, so the whole stochastic MVM is
+
+    C[m,n] = Σ_{h,t} abit[m,h,t] * wbit[h,t,n]
+
+— a matmul whose contraction dim is K·L.  The kernel generates the bit
+tiles *in VMEM* each grid step (SNG = vector compare against the folded
+PRNG coordinates, which live in VMEM for the whole kernel) and feeds the
+MXU; bitstreams never exist in HBM, so HBM traffic is the same as a plain
+int8 matmul while the MXU does the L-fold expanded work (the TPU twin of
+the macro's CMR=64 replication of cheap OR fabric).
+
+Tiling: grid (M/bm, N/bn, K/bk); inner python loop over L in bl chunks.
+VMEM per step ~ bm*bk*bl + bk*bl*bn floats (default 128·8·128 ≈ 0.5 MB
+each) + the (bm,bn) f32 accumulator.  All dims padded to tile multiples by
+``ops.dscim_mvm``.  Counts ≤ K·L/4^k << 2^24 so f32 MXU accumulation is
+exact.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["dscim_counts_pallas"]
+
+
+def _kernel(x_ref, w_ref, cu_ref, lu_ref, cv_ref, lv_ref, out_ref, *,
+            k: int, bl: int, length: int, bk: int):
+    """One (bm, bn) output tile; accumulates over the K grid axis."""
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...].astype(jnp.int32)          # (bm, bk) signed int8 values
+    w = w_ref[...].astype(jnp.int32)          # (bk, bn)
+    a = (x + 128) >> k                        # shifted unsigned, [0, S)
+    b = (w + 128) >> k
+
+    # row -> block wiring: global row index mod 4^k, split into (bc, br)
+    n = 1 << k
+    rows = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bk,), 0)
+    blk = rows % (4 ** k)
+    bc = blk % n                              # u-axis block code per row
+    br = blk // n                             # v-axis block code per row
+
+    bm = x.shape[0]
+    bn = w.shape[1]
+    acc = jnp.zeros((bm, bn), jnp.float32)
+    for t0 in range(0, length, bl):
+        cu = cu_ref[t0:t0 + bl]               # folded PRNG coords (VMEM)
+        lu = lu_ref[t0:t0 + bl]
+        cv = cv_ref[t0:t0 + bl]
+        lv = lv_ref[t0:t0 + bl]
+        # SNG: activation bits (bm, bk, bl) and weight bits (bk, bl, bn)
+        abit = ((cu[None, None, :] == bc[None, :, None])
+                & (lu[None, None, :] < a[:, :, None])).astype(jnp.float32)
+        wbit = ((cv[None, :, None] == br[:, None, None])
+                & (lv[None, :, None] < b[:, None, :])).astype(jnp.float32)
+        acc += jax.lax.dot_general(
+            abit.reshape(bm, bk * bl), wbit.reshape(bk * bl, bn),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    out_ref[...] += acc
+
+
+@functools.partial(jax.jit, static_argnames=("k", "length", "bm", "bn",
+                                             "bk", "bl", "interpret"))
+def dscim_counts_pallas(x_i8, w_i8, cu, lu, cv, lv, *, k: int, length: int,
+                        bm: int = 128, bn: int = 128, bk: int = 8,
+                        bl: int = 128, interpret: bool = True):
+    """OR-accumulated count matrix C (M,N) f32; inputs must be tile-aligned."""
+    M, K = x_i8.shape
+    N = w_i8.shape[1]
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0 and length % bl == 0, (
+        f"pad to tiles first: {(M, K, N)} vs {(bm, bk, bn)}")
+    grid = (M // bm, N // bn, K // bk)
+    kernel = functools.partial(_kernel, k=k, bl=bl, length=length, bk=bk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),   # x tile
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),   # w tile
+            pl.BlockSpec((length,), lambda i, j, kk: (0,)),     # cu (VMEM)
+            pl.BlockSpec((length,), lambda i, j, kk: (0,)),     # lu
+            pl.BlockSpec((length,), lambda i, j, kk: (0,)),     # cv
+            pl.BlockSpec((length,), lambda i, j, kk: (0,)),     # lv
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(x_i8, w_i8, cu, lu, cv, lv)

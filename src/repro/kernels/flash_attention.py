@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: causal flash attention (§Perf cell B, iter-4 target).
+
+The pure-JAX chunked attention in layers/attention.py materializes its
+score chunks in HBM (the dominant byte term of every *_32k prefill cell);
+this kernel keeps the online-softmax state (acc, m, l) in VMEM scratch
+across the kv-block grid axis, so HBM traffic is exactly q+k+v+o.
+
+Grid: (batch*kv_heads*n_rep, nq, nk) with the kv axis innermost
+(sequential); causal upper-triangle blocks are skipped with pl.when — on
+TPU that elides the MXU work entirely (the static-pair-scan trick of the
+JAX path, expressed natively).
+
+Validated in interpret mode against ref.flash_attention_ref; wall-clock
+benefits require real TPU hardware (documented in EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["flash_attention_pallas"]
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, bq: int, bk: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    @pl.when(kj <= qi)          # causal: skip strictly-future kv blocks
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)          # (bq, d)
+        k = k_ref[0].astype(jnp.float32)          # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk", "interpret"))
+def flash_attention_pallas(q, k, v, *, bq: int = 256, bk: int = 256,
+                           interpret: bool = True):
+    """Causal MHA. q/k/v (BH, S, d) — callers fold batch*heads (GQA callers
+    repeat-index kv per q-head group before folding).  Returns (BH, S, d).
+    """
+    BH, S, d = q.shape
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    scale = d ** -0.5
+    kernel = functools.partial(_kernel, scale=scale, bq=bq, bk=bk)
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+        scratch = [pltpu.VMEM((bq, d), jnp.float32),
+                   pltpu.VMEM((bq,), jnp.float32),
+                   pltpu.VMEM((bq,), jnp.float32)]
+    except ImportError:  # pragma: no cover
+        scratch = [pl.VMEM((bq, d), jnp.float32)]
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, S // bq, S // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, d), q.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(q, k, v)

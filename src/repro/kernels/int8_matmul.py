@@ -1,0 +1,52 @@
+"""Pallas TPU kernel: exact tiled int8 matmul -> int32 (the DCIM baseline).
+
+The adder-tree DCIM macro the paper compares against is, on TPU, just an
+int8 MXU matmul; this kernel is the baseline for the DS-CIM kernel benches
+and the exact backend for DSCIMLinear at production shapes.
+
+Tiling: grid (M/bm, N/bn, K/bk); int8 tiles are dotted with
+preferred_element_type=int32 (v5e MXU int8 path), accumulated into the
+(bm, bn) int32 output tile across the K grid axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["int8_matmul_pallas"]
+
+
+def _kernel(x_ref, w_ref, out_ref):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def int8_matmul_pallas(x_i8, w_i8, *, bm: int = 128, bn: int = 128,
+                       bk: int = 256, interpret: bool = True):
+    """x (M,K) int8 @ w (K,N) int8 -> (M,N) int32; dims must be tile-aligned."""
+    M, K = x_i8.shape
+    N = w_i8.shape[1]
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (
+        f"pad to tiles first: {(M, K, N)} vs {(bm, bk, bn)}")
+    return pl.pallas_call(
+        _kernel,
+        grid=(M // bm, N // bn, K // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        interpret=interpret,
+    )(x_i8, w_i8)

@@ -1,0 +1,108 @@
+"""jit'd public wrappers for the Pallas kernels: padding, precomputed fold
+constants, fused sign-correction terms, and CPU(interpret)/TPU dispatch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.macro import DSCIMConfig
+from repro.core import prng as prng_lib
+from repro.core.remap import fold
+
+from .dscim_mvm import dscim_counts_pallas
+from .int8_matmul import int8_matmul_pallas
+
+__all__ = ["dscim_mvm", "int8_matmul", "fold_constants", "ON_TPU"]
+
+ON_TPU = jax.default_backend() == "tpu"
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+@functools.lru_cache(maxsize=32)
+def fold_constants(cfg: DSCIMConfig):
+    """Precompute folded PRNG coordinates (cu, lu, cv, lv) as int32 arrays."""
+    u, v = prng_lib.make_points(cfg.points, cfg.length, cfg.seed_u,
+                                cfg.seed_v, cfg.param_u, cfg.param_v)
+    cu, lu = fold(u.astype(np.int32), cfg.k)
+    cv, lv = fold(v.astype(np.int32), cfg.k)
+    return tuple(jnp.asarray(t, jnp.int32) for t in (cu, lu, cv, lv))
+
+
+def dscim_mvm(x_i8, w_i8, cfg: DSCIMConfig, *, bm: int = 128, bn: int = 128,
+              bk: int = 8, bl: int | None = None,
+              interpret: bool | None = None):
+    """Full DS-CIM psum estimate via the Pallas kernel (float32 (M,N)).
+
+    Pads (M, K, N) to tile multiples; the int8 zero-padding contributes
+    x'=w'=128 -> shifted a=b=S/2 rectangles whose counts are *not* zero, so
+    padding correctness is handled by computing corrections on the padded
+    operands too: padded rows/cols estimate 0*0 products (x=w=0 exactly),
+    and the estimator is exact-in-expectation for them; the deterministic
+    LUT residual of the pad rows is subtracted via a precomputed pad count.
+    Simpler and exact: we pad K with x=-128 (x'=0) so pad rows never fire.
+    """
+    interpret = (not ON_TPU) if interpret is None else interpret
+    bl = bl or min(cfg.length, 128)
+    M, K = x_i8.shape
+    N = w_i8.shape[1]
+    # K padding with x' = 0 (x = -128): abit always 0 -> zero contribution.
+    padk = (-K) % bk
+    if padk:
+        x_i8 = jnp.pad(x_i8, ((0, 0), (0, padk)), constant_values=-128)
+        w_i8 = jnp.pad(w_i8, ((0, padk), (0, 0)), constant_values=0)
+    x_i8, padm = _pad_to(x_i8, bm, 0)
+    w_i8, padn = _pad_to(w_i8, bn, 1)
+    cu, lu, cv, lv = fold_constants(cfg)
+    counts = dscim_counts_pallas(
+        x_i8.astype(jnp.int8), w_i8.astype(jnp.int8), cu, lu, cv, lv,
+        k=cfg.k, length=cfg.length, bm=bm, bn=bn, bk=bk, bl=bl,
+        interpret=interpret)
+    x32 = x_i8.astype(jnp.int32)
+    w32 = w_i8.astype(jnp.int32)
+    out = cfg.scale * counts \
+        - 128.0 * jnp.sum(x32, axis=-1, keepdims=True) \
+        - 128.0 * jnp.sum(w32 + 128, axis=0, keepdims=True)
+    # remove the pad-K contribution of term (c)/(d): x=-128 rows add
+    # -128*(-128)*1... term c includes pad sum; term d pad w'=128 each.
+    if padk:
+        out = out + 128.0 * (-128.0) * padk  # undo term-c pad contribution
+        out = out + 128.0 * 128.0 * padk     # undo term-d pad contribution
+    if cfg.trunc == "center":
+        a = (x32 + 128) >> cfg.k
+        b = (w32 + 128) >> cfg.k
+        delta = (2 ** cfg.k - 1) / 2.0
+        # pad rows: a=0 contributes 0 to Σa; b=S/2 per pad row in Σb — but
+        # those rows never fire and their true product is 0, so exclude.
+        sum_a = jnp.sum(a, axis=-1, keepdims=True)
+        sum_b = jnp.sum(b, axis=0, keepdims=True)
+        if padk:
+            sum_b = sum_b - padk * (128 >> cfg.k)
+        out = out + (2 ** cfg.k) * delta * (sum_a + sum_b) + K * delta * delta
+    return out[:M, :N]
+
+
+def int8_matmul(x_i8, w_i8, *, bm: int = 128, bn: int = 128, bk: int = 256,
+                interpret: bool | None = None):
+    """Exact int8 matmul -> int32 via the Pallas baseline kernel."""
+    interpret = (not ON_TPU) if interpret is None else interpret
+    M, K = x_i8.shape
+    N = w_i8.shape[1]
+    x_i8, padm = _pad_to(x_i8.astype(jnp.int8), bm, 0)
+    x_i8, _ = _pad_to(x_i8, bk, 1)
+    w_i8, padk = _pad_to(w_i8.astype(jnp.int8), bk, 0)
+    w_i8, padn = _pad_to(w_i8, bn, 1)
+    out = int8_matmul_pallas(x_i8, w_i8, bm=bm, bn=bn, bk=bk,
+                             interpret=interpret)
+    return out[:M, :N]

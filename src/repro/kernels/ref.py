@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for the Pallas kernels (the ``ref.py`` contract).
+
+These are *independent* implementations (no Pallas, no pl.*) used by the
+kernel tests' ``assert_allclose`` sweeps.  ``dscim_counts_ref`` is itself
+validated against the cycle-accurate hardware oracle in
+``repro.core.ormac`` by the core test suite, closing the chain:
+
+    Pallas kernel (interpret) == ref.py == LUT == cycle-accurate OR-MAC.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.remap import fold_jnp
+
+__all__ = ["dscim_counts_ref", "dscim_mvm_ref", "int8_matmul_ref"]
+
+
+def dscim_counts_ref(x_i8, w_i8, u, v, k: int):
+    """OR-accumulated counts C[m,n] for the remapped DS-CIM column.
+
+    x_i8 (M,K) int, w_i8 (K,N) int, u/v (L,) int32 point coords.
+    """
+    kk = k
+    a = (x_i8.astype(jnp.int32) + 128) >> kk            # (M,K) in [0,S)
+    b = (w_i8.astype(jnp.int32) + 128) >> kk            # (K,N)
+    K = a.shape[-1]
+    n = 1 << kk
+    blk = jnp.arange(K, dtype=jnp.int32) % (4 ** kk)
+    bc, br = blk % n, blk // n
+    cu, lu = fold_jnp(u, kk)
+    cv, lv = fold_jnp(v, kk)
+    abits = ((cu[None, None, :] == bc[None, :, None])
+             & (lu[None, None, :] < a[:, :, None])).astype(jnp.float32)
+    wbits = ((cv[None, :, None] == br[:, None, None])
+             & (lv[None, :, None] < b[:, None, :])).astype(jnp.float32)
+    return jnp.einsum("mkt,ktn->mn", abits, wbits).astype(jnp.int32)
+
+
+def dscim_mvm_ref(x_i8, w_i8, u, v, k: int, length: int,
+                  trunc: str = "floor"):
+    """Full DS-CIM psum estimate (Eq. 4) from the counts oracle."""
+    counts = dscim_counts_ref(x_i8, w_i8, u, v, k)
+    scale = (4 ** k) * 65536.0 / length
+    x32 = x_i8.astype(jnp.int32)
+    w32 = w_i8.astype(jnp.int32)
+    out = scale * counts.astype(jnp.float32) \
+        - 128.0 * jnp.sum(x32, axis=-1, keepdims=True) \
+        - 128.0 * jnp.sum(w32 + 128, axis=0, keepdims=True)
+    if trunc == "center":
+        a = (x32 + 128) >> k
+        b = (w32 + 128) >> k
+        delta = (2 ** k - 1) / 2.0
+        out = out + (2 ** k) * delta * (
+            jnp.sum(a, axis=-1, keepdims=True)
+            + jnp.sum(b, axis=0, keepdims=True)) \
+            + x_i8.shape[-1] * delta * delta
+    return out
+
+
+def int8_matmul_ref(x_i8, w_i8):
+    """Exact int8 matmul -> int32 (the DCIM adder-tree baseline)."""
+    return jnp.matmul(x_i8.astype(jnp.int32), w_i8.astype(jnp.int32),
+                      preferred_element_type=jnp.int32)
+
+
+def flash_attention_ref(q, k, v):
+    """Plain causal softmax attention oracle. q/k/v (BH, S, d)."""
+    S = q.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * q.shape[-1] ** -0.5
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

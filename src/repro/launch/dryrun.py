@@ -1,0 +1,275 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# Placeholder CPU devices let jax.make_mesh build the production 16x16 /
+# 2x16x16 meshes; .lower().compile() is AOT — nothing is allocated.
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x input shape) cell and both production meshes,
+lower + compile the real step function (train_step with optimizer update /
+prefill_step / serve decode_step) under the production shardings, then
+record:
+
+* memory_analysis()   — per-device argument/output/temp bytes (fits check)
+* cost_analysis()     — HLO FLOPs + bytes accessed
+* collective bytes    — parsed from the optimized HLO text, per collective op
+* roofline terms      — compute / memory / collective seconds (v5e constants)
+
+Results are cached as JSON under experiments/dryrun/ and consumed by
+benchmarks/roofline.py + EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multipod/--singlepod]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_arch
+from repro.launch.hlo_cost import analyze_hlo
+from repro.launch.mesh import make_parallel_ctx, make_production_mesh
+from repro.launch.sharding import (batch_specs, cache_partition,
+                                   opt_state_specs, param_specs,
+                                   to_shardings)
+from repro.launch.steps import (make_decode_step, make_prefill_step,
+                                make_train_step)
+from repro.models import get_model
+from repro.optim.adamw import AdamW
+
+# ---- v5e roofline constants -------------------------------------------------
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+\S+\s+(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\((?P<args>.*?)\)",
+)
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|"
+                       r"s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op, keyed by op kind."""
+    out: dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        kind = m.group(1)
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(m.group("args")):
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[kind] = out.get(kind, 0) + nbytes
+    out["total"] = sum(out.values())
+    return out
+
+
+def _flops_bytes(compiled) -> tuple[float, float]:
+    ca = compiled.cost_analysis() or {}
+    flops = float(ca.get("flops", 0.0))
+    # CPU backend reports 'bytes accessed' (+ per-space breakdowns)
+    byts = float(ca.get("bytes accessed", 0.0))
+    return flops, byts
+
+
+def model_flops(cfg, shape, kind: str) -> float:
+    """Reference useful FLOPs: 6*N_active*D train, 2*N_active*D inference."""
+    n = cfg.active_param_count()
+    if kind == "train":
+        return 6.0 * n * shape.batch * shape.seq
+    if kind == "prefill":
+        return 2.0 * n * shape.batch * shape.seq
+    return 2.0 * n * shape.batch  # decode: one token per sequence
+
+
+def build_cell(cfg, shape_name: str, multi_pod: bool,
+               sp: bool | None = None):
+    """Lower + compile one cell. Returns the record dict."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if sp is None:
+        sp = os.environ.get("REPRO_SP", "0") == "1"
+    par = make_parallel_ctx(mesh, sp=sp)
+    model = get_model(cfg)
+    kind, batch_struct = cfg.input_specs(shape_name)
+    shape = cfg.shape(shape_name)
+    key_struct = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    params_struct = jax.eval_shape(
+        lambda k: model.init_params(cfg, k), key_struct)
+    pspecs = param_specs(cfg, par, params_struct)
+    pshard = to_shardings(mesh, pspecs)
+    bshard = to_shardings(mesh, batch_specs(cfg, par, batch_struct))
+
+    t0 = time.time()
+    if kind == "train":
+        opt = AdamW(lr=3e-4)
+        opt_struct = jax.eval_shape(opt.init, params_struct)
+        oshard = to_shardings(mesh, opt_state_specs(pspecs))
+        step = make_train_step(cfg, par, opt)
+        jitted = jax.jit(step,
+                         in_shardings=(pshard, oshard, bshard),
+                         out_shardings=(pshard, oshard, None),
+                         donate_argnums=(0, 1))
+        lowered = jitted.lower(params_struct, opt_struct, batch_struct)
+    elif kind == "prefill":
+        step = make_prefill_step(cfg, par)
+        jitted = jax.jit(step, in_shardings=(pshard, bshard))
+        lowered = jitted.lower(params_struct, batch_struct)
+    elif kind == "decode":
+        cache_struct = model.cache_specs(cfg, shape.batch, shape.seq)
+        cshard = to_shardings(mesh, cache_partition(cfg, par, cache_struct))
+        step = make_decode_step(cfg, par)
+        jitted = jax.jit(step, in_shardings=(pshard, bshard, cshard),
+                         donate_argnums=(2,))
+        lowered = jitted.lower(params_struct, batch_struct, cache_struct)
+    else:
+        raise ValueError(kind)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    mem = {}
+    if ma is not None:
+        mem = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+        }
+        mem["total_per_device"] = (mem["argument_bytes"]
+                                   + mem["output_bytes"]
+                                   + mem["temp_bytes"]
+                                   - mem["alias_bytes"])
+    hlo = compiled.as_text()
+    cost = analyze_hlo(hlo)                # loop-corrected, per-device
+    xla_ca = compiled.cost_analysis() or {}
+    chips = mesh.devices.size
+
+    # roofline terms (seconds); analyzer values are per-device payloads, so
+    # the spec formula coll_global/(chips*link_bw) == coll_per_device/link_bw
+    t_comp = cost.flops / PEAK_FLOPS
+    t_mem = cost.bytes / HBM_BW
+    t_coll = cost.coll_bytes / LINK_BW
+    mf = model_flops(cfg, shape, kind)
+    record = {
+        "arch": cfg.name, "shape": shape_name, "kind": kind,
+        "mesh": "pod2x16x16" if multi_pod else "pod16x16", "chips": chips,
+        "ok": True,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": mem,
+        "hlo_flops_per_device": cost.flops,
+        "hlo_bytes_per_device": cost.bytes,
+        "collective_bytes_per_device": dict(cost.coll_by_kind,
+                                            total=cost.coll_bytes),
+        "collective_ops": cost.coll_ops,
+        "dot_ops": cost.dots,
+        "bytes_by_kind_top": dict(sorted(cost.bytes_by_kind.items(),
+                                         key=lambda kv: -kv[1])[:8]),
+        "xla_cost_analysis": {
+            "flops_loop_body_once": float(xla_ca.get("flops", 0.0)),
+            "bytes_loop_body_once": float(xla_ca.get("bytes accessed", 0.0)),
+        },
+        "roofline": {
+            "t_compute_s": t_comp, "t_memory_s": t_mem,
+            "t_collective_s": t_coll,
+            "dominant": max(
+                [("compute", t_comp), ("memory", t_mem),
+                 ("collective", t_coll)], key=lambda kv: kv[1])[0],
+        },
+        "model_flops_global": mf,
+        "model_flops_per_device": mf / chips,
+        "useful_flops_ratio": (mf / chips) / cost.flops if cost.flops else 0.0,
+    }
+    return record
+
+
+def cells(arch_filter=None, shape_filter=None):
+    for name, cfg in ARCHS.items():
+        if arch_filter and name != arch_filter:
+            continue
+        for s in cfg.shapes:
+            if shape_filter and s.name != shape_filter:
+                continue
+            yield cfg, s
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod", action="store_true", default=None,
+                    help="only the 2x16x16 mesh")
+    ap.add_argument("--singlepod", action="store_true", default=None,
+                    help="only the 16x16 mesh")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = [False, True]
+    if args.multipod and not args.singlepod:
+        meshes = [True]
+    if args.singlepod and not args.multipod:
+        meshes = [False]
+
+    n_ok = n_skip = n_fail = 0
+    for cfg, shape in cells(args.arch, args.shape):
+        for mp in meshes:
+            tag = f"{cfg.name}_{shape.name}_{'mp' if mp else 'sp'}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path) and not args.force:
+                n_skip += 1
+                continue
+            if not cfg.runnable(shape.name):
+                rec = {"arch": cfg.name, "shape": shape.name,
+                       "mesh": "pod2x16x16" if mp else "pod16x16",
+                       "ok": False, "skipped": True,
+                       "reason": "full-attention arch; long-context decode "
+                                 "requires sub-quadratic family (DESIGN.md)"}
+                json.dump(rec, open(path, "w"), indent=1)
+                n_skip += 1
+                continue
+            print(f"[dryrun] {tag} ...", flush=True)
+            t0 = time.time()
+            try:
+                rec = build_cell(cfg, shape.name, mp)
+                n_ok += 1
+            except Exception as e:  # noqa: BLE001 — record the failure
+                rec = {"arch": cfg.name, "shape": shape.name,
+                       "mesh": "pod2x16x16" if mp else "pod16x16",
+                       "ok": False, "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-4000:]}
+                n_fail += 1
+            json.dump(rec, open(path, "w"), indent=1)
+            status = "ok" if rec.get("ok") else "FAIL"
+            print(f"[dryrun] {tag}: {status} ({time.time()-t0:.1f}s)",
+                  flush=True)
+            if rec.get("ok"):
+                r = rec["roofline"]
+                print(f"    mem/dev={rec['memory'].get('total_per_device',0)/2**30:.2f}GiB "
+                      f"comp={r['t_compute_s']:.2e}s mem={r['t_memory_s']:.2e}s "
+                      f"coll={r['t_collective_s']:.2e}s dom={r['dominant']}",
+                      flush=True)
+    print(f"[dryrun] done: ok={n_ok} skip={n_skip} fail={n_fail}")
+
+
+if __name__ == "__main__":
+    main()

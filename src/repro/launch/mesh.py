@@ -1,0 +1,37 @@
+"""Production mesh construction (function, not module constant — importing
+this module never touches jax device state).
+
+Single pod: (data=16, model=16) = 256 v5e chips.
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the 'pod' axis is
+data-parallel (slow cross-pod links carry only gradient all-reduce, which
+optim/compression.py can quantize).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.parallel import ParallelCtx
+
+__all__ = ["make_production_mesh", "make_parallel_ctx", "make_debug_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(data: int = 2, model: int = 2, pod: int = 0):
+    """Small mesh for CI-grade machinery tests (8 fake devices)."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def make_parallel_ctx(mesh, sp: bool = False) -> ParallelCtx:
+    dp_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    return ParallelCtx(mesh=mesh, dp_axes=dp_axes, tp_axis="model", sp=sp)

@@ -1,0 +1,134 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Per-cell HLO profiler — the tool behind the §Perf hillclimbs.
+
+Reports, for one (arch × shape × mesh) cell:
+  * the roofline terms and their deltas vs a saved baseline JSON,
+  * top-K largest single buffers (what dominates memory_analysis),
+  * per-while-loop attribution (body cost × trip count),
+  * per-op-kind byte breakdown and per-collective-kind payloads.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.profile --arch rwkv6-7b \
+      --shape train_4k [--baseline experiments/perf/cellA_baseline.json]
+"""
+import argparse
+import json
+import re
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.launch import hlo_cost as hc
+from repro.launch.dryrun import build_cell
+from repro.launch.mesh import make_parallel_ctx, make_production_mesh
+from repro.launch.sharding import (batch_specs, opt_state_specs, param_specs,
+                                   to_shardings)
+from repro.launch.steps import (make_decode_step, make_prefill_step,
+                                make_train_step)
+from repro.models import get_model
+from repro.optim.adamw import AdamW
+
+
+def _compile_cell(cfg, shape_name, multi_pod, sp):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    par = make_parallel_ctx(mesh, sp=sp)
+    model = get_model(cfg)
+    kind, batch_struct = cfg.input_specs(shape_name)
+    shape = cfg.shape(shape_name)
+    ps = jax.eval_shape(lambda k: model.init_params(cfg, k),
+                        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    pspecs = param_specs(cfg, par, ps)
+    psh = to_shardings(mesh, pspecs)
+    bsh = to_shardings(mesh, batch_specs(cfg, par, batch_struct))
+    if kind == "train":
+        opt = AdamW()
+        osd = jax.eval_shape(opt.init, ps)
+        j = jax.jit(make_train_step(cfg, par, opt),
+                    in_shardings=(psh, to_shardings(
+                        mesh, opt_state_specs(pspecs)), bsh),
+                    donate_argnums=(0, 1))
+        return j.lower(ps, osd, batch_struct).compile()
+    if kind == "prefill":
+        j = jax.jit(make_prefill_step(cfg, par), in_shardings=(psh, bsh))
+        return j.lower(ps, batch_struct).compile()
+    cache = model.cache_specs(cfg, shape.batch, shape.seq)
+    from repro.launch.sharding import cache_partition
+    csh = to_shardings(mesh, cache_partition(cfg, par, cache))
+    j = jax.jit(make_decode_step(cfg, par), in_shardings=(psh, bsh, csh),
+                donate_argnums=(2,))
+    return j.lower(ps, batch_struct, cache).compile()
+
+
+def profile(arch: str, shape: str, multi_pod: bool = False, sp: bool = False,
+            top: int = 10, baseline: str | None = None):
+    cfg = get_arch(arch)
+    compiled = _compile_cell(cfg, shape, multi_pod, sp)
+    txt = compiled.as_text()
+    cost = hc.analyze_hlo(txt)
+    comps = hc._parse_computations(txt)
+
+    print(f"== {arch} x {shape} x "
+          f"{'2x16x16' if multi_pod else '16x16'}{' +sp' if sp else ''} ==")
+    print(f"dot flops/dev {cost.flops:.3e}  bytes/dev {cost.bytes:.3e}  "
+          f"coll/dev {cost.coll_bytes:.3e}")
+    print(f"t_comp {cost.flops/197e12:.3f}s  t_mem {cost.bytes/819e9:.3f}s  "
+          f"t_coll {cost.coll_bytes/50e9:.3f}s")
+    if baseline:
+        b = json.load(open(baseline))
+        rf = b["roofline"]
+        print(f"vs baseline: t_mem {rf['t_memory_s']:.2f}->"
+              f"{cost.bytes/819e9:.2f} "
+              f"({rf['t_memory_s']/(cost.bytes/819e9+1e-12):.1f}x), "
+              f"t_coll {rf['t_collective_s']:.2f}->{cost.coll_bytes/50e9:.2f}")
+
+    print("\n-- top buffers --")
+    big = []
+    for cname, lines in comps.items():
+        for ln in lines:
+            m = hc._OP_LINE.match(ln)
+            if m:
+                b = hc._shape_bytes(m.group(2))
+                if b > 50e6:
+                    big.append((b, m.group(3), m.group(2)[:60], cname[:40]))
+    for b, k, t, cn in sorted(big, reverse=True)[:top]:
+        print(f"  {b/2**30:7.2f}GiB  {k:<22s} {t}  in {cn}")
+
+    print("\n-- while loops (body x trips) --")
+    for cname, lines in comps.items():
+        for ln in lines:
+            if " while(" not in ln:
+                continue
+            body = re.search(r"body=%?([\w\.\-]+)", ln)
+            cond = re.search(r"condition=%?([\w\.\-]+)", ln)
+            trips = hc._trip_count(ln, comps.get(cond.group(1), [])
+                                   if cond else [])
+            print(f"  trips={trips:<5d} body={body.group(1)[:60]} "
+                  f"(in {cname[:40]})")
+
+    print("\n-- bytes by op kind --")
+    for k, v in sorted(cost.bytes_by_kind.items(), key=lambda kv: -kv[1])[:top]:
+        print(f"  {v/1e12:8.2f} TB  {k}")
+    print("\n-- collectives --")
+    for k, v in sorted(cost.coll_by_kind.items(), key=lambda kv: -kv[1]):
+        print(f"  {v/2**30:8.1f} GiB  {k}")
+    return cost
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--sp", action="store_true")
+    ap.add_argument("--baseline")
+    ap.add_argument("--top", type=int, default=10)
+    args = ap.parse_args()
+    profile(args.arch, args.shape, args.multipod, args.sp, args.top,
+            args.baseline)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,160 @@
+"""PartitionSpec rules: param tree -> spec tree, cache -> spec tree,
+batch -> spec tree.  Conventions (DESIGN.md §5):
+
+* TP ('model'): attention QKV / MLP up+gate column-split; O / down row-split;
+  vocab-sharded embedding + lm_head; MoE experts (EP) + RWKV head projections.
+* FSDP ('data'): every large matrix additionally sharded on its non-TP dim.
+* DP ('pod','data'): batch dims; 'pod' replicates params (pure DP across
+  pods — cross-pod traffic is gradient all-reduce only).
+
+Rules are name-based over the flattened param tree, with divisibility
+fallbacks (e.g. starcoder2's kv=4 heads can't split 16 ways -> cache shards
+sequence instead; batch=1 long-context cells leave batch unsharded).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.parallel import ParallelCtx
+
+__all__ = ["param_specs", "batch_specs", "cache_partition", "to_shardings",
+           "opt_state_specs"]
+
+# name -> (spec for the trailing dims of the param, i.e. ignoring stacking)
+# fsdp axis written as 'F', tensor axis as 'T'; stacking dims get None.
+_RULES = [
+    # generic transformer
+    ("embed", ("T", "F")),
+    ("lm_head", ("F", "T")),
+    ("attn/wq", ("F", "T")), ("attn/wk", ("F", "T")), ("attn/wv", ("F", "T")),
+    ("attn/wo", ("T", "F")),
+    ("shared_attn/wq", ("F", "T")), ("shared_attn/wk", ("F", "T")),
+    ("shared_attn/wv", ("F", "T")), ("shared_attn/wo", ("T", "F")),
+    ("mlp/w_up", ("F", "T")), ("mlp/w_gate", ("F", "T")),
+    ("mlp/w_down", ("T", "F")),
+    # moe (must match the shard_map in_specs in models/lm.py)
+    ("moe/router", (None, None)),
+    ("moe/experts/w_gate", ("T", None, "F")),
+    ("moe/experts/w_up", ("T", None, "F")),
+    ("moe/experts/w_down", ("T", "F", None)),
+    ("moe/shared/w_gate", (None, "F")), ("moe/shared/w_up", (None, "F")),
+    ("moe/shared/w_down", ("F", None)),
+    # rwkv6
+    ("/wr", ("F", "T")), ("/wk", ("F", "T")), ("/wv", ("F", "T")),
+    ("/wg", ("F", "T")), ("/wo", ("T", "F")),
+    ("/wk_ffn", ("F", "T")), ("/wv_ffn", ("T", "F")), ("/wr_ffn", ("F", "T")),
+    ("maa_w1", ("F", None)), ("decay_w1", ("F", None)),
+    # mamba2 / zamba
+    ("mamba/wz", ("F", "T")), ("mamba/wx", ("F", "T")),
+    ("mamba/wB", ("F", None)), ("mamba/wC", ("F", None)),
+    ("mamba/wdt", ("F", None)), ("mamba/wo", ("T", "F")),
+]
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
+def _spec_for(path: str, ndim: int, shape, fsdp: str, tp: str, mesh):
+    for pat, dims in _RULES:
+        if pat in path:
+            lead = ndim - len(dims)
+            spec = [None] * lead
+            for ax, d in zip(dims, shape[lead:]):
+                if ax == "F":
+                    spec.append(fsdp if d % mesh.shape[fsdp] == 0 else None)
+                elif ax == "T":
+                    spec.append(tp if d % mesh.shape[tp] == 0 else None)
+                else:
+                    spec.append(None)
+            return P(*spec)
+    return P()  # small params (norms, biases, u, mu, A_log...) replicated
+
+
+def param_specs(cfg: ArchConfig, par: ParallelCtx, params_struct):
+    """PartitionSpec pytree matching the (Shape/DtypeStruct or real) params."""
+    fsdp = par.dp_axes[-1]
+    tp = par.tp_axis
+
+    def assign(path, leaf):
+        return _spec_for(_path_str(path), leaf.ndim, leaf.shape, fsdp, tp,
+                         par.mesh)
+    return jax.tree_util.tree_map_with_path(assign, params_struct)
+
+
+def opt_state_specs(pspecs):
+    """AdamW m/v mirror the params; count is replicated."""
+    return {"m": pspecs, "v": pspecs, "count": P()}
+
+
+def _div(n, axes, mesh) -> bool:
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    return n % size == 0
+
+
+def batch_specs(cfg: ArchConfig, par: ParallelCtx, batch_struct):
+    """Shard batch dims over DP where divisible; everything else replicated."""
+    dp = par.dp_axes
+
+    def assign(path, leaf):
+        b = leaf.shape[0] if leaf.ndim else 0
+        first = dp if (leaf.ndim and _div(b, dp, par.mesh)) else None
+        return P(first, *([None] * max(leaf.ndim - 1, 0)))
+    return jax.tree_util.tree_map_with_path(assign, batch_struct)
+
+
+def cache_partition(cfg: ArchConfig, par: ParallelCtx, cache_struct):
+    """KV caches / recurrent states.
+
+    k/v (L, B, T, kvH, hd): batch->DP (if divisible); kv heads -> TP when
+    divisible, else the sequence axis takes TP (GQA with few kv heads).
+    Recurrent states: heads->TP when divisible.
+    """
+    dp = par.dp_axes
+    tp = par.tp_axis
+    tp_n = par.mesh.shape[tp]
+
+    def assign(path, leaf):
+        p = _path_str(path)
+        shp = leaf.shape
+        if p.endswith("pos"):
+            return P()
+        if p in ("k", "v") or p.endswith("/k") or p.endswith("/v"):
+            L, B, T, KV, HD = shp
+            bspec = dp if _div(B, dp, par.mesh) else None
+            taxes = []          # axes assigned to the sequence dim
+            if bspec is None:
+                taxes += list(dp)   # idle DP axes take the sequence
+            kvspec = tp if KV % tp_n == 0 else None
+            if kvspec is None:
+                taxes.append(tp)    # few kv heads: TP shards sequence too
+            if taxes and not _div(T, tuple(taxes), par.mesh):
+                taxes = []
+            return P(None, bspec, tuple(taxes) if taxes else None,
+                     kvspec, None)
+        if "wkv" in p:                      # rwkv state (L,B,H,dk,dv)
+            L, B, H, dk, dv = shp
+            bspec = dp if _div(B, dp, par.mesh) else None
+            return P(None, bspec, tp if H % tp_n == 0 else None, None, None)
+        if "x_att" in p or "x_ffn" in p:    # (L,B,D)
+            bspec = dp if _div(shp[1], dp, par.mesh) else None
+            return P(None, bspec, tp if shp[2] % tp_n == 0 else None)
+        if "conv" in p:                     # (nb,mpb,B,K-1,Dc)
+            bspec = dp if _div(shp[2], dp, par.mesh) else None
+            return P(None, None, bspec, None,
+                     tp if shp[4] % tp_n == 0 else None)
+        if p.endswith("/h") or p == "mamba/h":  # (nb,mpb,B,H,P,N)
+            bspec = dp if _div(shp[2], dp, par.mesh) else None
+            return P(None, None, bspec,
+                     tp if shp[3] % tp_n == 0 else None, None, None)
+        return P(*([None] * leaf.ndim))
+    return jax.tree_util.tree_map_with_path(assign, cache_struct)
+
+
+def to_shardings(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

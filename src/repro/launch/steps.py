@@ -1,0 +1,64 @@
+"""Step-function builders shared by train.py, serve.py and dryrun.py."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import get_model
+from repro.models.lm import lm_loss
+from repro.optim.adamw import AdamW
+from repro.parallel import ParallelCtx
+
+__all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
+           "make_eval_step"]
+
+AUX_WEIGHT = 0.01  # MoE load-balance loss weight
+
+
+def make_train_step(cfg: ArchConfig, par: ParallelCtx | None,
+                    opt: AdamW):
+    model = get_model(cfg)
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            logits, aux = model.forward(p, cfg, batch, par)
+            return lm_loss(logits, batch["labels"]) + AUX_WEIGHT * aux
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state, gnorm = opt.update(params, grads, opt_state)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_eval_step(cfg: ArchConfig, par: ParallelCtx | None = None):
+    model = get_model(cfg)
+
+    def eval_step(params, batch):
+        logits, _ = model.forward(params, cfg, batch, par)
+        return lm_loss(logits, batch["labels"])
+
+    return eval_step
+
+
+def make_prefill_step(cfg: ArchConfig, par: ParallelCtx | None,
+                      capacity: int | None = None):
+    model = get_model(cfg)
+
+    def prefill_step(params, batch):
+        return model.prefill(params, cfg, batch, par, capacity=capacity)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, par: ParallelCtx | None,
+                     greedy: bool = True):
+    model = get_model(cfg)
+
+    def decode_step(params, batch, cache):
+        logits, cache = model.decode(params, cfg, batch, cache, par)
+        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return token, cache
+
+    return decode_step

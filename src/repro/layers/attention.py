@@ -1,0 +1,212 @@
+"""GQA attention with flash-style chunked softmax (pure JAX) + KV-cache decode.
+
+Production posture: the prefill/train path never materializes (S, S) scores;
+it scans q-chunks and kv-chunks with an online-softmax accumulator (running
+max / running sum), so activation memory is O(S * chunk) — this is what makes
+the 32k-prefill cells compile with sane per-device memory.  Causality is
+enforced by masking (the masked-out upper-triangle blocks still burn MXU
+FLOPs in the baseline; EXPERIMENTS.md §Perf hillclimbs this).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .norms import qk_norm
+from .rope import apply_rope, rope_angles
+
+__all__ = ["init_attention", "attention", "decode_attention", "AttnParams"]
+
+NEG_INF = -1e30
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+                   qk_norm_flag: bool = False, dtype=jnp.float32,
+                   pad_to: int = 0):
+    """``pad_to``: pad the q-head count (e.g. 36 -> 48) so heads shard
+    cleanly over the TP axis.  Pad heads have zero wo rows, so the function
+    computed is *exactly* unchanged (§Perf cell B iter-2); without the pad,
+    GSPMD partial-shards the head dim and all-reduces attention internals."""
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    hp = max(n_heads, pad_to or n_heads)
+    s = d_model ** -0.5
+    wq = jax.random.normal(kq, (d_model, hp * head_dim), dtype) * s
+    wo = jax.random.normal(ko, (hp * head_dim, d_model), dtype) \
+        * (n_heads * head_dim) ** -0.5
+    if hp > n_heads:
+        live = n_heads * head_dim
+        wq = wq.at[:, live:].set(0.0)
+        wo = wo.at[live:, :].set(0.0)
+    p = {
+        "wq": wq,
+        "wk": jax.random.normal(kk, (d_model, n_kv * head_dim), dtype) * s,
+        "wv": jax.random.normal(kv, (d_model, n_kv * head_dim), dtype) * s,
+        "wo": wo,
+    }
+    if qk_norm_flag:
+        p["q_norm"] = {"scale": jnp.ones((head_dim,), jnp.float32)}
+        p["k_norm"] = {"scale": jnp.ones((head_dim,), jnp.float32)}
+    return p
+
+
+def _qkv(params, x, n_heads, n_kv, head_dim, positions, rope_theta,
+         use_qk_norm):
+    B, S, _ = x.shape
+    n_heads = params["wq"].shape[1] // head_dim   # includes TP head padding
+    q = (x @ params["wq"]).reshape(B, S, n_heads, head_dim)
+    k = (x @ params["wk"]).reshape(B, S, n_kv, head_dim)
+    v = (x @ params["wv"]).reshape(B, S, n_kv, head_dim)
+    if use_qk_norm:
+        q = qk_norm(q, params.get("q_norm"))
+        k = qk_norm(k, params.get("k_norm"))
+    cos, sin = rope_angles(positions, head_dim, rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _flash(q, k, v, q_pos, kv_pos, q_chunk: int, kv_chunk: int, n_rep: int):
+    """Online-softmax attention. q (B,S,H,D); k/v (B,T,Hkv,D); GQA grouped.
+
+    §Perf cell B: (a) kv heads are never materialized n_rep-fold — q is
+    reshaped to (Hkv, n_rep) groups and contracted against kv directly;
+    (b) the QK/AV einsums run in bf16 with f32 accumulation (MXU path) —
+    the running max/sum statistics stay f32.
+
+    q_pos (S,), kv_pos (T,): absolute positions for causal masking (kv_pos
+    may include cache prefix).  Returns (B,S,H,D).
+    """
+    B, S, H, D = q.shape
+    T = k.shape[1]
+    G = k.shape[2]                        # kv heads
+    scale = D ** -0.5
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, T)
+    nq, nk = S // q_chunk, T // kv_chunk
+    assert S % q_chunk == 0 and T % kv_chunk == 0, (S, T, q_chunk, kv_chunk)
+
+    qc = q.reshape(B, nq, q_chunk, G, n_rep, D).transpose(1, 0, 3, 4, 2, 5)
+    # (nq, B, G, n_rep, cq, D)
+    kc = k.reshape(B, nk, kv_chunk, G, D).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(B, nk, kv_chunk, G, D).transpose(1, 0, 3, 2, 4)
+    qp = q_pos.reshape(nq, q_chunk)
+    kp = kv_pos.reshape(nk, kv_chunk)
+    bf = jnp.bfloat16
+
+    causal_dense = (S == T)   # train/prefill: q and kv cover the same span
+
+    def _block(qi, qpi, kcj, vcj, kpj, acc, m, l):
+        s = jnp.einsum("bgrqd,bgkd->bgrqk", qi.astype(bf), kcj.astype(bf),
+                       preferred_element_type=jnp.float32) * scale
+        mask = qpi[None, None, None, :, None] >= kpj[None, None, None,
+                                                     None, :]
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bgrqk,bgkd->bgrqd", p.astype(bf), vcj.astype(bf),
+            preferred_element_type=jnp.float32)
+        return acc, m_new, l_new
+
+    if causal_dense and q_chunk == kv_chunk and nq == nk:
+        # §Perf cell B iter-3: scan only the nq(nq+1)/2 lower-triangle
+        # (q-chunk, kv-chunk) pairs — the upper triangle is fully masked
+        # and would burn MXU flops + HBM bytes for nothing.
+        import numpy as _np
+        ii, jj = _np.tril_indices(nq)
+        pairs = (jnp.asarray(ii, jnp.int32), jnp.asarray(jj, jnp.int32))
+
+        def body(carry, ij):
+            acc_all, m_all, l_all = carry
+            i, j = ij
+            qi = jax.lax.dynamic_index_in_dim(qc, i, 0, keepdims=False)
+            qpi = jax.lax.dynamic_index_in_dim(qp, i, 0, keepdims=False)
+            kcj = jax.lax.dynamic_index_in_dim(kc, j, 0, keepdims=False)
+            vcj = jax.lax.dynamic_index_in_dim(vc, j, 0, keepdims=False)
+            kpj = jax.lax.dynamic_index_in_dim(kp, j, 0, keepdims=False)
+            acc = jax.lax.dynamic_index_in_dim(acc_all, i, 0, keepdims=False)
+            m = jax.lax.dynamic_index_in_dim(m_all, i, 0, keepdims=False)
+            l = jax.lax.dynamic_index_in_dim(l_all, i, 0, keepdims=False)
+            acc, m, l = _block(qi, qpi, kcj, vcj, kpj, acc, m, l)
+            acc_all = jax.lax.dynamic_update_index_in_dim(acc_all, acc, i, 0)
+            m_all = jax.lax.dynamic_update_index_in_dim(m_all, m, i, 0)
+            l_all = jax.lax.dynamic_update_index_in_dim(l_all, l, i, 0)
+            return (acc_all, m_all, l_all), None
+
+        acc0 = jnp.zeros((nq, B, G, n_rep, q_chunk, D), jnp.float32)
+        m0 = jnp.full((nq, B, G, n_rep, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((nq, B, G, n_rep, q_chunk), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), pairs)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+    else:
+        def per_q(qi, qpi):
+            acc0 = jnp.zeros((B, G, n_rep, q_chunk, D), jnp.float32)
+            m0 = jnp.full((B, G, n_rep, q_chunk), NEG_INF, jnp.float32)
+            l0 = jnp.zeros((B, G, n_rep, q_chunk), jnp.float32)
+
+            def inner(carry, kj):
+                kcj, vcj, kpj = kj
+                return _block(qi, qpi, kcj, vcj, kpj, *carry), None
+
+            (acc, m, l), _ = jax.lax.scan(inner, (acc0, m0, l0),
+                                          (kc, vc, kp))
+            return acc / jnp.maximum(l, 1e-30)[..., None]
+
+        out = jax.lax.map(lambda args: per_q(*args), (qc, qp))
+    # (nq, B, G, n_rep, cq, D) -> (B, nq, cq, G, n_rep, D) -> (B, S, H, D)
+    return out.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, H, D).astype(q.dtype)
+
+
+def attention(params, x, cfg, positions=None, q_chunk: int = 512,
+              kv_chunk: int = 1024, return_kv: bool = False):
+    """Full-sequence (train / prefill) GQA attention block.
+
+    cfg needs: n_heads, n_kv, head_dim, rope_theta, qk_norm.
+    Returns (out, (k, v)) where k/v are the cacheable projections.
+    """
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    q, k, v = _qkv(params, x, cfg.n_heads, cfg.n_kv, cfg.head_dim,
+                   positions, cfg.rope_theta, cfg.qk_norm)
+    n_rep = q.shape[2] // cfg.n_kv
+    pos1 = positions[0]
+    kv_chunk = q_chunk  # square blocks enable the causal pair-scan path
+    out = _flash(q, k, v, pos1, pos1, q_chunk, kv_chunk, n_rep)
+    out = out.reshape(B, S, -1) @ params["wo"]
+    return (out, (k, v)) if return_kv else (out, None)
+
+
+def decode_attention(params, x, cache_k, cache_v, pos, cfg):
+    """Single-token decode against a fixed-capacity KV cache.
+
+    x (B,1,D); cache_k/v (B, T, n_kv, head_dim) with valid prefix length
+    ``pos`` (same for all batch rows — production servers use paged layouts;
+    contiguous-prefix is enough for the dry-run envelope).  Returns
+    (out (B,1,D), new_k, new_v).
+    """
+    B, _, _ = x.shape
+    T = cache_k.shape[1]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _qkv(params, x, cfg.n_heads, cfg.n_kv, cfg.head_dim,
+                   positions, cfg.rope_theta, cfg.qk_norm)
+    new_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), pos, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), pos, axis=1)
+    n_rep = q.shape[2] // cfg.n_kv
+    kr = jnp.repeat(new_k, n_rep, axis=2)            # (B,T,H,D)
+    vr = jnp.repeat(new_v, n_rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * cfg.head_dim ** -0.5
+    mask = jnp.arange(T)[None, None, None, :] <= pos
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vr.astype(jnp.float32))
+    out = out.reshape(B, 1, -1).astype(x.dtype) @ params["wo"]
+    return out, new_k, new_v
+
+
+AttnParams = dict

@@ -1,0 +1,139 @@
+"""Mamba2 (SSD) block with scalar-per-head decay, chunked scan, O(1) decode.
+
+Recurrence per head (state h in R^{P x N}, P = head dim, N = ssm state):
+
+    h_t = exp(dt_t * A) h_{t-1} + (dt_t x_t) B_t^T
+    y_t = h_t C_t + D x_t
+
+Chunked evaluation uses the scalar pairwise decay ratio (B,H,C,C) — cheap,
+no per-channel blowup.  A depthwise causal conv (kernel 4) precedes x/B/C as
+in the reference implementation; decode carries (conv tail, h) state.
+Used by the zamba2-7b hybrid config (ssm_state=64).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .norms import rmsnorm
+
+__all__ = ["init_mamba2", "mamba2_block", "init_mamba2_state"]
+
+CONV_K = 4
+
+
+def init_mamba2(key, d_model: int, head_dim: int = 64, ssm_state: int = 64,
+                expand: int = 1, dtype=jnp.float32):
+    d_in = expand * d_model
+    H = d_in // head_dim
+    ks = jax.random.split(key, 8)
+    s = d_model ** -0.5
+    n = lambda k, shp, sc=s: jax.random.normal(k, shp, dtype) * sc
+    return {
+        "wz": n(ks[0], (d_model, d_in)),
+        "wx": n(ks[1], (d_model, d_in)),
+        "wB": n(ks[2], (d_model, ssm_state)),
+        "wC": n(ks[3], (d_model, ssm_state)),
+        "wdt": n(ks[4], (d_model, H)),
+        "dt_bias": jnp.zeros((H,), dtype),
+        "A_log": jnp.zeros((H,), dtype),              # A = -exp(A_log)
+        "D": jnp.ones((H,), dtype),
+        "conv": jax.random.normal(ks[5], (CONV_K, d_in + 2 * ssm_state),
+                                  dtype) * 0.2,
+        "norm": {"scale": jnp.ones((d_in,), jnp.float32)},
+        "wo": n(ks[6], (d_in, d_model), d_in ** -0.5),
+    }
+
+
+def init_mamba2_state(batch: int, d_model: int, head_dim: int = 64,
+                      ssm_state: int = 64, expand: int = 1,
+                      dtype=jnp.float32):
+    d_in = expand * d_model
+    H = d_in // head_dim
+    return {
+        "conv": jnp.zeros((batch, CONV_K - 1, d_in + 2 * ssm_state), dtype),
+        "h": jnp.zeros((batch, H, head_dim, ssm_state), jnp.float32),
+    }
+
+
+def _causal_conv(xbc, weight, tail):
+    """Depthwise causal conv over time. xbc (B,S,Dc), weight (K,Dc),
+    tail (B,K-1,Dc) carries the previous tokens."""
+    full = jnp.concatenate([tail, xbc], axis=1)
+    out = sum(full[:, i:i + xbc.shape[1]] * weight[i]
+              for i in range(CONV_K))
+    return jax.nn.silu(out), full[:, -(CONV_K - 1):]
+
+
+def _ssd_chunk(h0, inp):
+    """One chunk. h0 (B,H,P,N); x (B,C,H,P), Bm/Cm (B,C,N), lw (B,C,H)."""
+    x, Bm, Cm, lw, dt = inp
+    cum = jnp.cumsum(lw, axis=1)                          # (B,C,H)
+    # intra: scores[t,s] = exp(cum[t]-cum[s]) * (C_t . B_s) * dt_s  (s<=t)
+    ratio = jnp.exp(jnp.clip(cum[:, :, None] - cum[:, None, :], -60.0, 0.0))
+    C = x.shape[1]
+    tri = jnp.tril(jnp.ones((C, C), bool))[None, :, :, None]
+    cb = jnp.einsum("btn,bsn->bts", Cm, Bm)               # (B,C,C)
+    scores = jnp.where(tri, ratio * cb[..., None], 0.0)   # (B,C,C,H)
+    scores = scores * dt[:, None, :, :]                   # fold dt_s
+    y = jnp.einsum("btsh,bshp->bthp", scores, x)
+    # inter: y_t += exp(cum[t]) * C_t h0^T
+    y = y + jnp.exp(cum)[..., None] * jnp.einsum(
+        "btn,bhpn->bthp", Cm, h0)
+    # chunk-end state
+    kscale = jnp.exp(jnp.clip(cum[:, -1:, :] - cum, -60.0, 0.0)) \
+        * dt                                              # (B,C,H)
+    h1 = h0 * jnp.exp(cum[:, -1])[..., None, None] \
+        + jnp.einsum("bch,bchp,bcn->bhpn", kscale, x, Bm)
+    return h1, y
+
+
+def mamba2_block(params, x, state=None, head_dim: int = 64, chunk: int = 64,
+                 shard_fn=None):
+    """x (B,S,D) -> (out (B,S,D), new_state). ssm_state derived from wB.
+
+    ``shard_fn`` pins the sharding of the (nc,B,c,...) chunk streams (same
+    GSPMD loop-state replication fix as rwkv6, §Perf cell A); the chunk
+    body is rematerialized in the backward pass."""
+    B, S, D = x.shape
+    d_in = params["wx"].shape[1]
+    ssm_state = params["wB"].shape[1]
+    H = d_in // head_dim
+    if state is None:
+        state = init_mamba2_state(B, D, head_dim, ssm_state,
+                                  d_in // D, x.dtype)
+    z = x @ params["wz"]
+    xb = x @ params["wx"]
+    Bm = x @ params["wB"]
+    Cm = x @ params["wC"]
+    xbc, conv_tail = _causal_conv(
+        jnp.concatenate([xb, Bm, Cm], axis=-1), params["conv"],
+        state["conv"])
+    xb, Bm, Cm = jnp.split(xbc, [d_in, d_in + ssm_state], axis=-1)
+    dt = jax.nn.softplus((x @ params["wdt"]) + params["dt_bias"])
+    dt = dt.astype(jnp.float32)                           # (B,S,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))     # (H,)
+    lw = jnp.clip(dt * A[None, None, :], -30.0, -1e-6)    # log decay
+
+    c = min(chunk, S)
+    assert S % c == 0, (S, c)
+    nc = S // c
+    xh = xb.reshape(B, S, H, head_dim).astype(jnp.float32)
+    sf = shard_fn or (lambda t: t)
+    rs = lambda t: sf(t.reshape(B, nc, c, *t.shape[2:]).transpose(
+        1, 0, 2, *range(3, t.ndim + 1)))
+    h0 = state["h"]
+    body = lambda h, i: _ssd_chunk(h, i)
+    if S > c:  # remat chunk internals in the backward pass
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    hN, ys = jax.lax.scan(
+        body,
+        h0, (rs(xh), rs(Bm.astype(jnp.float32)), rs(Cm.astype(jnp.float32)),
+             rs(lw), rs(dt)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, head_dim)
+    y = y + params["D"][None, None, :, None] * xh
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm"]).astype(x.dtype)
+    out = y @ params["wo"]
+    return out, {"conv": conv_tail, "h": hN}

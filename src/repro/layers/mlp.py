@@ -1,0 +1,38 @@
+"""Feed-forward blocks: SwiGLU (llama/qwen family) and GELU (starcoder-ish),
+with an optional DS-CIM serving path (DSCIMLinear swaps in for the matmuls
+when a macro config is attached at serve time).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_mlp", "mlp"]
+
+
+def init_mlp(key, d_model: int, d_ff: int, kind: str = "swiglu",
+             dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d_model ** -0.5
+    s_out = d_ff ** -0.5
+    p = {"w_up": jax.random.normal(k1, (d_model, d_ff), dtype) * s_in,
+         "w_down": jax.random.normal(k2, (d_ff, d_model), dtype) * s_out}
+    if kind == "swiglu":
+        p["w_gate"] = jax.random.normal(k3, (d_model, d_ff), dtype) * s_in
+    return p
+
+
+def mlp(params, x, kind: str = "swiglu", linear=None):
+    """linear: optional callable (x2d, w) -> y2d (e.g. DSCIMLinear)."""
+    def mm(a, w):
+        if linear is None:
+            return a @ w
+        lead = a.shape[:-1]
+        y = linear(a.reshape(-1, a.shape[-1]), w)
+        return y.reshape(*lead, -1).astype(a.dtype)
+
+    if kind == "swiglu":
+        h = jax.nn.silu(mm(x, params["w_gate"])) * mm(x, params["w_up"])
+    else:
+        h = jax.nn.gelu(mm(x, params["w_up"]))
+    return mm(h, params["w_down"])

@@ -1,0 +1,43 @@
+"""Normalization layers (functional, param-dict based).
+
+Covers the assigned-arch zoo: parametric RMSNorm (qwen/llama-family),
+non-parametric LayerNorm (OLMo-1B uses LN without scale/bias), per-head
+qk-norm (qwen3).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["rmsnorm", "layernorm", "init_rmsnorm", "qk_norm"]
+
+
+def init_rmsnorm(dim: int, parametric: bool = True):
+    return {"scale": jnp.ones((dim,), jnp.float32)} if parametric else {}
+
+
+def rmsnorm(x, params=None, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * (jnp.mean(xf * xf, -1, keepdims=True) + eps) ** -0.5
+    if params and "scale" in params:
+        y = y * params["scale"]
+    return y.astype(dt)
+
+
+def layernorm(x, params=None, eps: float = 1e-5):
+    """Non-parametric when params is empty (OLMo)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, -1, keepdims=True)
+    y = (xf - mu) * (var + eps) ** -0.5
+    if params and "scale" in params:
+        y = y * params["scale"]
+    if params and "bias" in params:
+        y = y + params["bias"]
+    return y.astype(dt)
+
+
+def qk_norm(q, params=None, eps: float = 1e-6):
+    """Per-head RMS norm over head_dim (qwen3-style)."""
+    return rmsnorm(q, params, eps)

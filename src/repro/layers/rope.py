@@ -1,0 +1,24 @@
+"""Rotary position embeddings (half-rotation convention, llama-style)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["rope_angles", "apply_rope"]
+
+
+def rope_angles(positions, head_dim: int, theta: float = 10000.0):
+    """positions (...,) int32 -> (cos, sin) each (..., head_dim/2) f32."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (..., S, H, D); cos/sin (..., S, D/2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(x.dtype)

@@ -1,0 +1,295 @@
+"""Generic decoder-only transformer LM (dense + MoE families).
+
+Covers: olmo-1b, qwen3-0.6b, starcoder2-7b, codeqwen1.5-7b (dense),
+deepseek-moe-16b, granite-moe-1b-a400m (moe), musicgen-large, pixtral-12b
+(stub-frontend decoder backbones).
+
+Structure: scan-over-stacked-layers with full remat (HLO is O(1) in depth —
+this is what keeps the 512-device AOT dry-runs fast), flash-style chunked
+attention, functional KV-cache prefill/decode, optional MoE expert
+parallelism via shard_map (see layers/moe.py), optional sequence-parallel
+residual stream.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.layers.attention import (attention, decode_attention,
+                                    init_attention)
+from repro.layers.mlp import init_mlp, mlp
+from repro.layers.moe import init_moe, moe, moe_local
+from repro.layers.norms import init_rmsnorm, layernorm, rmsnorm
+from repro.parallel import ParallelCtx
+
+__all__ = ["init_params", "forward", "prefill", "decode", "cache_specs",
+           "lm_loss"]
+
+
+@functools.lru_cache(maxsize=8)
+def _linear_for(dscim_spec: str):
+    """DS-CIM linear operator for cfg.dscim = '<mode>:<variant>:<L>[:calib]'.
+
+    Applied to the MLP matmuls and the LM head (the dominant MVMs); the
+    attention projections stay on the exact path (documented scope,
+    DESIGN.md §6).  Returns None when 'off'."""
+    if dscim_spec == "off":
+        return None
+    from repro.core.dscim_layer import make_linear
+    parts = dscim_spec.split(":")
+    mode, variant, length = parts[0], parts[1], int(parts[2])
+    calib = parts[3] if len(parts) > 3 else "paper"
+    return make_linear(variant, length, mode, calib)
+
+
+def _norm(cfg: ArchConfig, x, params):
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, params)
+    return layernorm(x, params)  # layernorm / layernorm_np
+
+
+def _init_norm(cfg: ArchConfig, dim):
+    if cfg.norm == "layernorm_np":
+        return {}
+    return init_rmsnorm(dim, parametric=True)
+
+
+def _init_block(cfg: ArchConfig, key):
+    ka, km = jax.random.split(key)
+    p = {
+        "ln1": _init_norm(cfg, cfg.d_model),
+        "ln2": _init_norm(cfg, cfg.d_model),
+        "attn": init_attention(ka, cfg.d_model, cfg.n_heads, cfg.n_kv,
+                               cfg.head_dim, cfg.qk_norm,
+                               pad_to=cfg.head_pad_to),
+    }
+    if cfg.family == "moe":
+        p["moe"] = init_moe(km, cfg.d_model, cfg.d_ff, cfg.moe_experts,
+                            cfg.moe_topk, cfg.moe_shared)
+    else:
+        p["mlp"] = init_mlp(km, cfg.d_model, cfg.d_ff, cfg.mlp_kind)
+    return p
+
+
+def init_params(cfg: ArchConfig, key):
+    ke, kl, kh = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    layers = jax.vmap(lambda k: _init_block(cfg, k))(layer_keys)
+    params = {"layers": layers, "final_norm": _init_norm(cfg, cfg.d_model)}
+    if not cfg.stub_frontend:
+        params["embed"] = jax.random.normal(
+            ke, (cfg.vocab_padded, cfg.d_model), jnp.float32) * 0.02
+    if not cfg.tie_embeddings or cfg.stub_frontend:
+        params["lm_head"] = jax.random.normal(
+            kh, (cfg.d_model, cfg.vocab_padded), jnp.float32) \
+            * cfg.d_model ** -0.5
+    return params
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch: shard_map under a mesh, local fallback otherwise
+# ---------------------------------------------------------------------------
+
+def _moe_apply(lp_moe, h, cfg: ArchConfig, par: ParallelCtx | None):
+    if par is None:
+        out, aux = moe_local(lp_moe, h, top_k=cfg.moe_topk,
+                             capacity_factor=cfg.moe_capacity,
+                             has_shared=cfg.moe_shared > 0)
+        return out, aux
+    fsdp = par.dp_axes[-1]
+    tp = par.tp_axis
+    dp = par.dp_axes
+    especs = {"w_gate": P(tp, None, fsdp), "w_up": P(tp, None, fsdp),
+              "w_down": P(tp, fsdp, None)}
+    pspecs = {"router": P(None, None), "experts": especs}
+    if cfg.moe_shared:
+        pspecs["shared"] = {"w_gate": P(None, fsdp), "w_up": P(None, fsdp),
+                            "w_down": P(fsdp, None)}
+
+    def inner(lp, x):
+        # FSDP: gather the weight shards before use (explicit ZeRO-3)
+        e = lp["experts"]
+        e = {"w_gate": jax.lax.all_gather(e["w_gate"], fsdp, axis=2, tiled=True),
+             "w_up": jax.lax.all_gather(e["w_up"], fsdp, axis=2, tiled=True),
+             "w_down": jax.lax.all_gather(e["w_down"], fsdp, axis=1, tiled=True)}
+        lp2 = dict(lp, experts=e)
+        if cfg.moe_shared:
+            sh = lp["shared"]
+            lp2["shared"] = {
+                "w_gate": jax.lax.all_gather(sh["w_gate"], fsdp, axis=1, tiled=True),
+                "w_up": jax.lax.all_gather(sh["w_up"], fsdp, axis=1, tiled=True),
+                "w_down": jax.lax.all_gather(sh["w_down"], fsdp, axis=0, tiled=True)}
+        out, aux = moe(lp2, x, top_k=cfg.moe_topk, ep_axis=tp,
+                       capacity_factor=cfg.moe_capacity,
+                       has_shared=cfg.moe_shared > 0)
+        return out, jax.lax.pmean(aux, (*dp, tp))
+
+    return jax.shard_map(
+        inner, mesh=par.mesh,
+        in_specs=(pspecs, P(dp, None, None)),
+        out_specs=(P(dp, None, None), P()),
+        check_vma=False,
+    )(lp_moe, h)
+
+
+# ---------------------------------------------------------------------------
+# forward / prefill / decode
+# ---------------------------------------------------------------------------
+
+def _cast(tree, dtype):
+    return jax.tree.map(lambda a: a.astype(dtype) if a.dtype == jnp.float32
+                        else a, tree)
+
+
+def _constraint(x, cfg, par: ParallelCtx | None):
+    if par is None:
+        return x
+    spec = (P(par.dp_axes, par.tp_axis, None) if par.sp
+            else P(par.dp_axes, None, None))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(par.mesh, spec))
+
+
+def _embed_in(params, cfg: ArchConfig, batch, dt):
+    if cfg.stub_frontend:
+        x = batch["embeds"].astype(dt)
+    else:
+        x = params["embed"].astype(dt)[batch["tokens"]]
+    return x
+
+
+def _head(params, cfg: ArchConfig, x):
+    if cfg.tie_embeddings and not cfg.stub_frontend:
+        w = params["embed"].astype(x.dtype).T
+    else:
+        w = params["lm_head"].astype(x.dtype)
+    lin = _linear_for(cfg.dscim)
+    if lin is not None:
+        lead = x.shape[:-1]
+        y = lin(x.reshape(-1, x.shape[-1]).astype(jnp.float32),
+                w.astype(jnp.float32))
+        return y.reshape(*lead, -1).astype(jnp.float32)
+    return (x @ w).astype(jnp.float32)
+
+
+def _block_apply(cfg: ArchConfig, par, lp, x, positions, collect_kv: bool):
+    h_attn, kv = attention(lp["attn"], _norm(cfg, x, lp["ln1"]), cfg,
+                           positions, cfg.q_chunk, cfg.kv_chunk,
+                           return_kv=collect_kv)
+    x = x + h_attn
+    x = _constraint(x, cfg, par)
+    hn = _norm(cfg, x, lp["ln2"])
+    if cfg.family == "moe":
+        h_ff, aux = _moe_apply(lp["moe"], hn, cfg, par)
+    else:
+        h_ff, aux = mlp(lp["mlp"], hn, cfg.mlp_kind,
+                        linear=_linear_for(cfg.dscim)), 0.0
+    x = _constraint(x + h_ff, cfg, par)
+    return x, aux, kv
+
+
+def forward(params, cfg: ArchConfig, batch, par: ParallelCtx | None = None):
+    """Training/scoring forward. Returns (logits f32, aux_loss)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = _embed_in(params, cfg, batch, dt)
+    B, S, _ = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+
+    def body(carry, lp):
+        x, aux = carry
+        lp = _cast(lp, dt)
+        x, aux_l, _ = _block_apply(cfg, par, lp, x, positions, False)
+        return (x, aux + aux_l), None
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), params["layers"])
+    x = _norm(cfg, x, params["final_norm"])
+    return _head(params, cfg, x), aux / cfg.n_layers
+
+
+def prefill(params, cfg: ArchConfig, batch, par: ParallelCtx | None = None,
+            capacity: int | None = None):
+    """Forward + KV-cache construction. Returns (last-token logits, cache).
+
+    ``capacity``: total cache length to allocate (>= prompt length) so decode
+    steps have headroom; defaults to the prompt length (dry-run convention,
+    where the decode cells allocate their own full-length cache specs)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    cdt = jnp.dtype(cfg.cache_dtype)
+    x = _embed_in(params, cfg, batch, dt)
+    B, S, _ = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+
+    def body(x, lp):
+        lp = _cast(lp, dt)
+        x, _, kv = _block_apply(cfg, par, lp, x, positions, True)
+        return x, (kv[0].astype(cdt), kv[1].astype(cdt))
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    if capacity is not None and capacity > S:
+        pad = [(0, 0), (0, 0), (0, capacity - S), (0, 0), (0, 0)]
+        ks = jnp.pad(ks, pad)
+        vs = jnp.pad(vs, pad)
+    x = _norm(cfg, x[:, -1:], params["final_norm"])
+    logits = _head(params, cfg, x)[:, 0]
+    return logits, {"k": ks, "v": vs, "pos": jnp.int32(S)}
+
+
+def decode(params, cfg: ArchConfig, batch, cache,
+           par: ParallelCtx | None = None):
+    """One-token decode against the cache. Returns (logits (B,Vp), cache)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    if cfg.stub_frontend:
+        x = batch["embed"].astype(dt)                 # (B,1,D)
+    else:
+        x = params["embed"].astype(dt)[batch["token"]][:, None]
+    pos = cache["pos"]
+
+    def body(x, xs):
+        lp, ck, cv = xs
+        lp = _cast(lp, dt)
+        h, nk, nv = decode_attention(lp["attn"], _norm(cfg, x, lp["ln1"]),
+                                     ck, cv, pos, cfg)
+        x = x + h
+        hn = _norm(cfg, x, lp["ln2"])
+        if cfg.family == "moe":
+            h_ff, _ = _moe_apply(lp["moe"], hn, cfg, par)
+        else:
+            h_ff = mlp(lp["mlp"], hn, cfg.mlp_kind,
+                       linear=_linear_for(cfg.dscim))
+        return x + h_ff, (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache["k"],
+                                         cache["v"]))
+    x = _norm(cfg, x, params["final_norm"])
+    logits = _head(params, cfg, x)[:, 0]
+    return logits, {"k": nk, "v": nv, "pos": pos + 1}
+
+
+def cache_specs(cfg: ArchConfig, batch: int, seq: int):
+    cdt = jnp.dtype(cfg.cache_dtype)
+    f = jax.ShapeDtypeStruct
+    return {
+        "k": f((cfg.n_layers, batch, seq, cfg.n_kv, cfg.head_dim), cdt),
+        "v": f((cfg.n_layers, batch, seq, cfg.n_kv, cfg.head_dim), cdt),
+        "pos": f((), jnp.int32),
+    }
+
+
+def lm_loss(logits, labels, mask=None):
+    """Token-mean cross-entropy; logits (B,S,Vp) f32, labels (B,S) int32."""
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

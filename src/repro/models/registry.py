@@ -1,0 +1,20 @@
+"""Family -> model-module registry (uniform API: init_params/forward/
+prefill/decode/cache_specs)."""
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig
+
+from . import lm, rwkv, zamba
+
+__all__ = ["get_model"]
+
+_FAMILIES = {
+    "dense": lm,
+    "moe": lm,
+    "ssm": rwkv,
+    "hybrid": zamba,
+}
+
+
+def get_model(cfg: ArchConfig):
+    return _FAMILIES[cfg.family]

@@ -1,0 +1,129 @@
+"""RWKV6 "Finch" LM (rwkv6-7b): attention-free, O(1)-state decode.
+
+Same public API as models/lm.py; the "cache" is the per-layer recurrent
+state (token-shift tails + WKV matrices), whose size is independent of
+sequence length — which is exactly why this family runs the long_500k cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.layers.norms import init_rmsnorm, rmsnorm
+from repro.layers.rwkv6 import init_rwkv6, init_rwkv6_state, rwkv6_block
+from repro.parallel import ParallelCtx
+
+__all__ = ["init_params", "forward", "prefill", "decode", "cache_specs",
+           "lm_loss"]
+
+from .lm import lm_loss  # shared loss
+
+
+def init_params(cfg: ArchConfig, key):
+    ke, kl, kh = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    layers = jax.vmap(
+        lambda k: init_rwkv6(k, cfg.d_model, cfg.d_ff, cfg.ssm_head_dim)
+    )(layer_keys)
+    return {
+        "embed": jax.random.normal(ke, (cfg.vocab_padded, cfg.d_model),
+                                   jnp.float32) * 0.02,
+        "layers": layers,
+        "ln_in": init_rmsnorm(cfg.d_model),
+        "final_norm": init_rmsnorm(cfg.d_model),
+        "lm_head": jax.random.normal(kh, (cfg.d_model, cfg.vocab_padded),
+                                     jnp.float32) * cfg.d_model ** -0.5,
+    }
+
+
+def _stack_states(cfg: ArchConfig, batch: int, dt):
+    one = init_rwkv6_state(batch, cfg.d_model, cfg.ssm_head_dim, dt)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers, *a.shape)), one)
+
+
+def _run(params, cfg: ArchConfig, x, states, par):
+    dt = x.dtype
+    shard_fn = None
+    if par is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        def shard_fn(t):  # (nc, B, c, H, dk) chunk streams: pin DP + TP
+            bspec = par.dp_axes if t.shape[1] % par.dp_size == 0 else None
+            hspec = (par.tp_axis
+                     if t.shape[3] % par.mesh.shape[par.tp_axis] == 0
+                     else None)
+            return jax.lax.with_sharding_constraint(
+                t, NamedSharding(par.mesh, P(None, bspec, None, hspec, None)))
+
+    def body(x, xs):
+        lp, st = xs
+        lp = jax.tree.map(lambda a: a.astype(dt)
+                          if a.dtype == jnp.float32 else a, lp)
+        x, new_st = rwkv6_block(lp, x, st, cfg.ssm_head_dim, cfg.scan_chunk,
+                                shard_fn=shard_fn)
+        if par is not None and par.sp:
+            # Megatron-SP-style: shard the saved residual stream over TP so
+            # the layer-scan remat stash is 1/tp_size per device
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            x = jax.lax.with_sharding_constraint(
+                x, NamedSharding(par.mesh,
+                                 P(par.dp_axes, None, par.tp_axis)))
+        return x, new_st
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, new_states = jax.lax.scan(body, x, (params["layers"], states))
+    return x, new_states
+
+
+def forward(params, cfg: ArchConfig, batch, par: ParallelCtx | None = None):
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"].astype(dt)[batch["tokens"]]
+    x = rmsnorm(x, params["ln_in"]).astype(dt)
+    states = _stack_states(cfg, x.shape[0], jnp.float32)
+    x, _ = _run(params, cfg, x, states, par)
+    x = rmsnorm(x, params["final_norm"])
+    return (x @ params["lm_head"].astype(dt)).astype(jnp.float32), 0.0
+
+
+def prefill(params, cfg: ArchConfig, batch, par: ParallelCtx | None = None,
+            capacity: int | None = None):
+    # capacity is a no-op: the recurrent state is sequence-length-free
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"].astype(dt)[batch["tokens"]]
+    x = rmsnorm(x, params["ln_in"]).astype(dt)
+    states = _stack_states(cfg, x.shape[0], jnp.float32)
+    x, states = _run(params, cfg, x, states, par)
+    x = rmsnorm(x[:, -1:], params["final_norm"])
+    logits = (x @ params["lm_head"].astype(dt)).astype(jnp.float32)[:, 0]
+    return logits, {"states": states, "pos": jnp.int32(batch["tokens"].shape[1])}
+
+
+def decode(params, cfg: ArchConfig, batch, cache,
+           par: ParallelCtx | None = None):
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"].astype(dt)[batch["token"]][:, None]
+    x = rmsnorm(x, params["ln_in"]).astype(dt)
+    x, states = _run(params, cfg, x, cache["states"], par)
+    x = rmsnorm(x, params["final_norm"])
+    logits = (x @ params["lm_head"].astype(dt)).astype(jnp.float32)[:, 0]
+    return logits, {"states": states, "pos": cache["pos"] + 1}
+
+
+def cache_specs(cfg: ArchConfig, batch: int, seq: int):
+    """State size is seq-independent (the whole point of this family)."""
+    H = cfg.d_model // cfg.ssm_head_dim
+    f = jax.ShapeDtypeStruct
+    L = cfg.n_layers
+    return {
+        "states": {
+            "x_att": f((L, batch, cfg.d_model), jnp.float32),
+            "x_ffn": f((L, batch, cfg.d_model), jnp.float32),
+            "wkv": f((L, batch, H, cfg.ssm_head_dim, cfg.ssm_head_dim),
+                     jnp.float32),
+        },
+        "pos": f((), jnp.int32),
+    }

@@ -1,0 +1,194 @@
+"""Zamba2-7b hybrid LM: Mamba2 (SSD) backbone + one *shared* GQA attention
+block applied once per scanned super-block (weight sharing as in the paper:
+"Mamba2 + shared attn blocks").
+
+81 layers are organized as n_blocks = n_layers // mamba_per_block scanned
+super-blocks, each = [mamba2 x mamba_per_block ; shared_attention].  The
+shared attention params are closure-captured (NOT scanned), so one weight
+set serves every application — faithful to Zamba2's parameter sharing.
+
+Cache = per-layer mamba states (stacked) + per-application KV cache for the
+shared attention (n_blocks applications).  Sub-quadratic: runs long_500k.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.layers.attention import (attention, decode_attention,
+                                    init_attention)
+from repro.layers.mamba2 import (init_mamba2, init_mamba2_state,
+                                 mamba2_block)
+from repro.layers.norms import init_rmsnorm, rmsnorm
+from repro.parallel import ParallelCtx
+
+from .lm import lm_loss  # noqa: F401  (shared loss)
+
+__all__ = ["init_params", "forward", "prefill", "decode", "cache_specs",
+           "lm_loss"]
+
+
+def _n_blocks(cfg: ArchConfig) -> int:
+    assert cfg.n_layers % cfg.mamba_per_block == 0, (
+        cfg.n_layers, cfg.mamba_per_block)
+    return cfg.n_layers // cfg.mamba_per_block
+
+
+def init_params(cfg: ArchConfig, key):
+    ke, km, ka, kh = jax.random.split(key, 4)
+    nb, mpb = _n_blocks(cfg), cfg.mamba_per_block
+    mkeys = jax.random.split(km, nb * mpb).reshape(nb, mpb, 2)
+
+    def init_one(k):
+        return {"mamba": init_mamba2(k, cfg.d_model, cfg.ssm_head_dim,
+                                     cfg.ssm_state),
+                "ln": init_rmsnorm(cfg.d_model)}
+
+    layers = jax.vmap(jax.vmap(init_one))(mkeys)
+    return {
+        "embed": jax.random.normal(ke, (cfg.vocab_padded, cfg.d_model),
+                                   jnp.float32) * 0.02,
+        "blocks": layers,                      # (nb, mpb, ...)
+        "shared_attn": init_attention(ka, cfg.d_model, cfg.n_heads,
+                                      cfg.n_kv, cfg.head_dim, cfg.qk_norm),
+        "shared_ln": init_rmsnorm(cfg.d_model),
+        "final_norm": init_rmsnorm(cfg.d_model),
+        "lm_head": jax.random.normal(kh, (cfg.d_model, cfg.vocab_padded),
+                                     jnp.float32) * cfg.d_model ** -0.5,
+    }
+
+
+def _mamba_states(cfg: ArchConfig, batch: int):
+    nb, mpb = _n_blocks(cfg), cfg.mamba_per_block
+    one = init_mamba2_state(batch, cfg.d_model, cfg.ssm_head_dim,
+                            cfg.ssm_state)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (nb, mpb, *a.shape)), one)
+
+
+def _cast(tree, dt):
+    return jax.tree.map(lambda a: a.astype(dt) if a.dtype == jnp.float32
+                        else a, tree)
+
+
+def _run_full(params, cfg: ArchConfig, x, states, par, collect_kv: bool):
+    """Full-sequence pass (train / prefill). Returns (x, states, kv_stack)."""
+    dt = x.dtype
+    shared = _cast(params["shared_attn"], dt)
+    shared_ln = params["shared_ln"]
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    shard_fn = None
+    if par is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        def shard_fn(t):  # (nc, B, c, ...) SSD chunk streams
+            bspec = par.dp_axes if t.shape[1] % par.dp_size == 0 else None
+            spec = [None, bspec] + [None] * (t.ndim - 2)
+            return jax.lax.with_sharding_constraint(
+                t, NamedSharding(par.mesh, P(*spec)))
+
+    def block_body(x, xs):
+        blk, st = xs
+        blk = _cast(blk, dt)
+
+        def mamba_body(x, xs2):
+            lp, st2 = xs2
+            h, nst = mamba2_block(lp["mamba"], rmsnorm(x, lp["ln"]).astype(dt),
+                                  st2, cfg.ssm_head_dim, cfg.scan_chunk,
+                                  shard_fn=shard_fn)
+            return x + h, nst
+        x, nst = jax.lax.scan(mamba_body, x, (blk, st))
+        h, kv = attention(shared, rmsnorm(x, shared_ln).astype(dt), cfg,
+                          positions, cfg.q_chunk, cfg.kv_chunk,
+                          return_kv=collect_kv)
+        x = x + h
+        kv_out = ((kv[0].astype(jnp.dtype(cfg.cache_dtype)),
+                   kv[1].astype(jnp.dtype(cfg.cache_dtype)))
+                  if collect_kv else 0)
+        return x, (nst, kv_out)
+
+    if cfg.remat:
+        block_body = jax.checkpoint(
+            block_body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, (new_states, kvs) = jax.lax.scan(block_body, x,
+                                        (params["blocks"], states))
+    return x, new_states, kvs
+
+
+def forward(params, cfg: ArchConfig, batch, par: ParallelCtx | None = None):
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"].astype(dt)[batch["tokens"]]
+    states = _mamba_states(cfg, x.shape[0])
+    x, _, _ = _run_full(params, cfg, x, states, par, False)
+    x = rmsnorm(x, params["final_norm"])
+    return (x @ params["lm_head"].astype(dt)).astype(jnp.float32), 0.0
+
+
+def prefill(params, cfg: ArchConfig, batch, par: ParallelCtx | None = None,
+            capacity: int | None = None):
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"].astype(dt)[batch["tokens"]]
+    S = batch["tokens"].shape[1]
+    states = _mamba_states(cfg, x.shape[0])
+    x, states, kvs = _run_full(params, cfg, x, states, par, True)
+    ks, vs = kvs
+    if capacity is not None and capacity > S:
+        pad = [(0, 0), (0, 0), (0, capacity - S), (0, 0), (0, 0)]
+        ks = jnp.pad(ks, pad)
+        vs = jnp.pad(vs, pad)
+    x = rmsnorm(x[:, -1:], params["final_norm"])
+    logits = (x @ params["lm_head"].astype(dt)).astype(jnp.float32)[:, 0]
+    return logits, {"mamba": states, "k": ks, "v": vs,
+                    "pos": jnp.int32(S)}
+
+
+def decode(params, cfg: ArchConfig, batch, cache,
+           par: ParallelCtx | None = None):
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"].astype(dt)[batch["token"]][:, None]
+    pos = cache["pos"]
+    shared = _cast(params["shared_attn"], dt)
+
+    def block_body(x, xs):
+        blk, st, ck, cv = xs
+        blk = _cast(blk, dt)
+
+        def mamba_body(x, xs2):
+            lp, st2 = xs2
+            h, nst = mamba2_block(lp["mamba"], rmsnorm(x, lp["ln"]).astype(dt),
+                                  st2, cfg.ssm_head_dim, chunk=1)
+            return x + h, nst
+        x, nst = jax.lax.scan(mamba_body, x, (blk, st))
+        h, nk, nv = decode_attention(shared,
+                                     rmsnorm(x, params["shared_ln"]).astype(dt),
+                                     ck, cv, pos, cfg)
+        return x + h, (nst, nk, nv)
+
+    x, (nst, nk, nv) = jax.lax.scan(
+        block_body, x, (params["blocks"], cache["mamba"], cache["k"],
+                        cache["v"]))
+    x = rmsnorm(x, params["final_norm"])
+    logits = (x @ params["lm_head"].astype(dt)).astype(jnp.float32)[:, 0]
+    return logits, {"mamba": nst, "k": nk, "v": nv, "pos": pos + 1}
+
+
+def cache_specs(cfg: ArchConfig, batch: int, seq: int):
+    from repro.layers.mamba2 import CONV_K
+    nb, mpb = _n_blocks(cfg), cfg.mamba_per_block
+    d_in = cfg.d_model
+    H = d_in // cfg.ssm_head_dim
+    cdt = jnp.dtype(cfg.cache_dtype)
+    f = jax.ShapeDtypeStruct
+    return {
+        "mamba": {
+            "conv": f((nb, mpb, batch, CONV_K - 1, d_in + 2 * cfg.ssm_state),
+                      jnp.float32),
+            "h": f((nb, mpb, batch, H, cfg.ssm_head_dim, cfg.ssm_state),
+                   jnp.float32),
+        },
+        "k": f((nb, batch, seq, cfg.n_kv, cfg.head_dim), cdt),
+        "v": f((nb, batch, seq, cfg.n_kv, cfg.head_dim), cdt),
+        "pos": f((), jnp.int32),
+    }

@@ -1,0 +1,60 @@
+"""Gradient compression for the slow cross-pod axis: int8 quantized
+all-reduce with per-leaf error feedback (1-bit-Adam-family trick).
+
+Usage (inside a shard_map over the 'pod' axis, or via compress_tree around
+jax.lax.psum):  q, s = compress(g + err); g_hat = decompress(psum(q), s*?);
+err = g - g_hat.  Error feedback keeps the quantization bias from
+accumulating across steps — convergence property is covered by
+tests/test_optim.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compress", "decompress", "compressed_psum_tree", "init_error"]
+
+
+def compress(g):
+    """Symmetric per-tensor int8. Returns (q int8, scale f32 scalar)."""
+    amax = jnp.max(jnp.abs(g))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def init_error(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_psum_tree(grads, err, axis: str):
+    """All-reduce ``grads`` over ``axis`` with int8 compression + error
+    feedback state ``err``.  Returns (mean-reduced grads, new err).
+
+    The int8 payloads are summed exactly (int32 accumulate in f32 carrier is
+    exact for |sum| < 2^24, i.e. up to 131k pods), then rescaled by the
+    max participant scale (scales are psum-maxed).
+    """
+    n = jax.lax.psum(1, axis)
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, s = compress(g32)
+        s_max = jax.lax.pmax(s, axis)
+        # requantize against the shared scale so payloads are summable
+        q2 = jnp.clip(jnp.round(g32 / s_max), -127, 127)
+        total = jax.lax.psum(q2, axis)
+        g_hat_local = q2 * s_max
+        new_e = g32 - g_hat_local
+        return (total * s_max / n).astype(g.dtype), new_e
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_e = jax.tree.unflatten(treedef, [o[1] for o in out])
+    return new_g, new_e

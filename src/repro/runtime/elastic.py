@@ -1,0 +1,29 @@
+"""Elastic mesh resolution: the relaunch environment declares the world.
+
+REPRO_MESH=pod2x16x16 | pod16x16 | dxM (debug) controls the mesh a restart
+builds; checkpoints reshard on restore, so scaling the pod count between
+runs (node failures, capacity changes) requires no checkpoint surgery.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+__all__ = ["mesh_from_env"]
+
+
+def mesh_from_env(default: str = "pod16x16"):
+    spec = os.environ.get("REPRO_MESH", default)
+    auto = jax.sharding.AxisType.Auto
+    if spec == "pod16x16":
+        return jax.make_mesh((16, 16), ("data", "model"),
+                             axis_types=(auto,) * 2)
+    if spec == "pod2x16x16":
+        return jax.make_mesh((2, 16, 16), ("pod", "data", "model"),
+                             axis_types=(auto,) * 3)
+    if spec.startswith("d"):                       # e.g. d2x2 for tests
+        dims = tuple(int(x) for x in spec[1:].split("x"))
+        names = ("data", "model")[:len(dims)]
+        return jax.make_mesh(dims, names, axis_types=(auto,) * len(dims))
+    raise ValueError(f"unknown REPRO_MESH={spec!r}")

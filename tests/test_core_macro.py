@@ -1,0 +1,101 @@
+"""DS-CIM macro: Eq.3/4 identities, backend bit-exactness, Table-I RMSE
+bands, truncation-correction behavior."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.macro import DSCIMMacro, dscim1, dscim2
+from repro.core.seed_search import calibrated_config, rmse_numpy
+from repro.core.remap import build_count_lut
+from repro.core import prng
+
+int8s = st.integers(-128, 127)
+
+
+@settings(max_examples=200, deadline=None)
+@given(int8s, int8s)
+def test_eq3_signed_unsigned_identity(x, w):
+    """x*w == x'w' - 128x - 128w' with x'=x+128, w'=w+128 (paper Eq. 3)."""
+    xp, wp = x + 128, w + 128
+    assert x * w == xp * wp - 128 * x - 128 * wp
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([64, 128, 256]),
+       st.sampled_from([2, 3]))
+def test_backends_bit_exact(seed, L, k):
+    """lut == bitmatmul == cycle-accurate hardware oracle (bit-exact)."""
+    cfg = (dscim1 if k == 2 else dscim2)(L, points="lfsr", seed_u=3,
+                                         seed_v=91)
+    mac = DSCIMMacro(cfg)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(-128, 128, (2, mac.cfg.rows)), jnp.int32)
+    w = jnp.asarray(rng.integers(-128, 128, (mac.cfg.rows, 3)), jnp.int32)
+    c_lut = np.asarray(mac.counts_lut(x, w))
+    c_bm = np.asarray(mac.counts_bitmatmul(x, w))
+    c_cy = mac.counts_cycle(x, w)
+    np.testing.assert_array_equal(c_lut, c_cy)
+    np.testing.assert_array_equal(c_bm, c_cy)
+
+
+PAPER_TABLE1 = {  # (variant, L) -> paper RMSE% (unsigned-fullscale conv.)
+    ("dscim1", 64): 3.57, ("dscim1", 128): 2.03, ("dscim1", 256): 0.74,
+    ("dscim2", 64): 3.81, ("dscim2", 128): 2.63, ("dscim2", 256): 0.84,
+}
+
+
+@pytest.mark.parametrize("variant,L", list(PAPER_TABLE1))
+def test_table1_rmse_bands_paper_points(variant, L):
+    """Seed-searched classic-PRNG configs must land at or below ~1.5x the
+    paper's Table-I RMSE (we match or beat 5/6 cells; DS-CIM2/256 is within
+    1.5x — see EXPERIMENTS.md §Paper-validation)."""
+    cfg = calibrated_config(variant, L, "paper")
+    mac = DSCIMMacro(cfg)
+    r = mac.rmse(n_cols=192, n_vec=32)["unsigned_fullscale"]
+    assert r <= PAPER_TABLE1[(variant, L)] * 1.5, (variant, L, r)
+
+
+@pytest.mark.parametrize("variant,L", [("dscim1", 256), ("dscim2", 64)])
+def test_opt_points_beat_paper_points(variant, L):
+    """Beyond-paper low-discrepancy + midpoint correction beats the classic
+    config at the two headline operating points."""
+    r_paper = DSCIMMacro(calibrated_config(variant, L, "paper")).rmse(
+        n_cols=192, n_vec=32)["unsigned_fullscale"]
+    r_opt = DSCIMMacro(calibrated_config(variant, L, "opt")).rmse(
+        n_cols=192, n_vec=32)["unsigned_fullscale"]
+    assert r_opt < r_paper
+
+
+def test_rmse_scales_down_with_length():
+    vals = [DSCIMMacro(calibrated_config("dscim1", L, "paper")).rmse(
+        n_cols=128, n_vec=16)["unsigned_fullscale"] for L in (64, 128, 256)]
+    assert vals[0] > vals[1] > vals[2]
+
+
+def test_estimator_unbiased_enough():
+    """Center-corrected sobol estimator: |bias| well below the RMS error."""
+    mac = DSCIMMacro(dscim1(256, points="sobol", seed_u=0, seed_v=60,
+                            trunc="center"))
+    r = mac.rmse(n_cols=256, n_vec=32)
+    assert abs(r["bias"]) < 0.5 * r["rms_abs"]
+
+
+def test_sparsity_robustness():
+    """Paper claim: DS-CIM is robust across product sparsity (Fig. 6c) —
+    RMSE under sparse activations stays within 3x of the dense case."""
+    mac = DSCIMMacro(calibrated_config("dscim1", 256, "paper"))
+    dense = mac.rmse(n_cols=128, n_vec=16, dist="uniform")["unsigned_fullscale"]
+    sparse = mac.rmse(n_cols=128, n_vec=16, dist="sparse")["unsigned_fullscale"]
+    assert sparse < 3 * dense
+
+
+def test_rmse_numpy_matches_macro():
+    cfg = calibrated_config("dscim2", 64, "paper")
+    u, v = prng.make_points(cfg.points, cfg.length, cfg.seed_u, cfg.seed_v,
+                            cfg.param_u, cfg.param_v)
+    lut = build_count_lut(u, v, cfg.k)
+    ru, _, _ = rmse_numpy(lut, cfg.k, cfg.length, n_vec=32, n_cols=192,
+                          trunc=cfg.trunc)
+    rm = DSCIMMacro(cfg).rmse(n_cols=192, n_vec=32)["unsigned_fullscale"]
+    assert abs(ru - rm) / rm < 0.35  # different random draws, same regime

@@ -1,0 +1,77 @@
+"""Properties of the sample-region remapping — the paper's central claim:
+after remapping, a shared sampling point activates at most one row per OR
+group, for ALL data (Sec. IV-B)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ormac, prng
+from repro.core.remap import (build_count_lut, fires, fold, group_size,
+                              row_block, shifted_bits)
+
+
+@pytest.mark.parametrize("k", [1, 2, 3])
+def test_fold_is_partition(k):
+    """fold() maps every u in [0,256) to exactly one (code, local) cell and
+    covers each (code, local) exactly once -> regions tile the map."""
+    u = np.arange(256)
+    code, loc = fold(u, k)
+    S = shifted_bits(k)
+    assert code.min() == 0 and code.max() == (1 << k) - 1
+    assert loc.min() == 0 and loc.max() == S - 1
+    pairs = set(zip(code.tolist(), loc.tolist()))
+    assert len(pairs) == 256  # bijection onto (code, local)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 3), st.integers(0, 2 ** 31 - 1), st.data())
+def test_disjointness_property(k, seed, data):
+    """Hypothesis: for arbitrary int8 data and any point, at most one row of
+    an OR group fires per cycle (collision-free OR accumulation)."""
+    G = group_size(k)
+    S = shifted_bits(k)
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, S, G)
+    w = rng.integers(0, S, G)
+    u = np.uint8(data.draw(st.integers(0, 255)))
+    v = np.uint8(data.draw(st.integers(0, 255)))
+    g = np.arange(G)
+    f = fires(np.full(G, u), np.full(G, v), a, w, g, k)
+    assert f.sum() <= 1
+
+
+@pytest.mark.parametrize("kind", ["lfsr", "sobol", "weyl"])
+@pytest.mark.parametrize("k,L", [(2, 256), (3, 64)])
+def test_cycle_oracle_disjoint(kind, k, L):
+    u, v = prng.make_points(kind, L, 3, 91)
+    rng = np.random.default_rng(0)
+    S = shifted_bits(k)
+    a = rng.integers(0, S, 128)
+    w = rng.integers(0, S, 128)
+    count, per_cycle = ormac.dscim_group_count(a, w, u, v, k,
+                                               assert_disjoint=True)
+    # adder width claim: per-cycle sum bounded by #groups (8 for DS-CIM1,
+    # 2 for DS-CIM2 at H=128)
+    assert per_cycle.max() <= 128 // group_size(k)
+
+
+@pytest.mark.parametrize("k,L", [(1, 64), (2, 128), (3, 64)])
+def test_lut_matches_bruteforce(k, L):
+    """LUT[g,a,w] == direct point-in-region counting."""
+    u, v = prng.make_points("lcg", L, 5, 17)
+    lut = build_count_lut(u, v, k)
+    S = shifted_bits(k)
+    rng = np.random.default_rng(1)
+    for _ in range(50):
+        g = rng.integers(0, group_size(k))
+        a = rng.integers(0, S)
+        w = rng.integers(0, S)
+        direct = int(fires(u.astype(np.int32), v.astype(np.int32),
+                           a, w, g, k).sum())
+        assert lut[g, a, w] == direct
+
+
+def test_row_block_wiring():
+    bc, br = row_block(np.arange(16), 2)
+    assert sorted(zip(bc.tolist(), br.tolist())) == [
+        (i, j) for i in range(4) for j in range(4)]

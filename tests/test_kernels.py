@@ -1,0 +1,100 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode): bit-exact sweeps
+over shapes, dtypes, variants — closing the chain
+kernel == ref == LUT == cycle-accurate OR-MAC."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.macro import DSCIMMacro
+from repro.core.seed_search import calibrated_config
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("variant,L", [("dscim1", 256), ("dscim1", 64),
+                                       ("dscim2", 64), ("dscim2", 128)])
+@pytest.mark.parametrize("shape", [(4, 128, 8), (3, 100, 17), (16, 256, 32)])
+def test_dscim_kernel_vs_lut(variant, L, shape):
+    M, K, N = shape
+    cfg = calibrated_config(variant, L, "paper")
+    mac = DSCIMMacro(cfg)
+    rng = np.random.default_rng(hash((variant, L, shape)) % 2 ** 31)
+    x = jnp.asarray(rng.integers(-128, 128, (M, K)), jnp.int32)
+    w = jnp.asarray(rng.integers(-128, 128, (K, N)), jnp.int32)
+    want = np.asarray(mac.mvm(x, w, backend="lut"))
+    got = np.asarray(ops.dscim_mvm(x.astype(jnp.int8), w.astype(jnp.int8),
+                                   cfg, bm=8, bn=8, bk=4))
+    np.testing.assert_allclose(got, want, atol=0.5)
+
+
+def test_dscim_kernel_vs_ref_center():
+    """Center-corrected variant through the kernel wrapper == ref.py."""
+    cfg = calibrated_config("dscim1", 256, "opt")
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.integers(-128, 128, (5, 130)), jnp.int32)
+    w = jnp.asarray(rng.integers(-128, 128, (130, 9)), jnp.int32)
+    # compare against the macro path (already cycle-validated)
+    mac = DSCIMMacro(cfg)
+    want = np.asarray(mac.mvm(x, w, backend="lut"))
+    got = np.asarray(ops.dscim_mvm(x.astype(jnp.int8), w.astype(jnp.int8),
+                                   cfg, bm=8, bn=8, bk=8))
+    np.testing.assert_allclose(got, want, atol=0.5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 40), st.integers(1, 300), st.integers(1, 40),
+       st.integers(0, 2 ** 31 - 1))
+def test_int8_matmul_kernel_property(M, K, N, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(-128, 128, (M, K)), jnp.int8)
+    w = jnp.asarray(rng.integers(-128, 128, (K, N)), jnp.int8)
+    got = np.asarray(ops.int8_matmul(x, w, bm=16, bn=16, bk=32))
+    want = np.asarray(ref.int8_matmul_ref(x, w))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_ref_counts_vs_cycle_oracle():
+    """ref.py's count formulation equals the cycle-accurate OR-MAC."""
+    cfg = calibrated_config("dscim2", 64, "paper")
+    mac = DSCIMMacro(cfg)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.integers(-128, 128, (2, 128)), jnp.int32)
+    w = jnp.asarray(rng.integers(-128, 128, (128, 4)), jnp.int32)
+    got = np.asarray(ref.dscim_counts_ref(
+        x, w, jnp.asarray(mac.u.astype(np.int32)),
+        jnp.asarray(mac.v.astype(np.int32)), cfg.k))
+    want = mac.counts_cycle(x, w)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("variant,L,calib", [
+    ("dscim1", 256, "paper"), ("dscim1", 256, "opt"),
+    ("dscim2", 64, "paper"), ("dscim2", 128, "opt")])
+def test_blocked_kernel_bit_exact(variant, L, calib):
+    """Beyond-paper blocked-points kernel == LUT backend (the disjointness
+    theorem says out-of-block points can never fire; §Perf cell C)."""
+    from repro.kernels.dscim_mvm_blocked import dscim_counts_blocked
+    cfg = calibrated_config(variant, L, calib)
+    mac = DSCIMMacro(cfg)
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.integers(-128, 128, (16, 128)), jnp.int8)
+    w = jnp.asarray(rng.integers(-128, 128, (128, 16)), jnp.int8)
+    want = np.asarray(mac.counts_lut(x.astype(jnp.int32),
+                                     w.astype(jnp.int32)))
+    got = np.asarray(dscim_counts_blocked(x, w, cfg, bm=16, bn=16, bk=16))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("shape", [(4, 64, 32, 16, 16), (2, 128, 64, 32, 64),
+                                   (1, 96, 16, 32, 32)])
+def test_flash_attention_kernel(shape):
+    """Pallas causal flash attention == plain softmax oracle."""
+    from repro.kernels.flash_attention import flash_attention_pallas
+    BH, S, d, bq, bk = shape
+    rng = np.random.default_rng(sum(shape))
+    q = jnp.asarray(rng.normal(0, 1, (BH, S, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (BH, S, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (BH, S, d)), jnp.float32)
+    got = flash_attention_pallas(q, k, v, bq=bq, bk=bk)
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)

@@ -1,0 +1,86 @@
+"""Quantization properties + hardware-model calibration checks."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hwmodel import (DSCIM1_HW, DSCIM2_HW, HWModel,
+                                MacroGeometry)
+from repro.core.quant import (dequantize_int8, fp8_cast, fp8_to_int8_aligned,
+                              quantize_int8)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.01, 100.0))
+def test_int8_quant_roundtrip_bound(seed, scale):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, scale, (4, 32)), jnp.float32)
+    qt = quantize_int8(x, axis=-1)
+    err = np.abs(np.asarray(dequantize_int8(qt)) - np.asarray(x))
+    bound = np.asarray(qt.scale) * 0.5 + 1e-6
+    assert (err <= bound + 1e-7 * scale).all()
+
+
+def test_fp8_cast_is_idempotent():
+    x = jnp.asarray(np.random.default_rng(0).normal(0, 1, 64), jnp.float32)
+    once = fp8_cast(x)
+    twice = fp8_cast(once)
+    np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
+
+
+def test_fp8_to_int8_group_alignment():
+    x = jnp.asarray(np.random.default_rng(0).normal(0, 1, (2, 300)),
+                    jnp.float32)
+    q, scale, pad = fp8_to_int8_aligned(x, group=128)
+    assert q.shape == (2, 3, 128) and pad == 84
+    assert q.dtype == jnp.int8
+    recon = (q.astype(jnp.float32) * scale).reshape(2, -1)[:, :300]
+    rel = float(jnp.sqrt(jnp.mean((recon - fp8_cast(x)) ** 2))
+                / jnp.sqrt(jnp.mean(fp8_cast(x) ** 2)))
+    assert rel < 0.05  # int8-on-fp8 alignment keeps values within ~1%
+
+
+# ---------------- hardware model vs Table III ----------------
+
+PAPER = {  # (model, signed): TOPS/W, TOPS/mm2
+    "dscim1_256": (669.7, 117.1), "dscim2_64": (3566.1, 363.7),
+    "dscim1_64": (2677.2, 468.4), "dscim2_256": (891.5, 90.9),
+}
+
+
+@pytest.mark.parametrize("name,hw", [
+    ("dscim1_256", DSCIM1_HW(256)), ("dscim2_64", DSCIM2_HW(64)),
+    ("dscim1_64", DSCIM1_HW(64)), ("dscim2_256", DSCIM2_HW(256))])
+def test_hwmodel_matches_table3(name, hw):
+    tw, tm = PAPER[name]
+    s = hw.summary(signed=True)
+    assert abs(s["tops_per_watt"] / tw - 1) < 0.10, (name, s["tops_per_watt"])
+    assert abs(s["tops_per_mm2"] / tm - 1) < 0.10, (name, s["tops_per_mm2"])
+
+
+def test_hwmodel_areas_match_paper():
+    assert abs(DSCIM1_HW().summary()["area_mm2"] - 0.78) < 0.05
+    assert abs(DSCIM2_HW().summary()["area_mm2"] - 0.72) < 0.05
+
+
+def test_cmr_scaling_fig4():
+    """Fig. 4: raising CMR 1 -> 64 multiplies throughput ~64x with ~2x area."""
+    lo = DSCIM2_HW(64, cmr=1)
+    hi = DSCIM2_HW(64, cmr=64)
+    assert hi.tops_1b() / lo.tops_1b() == pytest.approx(64, rel=1e-6)
+    assert hi.area_mm2() / lo.area_mm2() < 2.5
+
+
+def test_latch_cached_accumulator_saving():
+    """Paper: latch caching cuts macro power ~21.8%; model within a band."""
+    no_latch = HWModel(MacroGeometry(group=64, length=64, latch_cached=False,
+                                     freq_ghz=0.4995))
+    with_latch = DSCIM2_HW(64)
+    e0 = 1 / no_latch.tops_per_watt()
+    e1 = 1 / with_latch.tops_per_watt()
+    assert 0.15 < 1 - e1 / e0 < 0.35
+
+
+def test_signed_mode_costs_more():
+    hw = DSCIM1_HW(256)
+    assert hw.tops_per_watt(signed=True) < hw.tops_per_watt(signed=False)

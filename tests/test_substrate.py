@@ -1,0 +1,208 @@
+"""Substrate tests: optimizer, compression, checkpointing, data, runtime."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.data.pipeline import DataPipeline
+from repro.data.synthetic import SyntheticLM
+from repro.optim.adamw import AdamW, cosine_schedule, global_norm
+from repro.optim.compression import compress, decompress
+from repro.runtime.failover import (FailureInjector, run_with_failover,
+                                    SimulatedHardwareFailure)
+from repro.runtime.watchdog import StepHang, Watchdog
+
+
+# ---------------- optimizer ----------------
+
+def test_adamw_matches_numpy_reference():
+    opt = AdamW(lr=0.1, b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.0,
+                clip_norm=1e9)
+    p = {"w": jnp.asarray([1.0, -2.0, 3.0])}
+    g = {"w": jnp.asarray([0.5, 0.5, -1.0])}
+    st_ = opt.init(p)
+    p1, st1, _ = opt.update(p, g, st_)
+    m = 0.1 * np.asarray(g["w"])
+    v = 0.01 * np.asarray(g["w"]) ** 2
+    mh = m / (1 - 0.9)
+    vh = v / (1 - 0.99)
+    want = np.asarray(p["w"]) - 0.1 * mh / (np.sqrt(vh) + 1e-8)
+    np.testing.assert_allclose(np.asarray(p1["w"]), want, rtol=1e-5)
+
+
+def test_adamw_converges_quadratic():
+    opt = AdamW(lr=0.05, weight_decay=0.0)
+    p = {"w": jnp.ones(4) * 5}
+    s = opt.init(p)
+    for _ in range(200):
+        g = {"w": 2 * p["w"]}
+        p, s, _ = opt.update(p, g, s)
+    assert float(jnp.abs(p["w"]).max()) < 0.3
+
+
+def test_grad_clipping():
+    opt = AdamW(lr=1.0, clip_norm=1.0)
+    p = {"w": jnp.zeros(3)}
+    s = opt.init(p)
+    _, _, gnorm = opt.update(p, {"w": jnp.asarray([3.0, 4.0, 0.0])}, s)
+    assert abs(float(gnorm) - 5.0) < 1e-4
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1.0, warmup=10, total=100, floor=0.1)
+    assert float(lr(0)) == 0.0
+    assert abs(float(lr(10)) - 1.0) < 1e-6
+    assert float(lr(100)) == pytest.approx(0.1, abs=1e-6)
+
+
+# ---------------- compression ----------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_int8_compression_roundtrip_bound(seed):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(0, 1, 256), jnp.float32)
+    q, s = compress(g)
+    err = np.abs(np.asarray(decompress(q, s) - g))
+    assert err.max() <= float(s) * 0.5 + 1e-6
+
+
+def test_error_feedback_drives_mean_error_down():
+    """With error feedback, time-averaged compressed gradients converge to
+    the true mean (the EF property that keeps training unbiased)."""
+    rng = np.random.default_rng(0)
+    true = rng.normal(0, 1, 64).astype(np.float32)
+    e = np.zeros_like(true)
+    acc = np.zeros_like(true)
+    n = 400
+    for _ in range(n):
+        g = true + rng.normal(0, 0.3, 64).astype(np.float32)
+        q, s = compress(jnp.asarray(g + e))
+        ghat = np.asarray(decompress(q, s))
+        e = g + e - ghat
+        acc += ghat
+    np.testing.assert_allclose(acc / n, true, atol=0.06)
+
+
+# ---------------- checkpointing ----------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones(4, jnp.int32)}}
+    ck.save(5, tree, extras={"loss": 1.5}, blocking=True)
+    assert ck.latest_step() == 5
+    restored, extras = ck.restore(5, jax.eval_shape(lambda: tree))
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]))
+    assert extras["loss"] == 1.5
+
+
+def test_checkpoint_keep_n_and_latest(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    t = {"x": jnp.zeros(2)}
+    for s in (1, 2, 3, 4):
+        ck.save(s, t, blocking=True)
+    dirs = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert dirs == ["step_000000003", "step_000000004"]
+    assert ck.latest_step() == 4
+
+
+def test_checkpoint_structure_mismatch_raises(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"a": jnp.zeros(3)}, blocking=True)
+    with pytest.raises(AssertionError):
+        ck.restore(1, {"a": jnp.zeros(3), "b": jnp.zeros(2)})
+
+
+# ---------------- data ----------------
+
+def test_data_deterministic_and_host_sharded():
+    src = SyntheticLM(vocab=64, seed=0)
+    a = src.batch(4, 16, step=3, host=0, n_hosts=2)
+    b = src.batch(4, 16, step=3, host=0, n_hosts=2)
+    c = src.batch(4, 16, step=3, host=1, n_hosts=2)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    assert a["labels"].shape == (4, 16)
+    np.testing.assert_array_equal(a["tokens"][:, 1:], a["labels"][:, :-1])
+
+
+def test_data_pipeline_prefetch_order():
+    src = SyntheticLM(vocab=32, seed=0)
+    pipe = DataPipeline(src, global_batch=4, seq=8, start_step=7)
+    try:
+        b0 = next(pipe)
+        b1 = next(pipe)
+        assert b0["step"] == 7 and b1["step"] == 8
+    finally:
+        pipe.close()
+
+
+def test_data_has_learnable_structure():
+    """Bigram chain: conditional entropy << unigram entropy."""
+    src = SyntheticLM(vocab=64, seed=0)
+    cond_ent = float(-(src.trans * np.log(src.trans + 1e-12)).sum(-1).mean())
+    assert cond_ent < 0.7 * src.unigram_entropy()
+
+
+# ---------------- runtime ----------------
+
+def test_watchdog_straggler_detection():
+    events = []
+    wd = Watchdog(straggler_factor=2.0, hang_timeout=60,
+                  on_straggler=events.append)
+    try:
+        for _ in range(5):
+            with wd.step():
+                time.sleep(0.01)
+        with wd.step():
+            time.sleep(0.08)
+        assert len(events) == 1 and events[0]["step_time"] > 0.05
+    finally:
+        wd.close()
+
+
+def test_watchdog_hang_raises():
+    wd = Watchdog(hang_timeout=0.2)
+    try:
+        with wd.step():
+            time.sleep(0.01)
+        wd._armed.set()
+        wd._last_done = time.monotonic() - 1.0
+        time.sleep(0.3)
+        with pytest.raises(StepHang):
+            wd.check_hang()
+            with wd.step():
+                pass
+    finally:
+        wd.close()
+
+
+def test_failover_restarts_and_gives_up():
+    inj = FailureInjector(fail_at=(0, 1))
+    calls = {"n": 0}
+
+    def train(state):
+        inj.maybe_fail(calls["n"])
+        calls["n"] += 1
+        return "done"
+
+    out, restarts = run_with_failover(
+        lambda s: (inj.maybe_fail(0), inj.maybe_fail(1), "done")[-1],
+        restore_fn=lambda: None, max_restarts=3)
+    assert out == "done" and restarts == 2
+
+    inj2 = FailureInjector(fail_at=(0,))
+
+    def always_fail(state):
+        raise SimulatedHardwareFailure("boom")
+
+    with pytest.raises(SimulatedHardwareFailure):
+        run_with_failover(always_fail, restore_fn=lambda: None,
+                          max_restarts=1)
