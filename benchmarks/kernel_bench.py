@@ -1,13 +1,22 @@
-"""Kernel microbenches: DS-CIM bitstream-matmul kernel vs exact int8 matmul
+"""Kernel microbenches: DS-CIM bitstream-matmul kernels vs exact int8 matmul
 (interpret mode on CPU — correctness-grade timing; TPU roofline terms are
 derived analytically from the kernel's tile structure and reported as
-`derived`)."""
+`derived`).
+
+Headline A/B rows (ISSUE 1 acceptance):
+  * fused single-launch kernel vs the staged per-window vmap path it
+    replaced, with the removed HBM traffic (the (M, nw, N) psum round-trip)
+    reported in the derived roofline fields;
+  * bf16 vs f32 bit-expansion operands inside the fused kernel.
+"""
 from __future__ import annotations
+
+import sys
 
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import timed
+from benchmarks.common import emit, timed
 from repro.core.seed_search import calibrated_config
 from repro.kernels import ops
 
@@ -26,22 +35,41 @@ def kernel_roofline(M, K, N, L, k):
     return t_c, t_m, ("compute" if t_c > t_m else "memory"), flops / byts
 
 
-def run():
+def fused_hbm_terms(M, K, N, nw):
+    """HBM bytes of the fused single-launch path vs the staged vmap path.
+
+    Fused: int8 operands + per-window scale vectors + one f32 output.
+    Staged: same operands, plus the (M, nw, N) f32 psum written by the
+    per-window kernel launches and re-read (twice: corrections pass and
+    dequant einsum) — the round-trip the fusion removes.
+    """
+    operands = M * K + K * N + 4 * (M * nw + nw * N)
+    fused = operands + 4 * M * N
+    psum_roundtrip = 3 * 4 * M * nw * N          # write + 2 reads
+    staged = operands + 4 * M * N + psum_roundtrip
+    return fused, staged, psum_roundtrip
+
+
+def run(smoke: bool = False):
+    from repro.kernels.dscim_fused import (dscim_fused_mvm,
+                                           dscim_windowed_vmap_mvm)
     from repro.kernels.dscim_mvm_blocked import (block_point_tables,
                                                  dscim_counts_blocked)
     rows = []
     rng = np.random.default_rng(0)
-    for (M, K, N) in [(128, 256, 128)]:
+    shapes = [(32, 128, 32)] if smoke else [(128, 256, 128)]
+    reps = 1 if smoke else 2
+    for (M, K, N) in shapes:
         x = jnp.asarray(rng.integers(-128, 128, (M, K)), jnp.int8)
         w = jnp.asarray(rng.integers(-128, 128, (K, N)), jnp.int8)
-        us_exact = timed(lambda: ops.int8_matmul(x, w), n=3)
+        us_exact = timed(lambda: ops.int8_matmul(x, w), n=reps)
         rows.append({
             "name": f"kernel/int8_matmul/{M}x{K}x{N}", "us": us_exact,
             "derived": "interpret-mode;tpu_t_comp=%.2e" % (
                 2.0 * M * N * K / PEAK)})
         for variant, L in (("dscim1", 256), ("dscim2", 64)):
             cfg = calibrated_config(variant, L, "paper")
-            us = timed(lambda: ops.dscim_mvm(x, w, cfg), n=2)
+            us = timed(lambda: ops.dscim_mvm(x, w, cfg), n=reps)
             t_c, t_m, dom, ai = kernel_roofline(M, K, N, L, cfg.k)
             rows.append({
                 "name": f"kernel/dscim_mvm/{variant}/L{L}/{M}x{K}x{N}",
@@ -50,7 +78,8 @@ def run():
                             f"dom={dom};AI={ai:.0f}flops/B")})
             # beyond-paper blocked-points kernel (§Perf cell C)
             _, _, pmax = block_point_tables(cfg)
-            us_b = timed(lambda: dscim_counts_blocked(x, w, cfg, bk=16), n=2)
+            us_b = timed(lambda: dscim_counts_blocked(
+                x, w, cfg, bm=min(128, M), bn=min(128, N), bk=16), n=reps)
             t_cb, t_mb, domb, aib = kernel_roofline(M, K, N, pmax, cfg.k)
             rows.append({
                 "name": f"kernel/dscim_blocked/{variant}/L{L}/{M}x{K}x{N}",
@@ -58,12 +87,57 @@ def run():
                 "derived": (f"pmax={pmax};mxu_reduction={L/pmax:.1f}x;"
                             f"tpu_t_comp={t_cb:.2e}s;"
                             f"overhead_vs_exact={pmax:.0f}x")})
+
+    # --- fused single-launch vs staged per-window vmap (ISSUE 1) ----------
+    M, K, N = (32, 128, 32) if smoke else (128, 512, 128)
+    group_k = 128
+    nw = -(-K // group_k)
+    cfg = calibrated_config("dscim1", 256, "paper")
+    xf = jnp.asarray(rng.normal(0, 1, (M, K)), jnp.float32)
+    wf = jnp.asarray(rng.normal(0, 1, (K, N)), jnp.float32)
+    us_staged = timed(lambda: dscim_windowed_vmap_mvm(
+        xf, wf, cfg, group_k=group_k), n=reps)
+    us_fused = timed(lambda: dscim_fused_mvm(
+        xf, wf, cfg, group_k=group_k), n=reps)
+    hbm_fused, hbm_staged, psum_rt = fused_hbm_terms(M, K, N, nw)
+    shared = (f"g{group_k};nw={nw};hbm_fused={hbm_fused}B;"
+              f"hbm_staged={hbm_staged}B;psum_roundtrip_removed={psum_rt}B;"
+              f"tpu_t_mem_fused={hbm_fused / HBM:.2e}s;"
+              f"tpu_t_mem_staged={hbm_staged / HBM:.2e}s")
+    rows.append({
+        "name": f"kernel/dscim_staged_vmap/dscim1/L256/{M}x{K}x{N}",
+        "us": us_staged,
+        "derived": f"launches={nw};{shared}"})
+    rows.append({
+        "name": f"kernel/dscim_fused/dscim1/L256/{M}x{K}x{N}",
+        "us": us_fused,
+        "derived": (f"launches=1;speedup_vs_staged={us_staged / us_fused:.2f}x;"
+                    f"{shared}")})
+
+    # --- bf16 vs f32 bit-expansion operands in the fused kernel -----------
+    us_bf16 = timed(lambda: dscim_fused_mvm(
+        xf, wf, cfg, group_k=group_k, bits="bfloat16"), n=reps)
+    us_f32 = timed(lambda: dscim_fused_mvm(
+        xf, wf, cfg, group_k=group_k, bits="float32"), n=reps)
+    rows.append({
+        "name": f"kernel/dscim_fused_bits/bf16/{M}x{K}x{N}", "us": us_bf16,
+        "derived": ("vmem_bit_tiles=0.5x_f32;mxu_rate=2x_f32;"
+                    f"f32_us={us_f32:.0f};interp_bf16_emulation_ratio="
+                    f"{us_bf16 / us_f32:.2f}x")})
+    rows.append({
+        "name": f"kernel/dscim_fused_bits/f32/{M}x{K}x{N}", "us": us_f32,
+        "derived": "baseline_bits=float32"})
     return rows
 
 
 def main():
-    for r in run():
-        print(f"{r['name']},{r['us']:.0f},{r['derived']}")
+    """Prints CSV rows and returns them (benchmarks.run appends the
+    kernel rows to the BENCH_kernels.json trajectory)."""
+    smoke = "--smoke" in sys.argv[1:]
+    rows = run(smoke=smoke)
+    for r in rows:
+        emit(r["name"], r["us"], r["derived"])
+    return rows
 
 
 if __name__ == "__main__":

@@ -10,17 +10,57 @@ Prints ``name,us_per_call,derived`` CSV lines.  Sections:
   kernel_bench  — Pallas kernel microbench + TPU roofline terms
   roofline      — per-(arch x shape x mesh) table from the dry-run JSONs
 
+The kernel_bench section additionally appends its rows (name, µs, derived
+roofline terms, git rev, timestamp) to ``BENCH_kernels.json`` at the repo
+root — a perf trajectory across PRs, so future changes have a baseline to
+compare against.
+
 Run everything:  PYTHONPATH=src python -m benchmarks.run
 One section:     PYTHONPATH=src python -m benchmarks.run t1_rmse
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
 import sys
 import time
 import traceback
 
 SECTIONS = ("t1_rmse", "fig6_sparsity", "t3_efficiency", "seedsearch",
             "t1_accuracy", "t2_llm", "kernel_bench", "roofline")
+
+TRAJECTORY = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_kernels.json")
+
+
+def _git_rev() -> str:
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(TRAJECTORY),
+            stderr=subprocess.DEVNULL).decode().strip()
+    except (OSError, subprocess.CalledProcessError):
+        return "unknown"
+
+
+def append_trajectory(rows, path: str = TRAJECTORY) -> None:
+    """Append one benchmark run to the BENCH_kernels.json trajectory."""
+    data = {"runs": []}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, ValueError):
+            data = {"runs": []}
+    data.setdefault("runs", []).append({
+        "rev": _git_rev(),
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "rows": rows,
+    })
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1)
+    print(f"# trajectory: {len(rows)} rows -> {path}", flush=True)
 
 
 def main() -> None:
@@ -30,7 +70,9 @@ def main() -> None:
         t0 = time.time()
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["main"])
-            mod.main()
+            rows = mod.main()
+            if name == "kernel_bench" and rows:
+                append_trajectory(rows)
             print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
         except Exception:  # noqa: BLE001 — keep the harness going
             print(f"# {name} FAILED:\n{traceback.format_exc()[-1500:]}",

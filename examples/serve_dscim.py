@@ -37,7 +37,8 @@ def main():
     for tag, spec in [("float", "off"),
                       ("dscim1/L256", "paper_inject:dscim1:256"),
                       ("dscim2/L64", "paper_inject:dscim2:64"),
-                      ("dscim1/L256/exact-lut", "lut:dscim1:256")]:
+                      ("dscim1/L256/exact-lut", "lut:dscim1:256"),
+                      ("dscim1/L256/fused-kernel", "kernel:dscim1:256")]:
         c = dataclasses.replace(cfg, dscim=spec)
         t0 = time.time()
         toks, logits = serve_batch(c, params, prompts, args.tokens)

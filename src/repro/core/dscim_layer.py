@@ -7,6 +7,9 @@ computes the matmul the way a DS-CIM accelerator would:
 * ``lut``          — bit-exact DS-CIM emulation via the joint-count LUT;
 * ``bitmatmul``    — bit-exact DS-CIM via the {0,1}-expanded MXU matmul (the
                      Pallas kernel's math; pure-jnp twin here);
+* ``kernel``       — the serving hot path: fused single-launch Pallas kernel
+                     (kernels/dscim_fused.py) — windows iterated inside the
+                     grid, sign-correction + dequant in-kernel, batched;
 * ``statistical``  — calibrated Gaussian injection (fast big-model path).
 
 The hardware accumulates in windows of ``cfg.rows`` (=128) physical rows and
@@ -49,6 +52,7 @@ class DSCIMLinear:
     cfg: DSCIMConfig
     mode: Mode = "lut"
     group_k: int | None = 128
+    tune: bool = False              # kernel mode: autotune fused-kernel tiles
 
     def __post_init__(self):
         self.macro = DSCIMMacro(self.cfg)
@@ -71,6 +75,14 @@ class DSCIMLinear:
         """x: (..., K) float; w: (K, N) float -> (..., N) float32."""
         if self.mode == "float":
             return x @ w
+        if self.mode == "kernel":
+            # fused single-launch Pallas path: quantization windows iterate
+            # inside the kernel grid; sign-correction terms and per-window
+            # dequant scales are applied in-kernel, leading batch dims ride
+            # a batch grid axis (kernels/dscim_fused.py).
+            from repro.kernels.dscim_fused import dscim_fused_mvm
+            return dscim_fused_mvm(x, w, self.cfg, group_k=self.group_k,
+                                   tune=self.tune)
         lead = x.shape[:-1]
         K = x.shape[-1]
         N = w.shape[-1]
@@ -82,21 +94,9 @@ class DSCIMLinear:
         w2 = wq.q.astype(jnp.int32)                    # (nw,g,N)
         if self.mode == "exact":
             psum = jnp.einsum("mug,ugn->mun", x2, w2).astype(jnp.float32)
-        elif self.mode in ("lut", "bitmatmul", "kernel"):
-            if self.mode == "kernel":
-                # blocked-points Pallas kernel (14-43x cheaper emulation,
-                # §Perf cell C); interpret mode off-TPU
-                from repro.kernels.dscim_mvm_blocked import (
-                    dscim_counts_blocked)
-                bk = 16 if g % 16 == 0 else g
-
-                def fn(xw, ww):
-                    return dscim_counts_blocked(
-                        xw.astype(jnp.int8), ww.astype(jnp.int8), self.cfg,
-                        bm=xw.shape[0], bn=ww.shape[1], bk=bk)
-            else:
-                fn = (self.macro.counts_lut if self.mode == "lut"
-                      else self.macro.counts_bitmatmul)
+        elif self.mode in ("lut", "bitmatmul"):
+            fn = (self.macro.counts_lut if self.mode == "lut"
+                  else self.macro.counts_bitmatmul)
             mvm_w = jax.vmap(
                 lambda xw, ww: self.macro.mvm_from_counts(xw, ww, fn(xw, ww)),
                 in_axes=(1, 0), out_axes=1)

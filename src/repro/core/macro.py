@@ -139,9 +139,8 @@ class DSCIMMacro:
         cfg = self.cfg
         a, b = self._shift(x_i8, w_i8)                  # (M,K), (K,N)
         K = a.shape[-1]
-        n = 1 << cfg.k
         blk = jnp.arange(K, dtype=jnp.int32) % cfg.group
-        bc, br = blk % n, blk // n
+        bc, br = row_block(blk, cfg.k)
         cu, lu = fold_jnp(jnp.asarray(self.u.astype(np.int32)), cfg.k)  # (L,)
         cv, lv = fold_jnp(jnp.asarray(self.v.astype(np.int32)), cfg.k)
         abits = ((cu[None, None, :] == bc[None, :, None])

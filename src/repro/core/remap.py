@@ -18,8 +18,8 @@ import numpy as np
 import jax.numpy as jnp
 
 __all__ = [
-    "fold", "fold_jnp", "row_block", "fires", "build_count_lut",
-    "group_size", "shifted_bits",
+    "fold", "fold_jnp", "row_block", "point_block", "fires",
+    "build_count_lut", "group_size", "shifted_bits",
 ]
 
 
@@ -74,6 +74,19 @@ def row_block(row_in_group, k: int):
     """
     n = 1 << k
     return row_in_group % n, row_in_group // n
+
+
+def point_block(cu, cv, k: int):
+    """Fixed wiring sampling point -> owning row: flat block code.
+
+    Inverse pairing of :func:`row_block`: a point with folded block codes
+    (cu, cv) lands in the region of row ``cv * 2^k + cu`` of the group, so
+    ``point_block(*row_block(g, k), k) == g`` for every row g.  All kernels
+    must use this pair (and not re-derive the % / // arithmetic) so the
+    row->block wiring stays consistent across the LUT, bitmatmul, baseline
+    and blocked/fused Pallas paths.  Works on numpy and jnp arrays.
+    """
+    return cv * (1 << k) + cu
 
 
 def fires(u, v, a, w, row_in_group, k: int, xp=np):

@@ -1,0 +1,160 @@
+"""Tiny tile autotuner for the DS-CIM Pallas kernels.
+
+Sweeps a small candidate list of tile shapes per (kernel kind, shape, cfg)
+key, times each candidate on shared synthetic operands of the requested
+shape, and caches the winner — in
+memory always, and on disk when ``REPRO_AUTOTUNE_CACHE`` points at a JSON
+file (so serving processes inherit tuned tiles across restarts).
+
+Deliberately simple: a handful of curated candidates beats an exhaustive
+sweep for these kernels (the tile space is tiny — MXU-aligned bm/bn and a
+couple of contraction sub-tile sizes), and timing happens at most once per
+key per process.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+__all__ = ["best", "fused_tiles", "mvm_tiles", "clear"]
+
+_CACHE: dict[str, tuple] = {}
+_CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+
+
+def clear():
+    _CACHE.clear()
+
+
+def _disk_path() -> str | None:
+    return os.environ.get(_CACHE_ENV) or None
+
+
+def _load_disk() -> dict:
+    path = _disk_path()
+    if path and os.path.exists(path):
+        try:
+            with open(path) as f:
+                return json.load(f)
+        except (OSError, ValueError):
+            pass
+    return {}
+
+
+def _save_disk(key: str, val: tuple):
+    path = _disk_path()
+    if not path:
+        return
+    data = _load_disk()
+    data[key] = list(val)
+    try:
+        with open(path, "w") as f:
+            json.dump(data, f, indent=0, sort_keys=True)
+    except OSError:
+        pass
+
+
+def _time_once(fn, n: int = 2, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    best_t = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best_t = min(best_t, time.perf_counter() - t0)
+    return best_t
+
+
+def best(key: str, candidates, bench) -> tuple:
+    """Return the cached winner for ``key`` or sweep ``candidates``.
+
+    ``bench(cand)`` must return a zero-arg callable running the kernel with
+    that candidate; candidates that fail to trace/launch are skipped.
+    """
+    if key in _CACHE:
+        return _CACHE[key]
+    disk = _load_disk()
+    if key in disk:
+        win = tuple(disk[key])
+        _CACHE[key] = win
+        return win
+    win, win_t = None, float("inf")
+    for cand in candidates:
+        try:
+            t = _time_once(bench(cand))
+        except Exception:  # noqa: BLE001 — bad tile shape for this geometry
+            continue
+        if t < win_t:
+            win, win_t = tuple(cand), t
+    if win is None:
+        raise ValueError(f"autotune: no viable candidate for {key}")
+    _CACHE[key] = win
+    _save_disk(key, win)
+    return win
+
+
+# --------------------------------------------------------------------------
+# kernel-specific entry points
+# --------------------------------------------------------------------------
+
+def _mxu_opts(dim: int):
+    """Tile options for an MXU-aligned axis of extent ``dim``."""
+    up8 = -(-dim // 8) * 8
+    return sorted({min(128, up8), min(64, up8), min(256, up8)})
+
+
+def fused_tiles(shape, cfg, g: int, *, interpret: bool,
+                bits: str = "bfloat16"):
+    """(bm, bn, bk) winner for dscim_fused_mvm on (B, M, K, N) operands."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from .dscim_fused import dscim_fused_mvm
+
+    B, M, K, N = shape
+    key = f"fused/{cfg.name}/k{cfg.k}L{cfg.length}t{cfg.trunc}/" \
+          f"{B}x{M}x{K}x{N}/g{g}/{bits}/{'cpu' if interpret else 'tpu'}"
+    cands = [(bm, bn, bk)
+             for bm in _mxu_opts(M)[:2] for bn in _mxu_opts(N)[:2]
+             for bk in (16, 32) if bk <= max(g, 16)]
+    # one shared operand set for all candidates (shape, not data, matters)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 1, (B, M, K)), jnp.float32)
+    w = jnp.asarray(rng.normal(0, 1, (K, N)), jnp.float32)
+
+    def bench(cand):
+        bm, bn, bk = cand
+        return lambda: dscim_fused_mvm(
+            x, w, cfg, group_k=(g if g != K else None), bm=bm, bn=bn, bk=bk,
+            bits=bits, interpret=interpret)
+
+    return best(key, cands, bench)
+
+
+def mvm_tiles(shape, cfg, *, interpret: bool):
+    """(bm, bn, bk, bl) winner for ops.dscim_mvm on (M, K, N) operands."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    M, K, N = shape
+    key = f"mvm/{cfg.name}/k{cfg.k}L{cfg.length}t{cfg.trunc}/" \
+          f"{M}x{K}x{N}/{'cpu' if interpret else 'tpu'}"
+    bls = [bl for bl in (64, 128, 256) if bl <= cfg.length
+           and cfg.length % bl == 0] or [cfg.length]
+    cands = [(bm, bn, bk, bl)
+             for bm in _mxu_opts(M)[:2] for bn in _mxu_opts(N)[:2]
+             for bk in (8, 16) for bl in bls[:2]]
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(-128, 128, (M, K)), jnp.int8)
+    w = jnp.asarray(rng.integers(-128, 128, (K, N)), jnp.int8)
+
+    def bench(cand):
+        from .ops import dscim_mvm
+        bm, bn, bk, bl = cand
+        return lambda: dscim_mvm(x, w, cfg, bm=bm, bn=bn, bk=bk, bl=bl,
+                                 interpret=interpret)
+
+    return best(key, cands, bench)

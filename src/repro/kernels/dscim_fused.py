@@ -1,0 +1,268 @@
+"""Fused batched DS-CIM MVM: one Pallas launch from float activations to
+float output.
+
+The staged path (``DSCIMLinear`` pre-fusion) drove the blocked-points kernel
+through a per-window ``jax.vmap`` — one kernel launch per 128-row
+quantization window — then applied the four sign-correction terms and the
+per-window dequant scales in separate f32 HBM passes, materializing an
+``(M, nw, N)`` psum tensor in HBM.  That throws away the macro's headline
+property (stochastic bit traffic and partial sums never leave the array).
+
+This kernel folds the window axis into the K grid dimension and finishes the
+estimator inside the grid step:
+
+    out[m,n] = Σ_u s_x[m,u] * s_w[u,n] * psum_u[m,n]
+    psum_u   = scale*C_u - 128*Σx_u - 128*Σ(w_u+128)  (+ center-trunc terms)
+
+Every term is additive over K sub-tiles of a window, so each grid step
+contributes its partial counts *and* partial corrections, already multiplied
+by that window's dequant scales — no per-window psum ever exists in HBM; the
+only HBM traffic is the int8 operands, the tiny scale vectors and the final
+f32 output (same traffic class as a plain int8 matmul).
+
+Further wins over the staged path:
+
+* bit-expansion dot runs on **bf16** operands with f32 accumulation — {0,1}
+  values are exact in bf16, counts ≤ K·pmax << 2^24 stay exact in the f32
+  accumulator, VMEM for the bit tiles halves and the MXU runs at its
+  bf16-input rate (``bits="float32"`` kept for A/B benchmarking);
+* leading batch dims map onto a **batch grid axis** (grid (B, M/bm, N/bn,
+  nw·spw)) instead of a reshape(-1, K) round-trip through HBM;
+* blocked-points tables (disjointness theorem) shrink the contraction from
+  K·L to K·pmax exactly as in ``dscim_mvm_blocked``.
+
+In-kernel padding uses the never-fire sentinel x = w = -128 (x' = w' = 0):
+counts, Σ(w+128), Σa and Σb pad contributions are all zero by construction,
+and the only non-zero pad term (-128·Σx picking up 128²·pad_g per window) is
+cancelled by a compile-time per-window constant.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.macro import DSCIMConfig
+from repro.core.quant import quantize_int8
+
+from .dscim_mvm_blocked import block_point_tables, dscim_counts_blocked
+
+__all__ = ["dscim_fused_mvm", "dscim_windowed_vmap_mvm"]
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _kernel(x_ref, w_ref, tu_ref, tv_ref, sx_ref, sw_ref, out_ref, *,
+            k: int, pmax: int, bk: int, spw: int, scale: float,
+            win_const: float, trunc_center: bool, bits: str):
+    """One grid step: partial counts + partial corrections of one window
+    sub-tile, dequantized by that window's scales, accumulated into out."""
+    kk = pl.program_id(3)
+    sk = kk % spw                              # step index within the window
+
+    @pl.when(kk == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...].astype(jnp.int32)           # (bm, bk) signed int8 values
+    w = w_ref[...].astype(jnp.int32)           # (bk, bn)
+    a = (x + 128) >> k                         # shifted unsigned, [0, S)
+    b = (w + 128) >> k
+
+    # row -> block wiring restarts at every window (the vmap-per-window
+    # semantics): row index *within the window* selects the point table row.
+    G = 4 ** k
+    rows = sk * bk + jax.lax.broadcasted_iota(jnp.int32, (bk,), 0)
+    blk = rows % G
+    lu = jnp.take(tu_ref[...], blk, axis=0)    # (bk, pmax)
+    lv = jnp.take(tv_ref[...], blk, axis=0)
+
+    bm, bn = x.shape[0], w.shape[1]
+    bdt = jnp.dtype(bits)
+    abit = (lu[None, :, :] < a[:, :, None]).astype(bdt)   # (bm, bk, pmax)
+    wbit = (lv[:, :, None] < b[:, None, :]).astype(bdt)   # (bk, pmax, bn)
+    counts = jax.lax.dot_general(
+        abit.reshape(bm, bk * pmax), wbit.reshape(bk * pmax, bn),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    psum = scale * counts
+    psum = psum - 128.0 * jnp.sum(x, axis=1, keepdims=True).astype(jnp.float32)
+    psum = psum - 128.0 * jnp.sum(w + 128, axis=0,
+                                  keepdims=True).astype(jnp.float32)
+    if trunc_center:
+        delta = (2 ** k - 1) / 2.0
+        psum = psum + (2 ** k) * delta * (
+            jnp.sum(a, axis=1, keepdims=True)
+            + jnp.sum(b, axis=0, keepdims=True)).astype(jnp.float32)
+    if win_const:
+        # once per window: center-trunc constant + pad-sentinel cancellation
+        psum = psum + jnp.where(sk == 0, jnp.float32(win_const),
+                                jnp.float32(0.0))
+    out_ref[...] += psum * sx_ref[...] * sw_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "cfg", "g", "bm", "bn", "bk", "bits", "interpret"))
+def _fused_call(xq, wq, sx, sw, cfg: DSCIMConfig, *, g: int, bm: int,
+                bn: int, bk: int, bits: str, interpret: bool):
+    """xq (B, Mp, nw*gp) int8, wq (nw*gp, Np) int8, sx (B, Mp, nw) f32,
+    sw (nw, Np) f32 -> (B, Mp, Np) f32."""
+    B, Mp, KL = xq.shape
+    Np = wq.shape[1]
+    gp = _round_up(g, bk)
+    spw = gp // bk
+    nw = KL // gp
+    tu_np, tv_np, pmax = block_point_tables(cfg)
+    tu, tv = jnp.asarray(tu_np), jnp.asarray(tv_np)
+    G = cfg.group
+    delta = (2 ** cfg.k - 1) / 2.0
+    win_const = (g * delta * delta if cfg.trunc == "center" else 0.0) \
+        - 128.0 * 128.0 * (gp - g)
+    kernel = functools.partial(
+        _kernel, k=cfg.k, pmax=pmax, bk=bk, spw=spw, scale=cfg.scale,
+        win_const=win_const, trunc_center=(cfg.trunc == "center"), bits=bits)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Mp // bm, Np // bn, nw * spw),
+        in_specs=[
+            pl.BlockSpec((None, bm, bk), lambda b, i, j, kk: (b, i, kk)),
+            pl.BlockSpec((bk, bn), lambda b, i, j, kk: (kk, j)),
+            pl.BlockSpec((G, pmax), lambda b, i, j, kk: (0, 0)),
+            pl.BlockSpec((G, pmax), lambda b, i, j, kk: (0, 0)),
+            pl.BlockSpec((None, bm, 1),
+                         lambda b, i, j, kk, s=spw: (b, i, kk // s)),
+            pl.BlockSpec((1, bn), lambda b, i, j, kk, s=spw: (kk // s, j)),
+        ],
+        out_specs=pl.BlockSpec((None, bm, bn), lambda b, i, j, kk: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, Mp, Np), jnp.float32),
+        interpret=interpret,
+    )(xq, wq, tu, tv, sx, sw)
+
+
+def _window_quantize(x, w, group_k: int | None):
+    """Float -> per-window int8 operands + scales (DSCIMLinear semantics:
+    pad K with float zeros *before* quantizing, one scale per window)."""
+    B, M, K = x.shape
+    N = w.shape[-1]
+    g = group_k or K
+    padk = (-K) % g
+    if padk:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, padk)))
+        w = jnp.pad(w, ((0, padk), (0, 0)))
+    nw = x.shape[-1] // g
+    xq = quantize_int8(x.reshape(B, M, nw, g), axis=-1)     # (B,M,nw,1) scales
+    wq = quantize_int8(w.reshape(nw, g, N), axis=1)         # (nw,1,N) scales
+    return xq, wq, nw, g
+
+
+def dscim_fused_mvm(x, w, cfg: DSCIMConfig, *, group_k: int | None = 128,
+                    bm: int | None = None, bn: int | None = None,
+                    bk: int | None = None, bits: str | None = None,
+                    interpret: bool | None = None, tune: bool = False):
+    """Fused DS-CIM linear: x (..., K) float, w (K, N) float -> (..., N) f32.
+
+    Single Pallas launch covering all quantization windows, sign-correction
+    terms and dequant scales; leading batch dims ride a batch grid axis.
+    ``bits`` defaults to bf16 on TPU (halved VMEM, doubled MXU rate; {0,1}
+    operands are exact) and f32 under interpret mode, where CPU bf16
+    emulation would dominate the runtime.  ``tune=True`` consults the tile
+    autotuner (kernels/autotune.py).
+    """
+    from .ops import ON_TPU
+    interpret = (not ON_TPU) if interpret is None else interpret
+    bits = bits or ("float32" if interpret else "bfloat16")
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    N = w.shape[-1]
+    # native batch: keep the last lead dim as the M grid rows, fold any
+    # extra leading dims into the batch grid axis (no flatten through M)
+    if x.ndim <= 2:
+        x3 = x.reshape(1, -1 if x.ndim == 2 else 1, K)
+    else:
+        B = math.prod(lead[:-1])
+        x3 = x.reshape(B, lead[-1], K)
+    B, M, _ = x3.shape
+
+    g = group_k or K
+    if tune:
+        from . import autotune
+        bm, bn, bk = autotune.fused_tiles(
+            (B, M, K, N), cfg, g, interpret=interpret, bits=bits)
+    bk = bk or min(16, g)
+    bm = bm or min(128, _round_up(M, 8))
+    bn = bn or min(128, _round_up(N, 8))
+
+    xq, wq, nw, g = _window_quantize(x3, w, group_k)
+    gp = _round_up(g, bk)
+    # never-fire sentinel padding (x' = w' = 0) along the window axis …
+    x4 = jnp.pad(xq.q, ((0, 0), (0, 0), (0, 0), (0, gp - g)),
+                 constant_values=-128)
+    w4 = jnp.pad(wq.q, ((0, 0), (0, gp - g), (0, 0)), constant_values=-128)
+    x2 = x4.reshape(B, M, nw * gp)
+    w2 = w4.reshape(nw * gp, N)
+    sx = xq.scale.reshape(B, M, nw)
+    sw = wq.scale.reshape(nw, N)
+    # … and along M/N (pad rows/cols never read back; scales padded with 0)
+    padm, padn = _round_up(M, bm) - M, _round_up(N, bn) - N
+    if padm:
+        x2 = jnp.pad(x2, ((0, 0), (0, padm), (0, 0)), constant_values=-128)
+        sx = jnp.pad(sx, ((0, 0), (0, padm), (0, 0)))
+    if padn:
+        w2 = jnp.pad(w2, ((0, 0), (0, padn)), constant_values=-128)
+        sw = jnp.pad(sw, ((0, 0), (0, padn)))
+    out = _fused_call(x2.astype(jnp.int8), w2.astype(jnp.int8), sx, sw, cfg,
+                      g=g, bm=bm, bn=bn, bk=bk, bits=bits,
+                      interpret=interpret)
+    return out[:, :M, :N].reshape(*lead, N)
+
+
+def dscim_windowed_vmap_mvm(x, w, cfg: DSCIMConfig, *,
+                            group_k: int | None = 128,
+                            interpret: bool | None = None):
+    """The pre-fusion staged path, kept as the perf A/B baseline: one
+    blocked-kernel launch per window via vmap, psum (M, nw, N) staged in
+    HBM, corrections and dequant applied in separate f32 passes."""
+    from .ops import ON_TPU
+    interpret = (not ON_TPU) if interpret is None else interpret
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    N = w.shape[-1]
+    x2 = x.reshape(-1, K)
+    xq, wq, nw, g = _window_quantize(x2[None], w, group_k)
+    xw = xq.q[0].astype(jnp.int32)                 # (M, nw, g)
+    ww = wq.q.astype(jnp.int32)                    # (nw, g, N)
+    M = xw.shape[0]
+    bm = min(128, _round_up(M, 8))
+    bn = min(128, _round_up(N, 8))
+    bk = min(16, g)
+    gp = _round_up(g, bk)
+
+    def one_window(xg, wg):                        # (M, g), (g, N)
+        xp = jnp.pad(xg, ((0, _round_up(M, bm) - M), (0, gp - g)),
+                     constant_values=-128)
+        wp = jnp.pad(wg, ((0, gp - g), (0, _round_up(N, bn) - N)),
+                     constant_values=-128)
+        counts = dscim_counts_blocked(
+            xp.astype(jnp.int8), wp.astype(jnp.int8), cfg, bm=bm, bn=bn,
+            bk=bk, interpret=interpret)[:M, :N]
+        psum = cfg.scale * counts \
+            - 128.0 * jnp.sum(xg, axis=-1, keepdims=True) \
+            - 128.0 * jnp.sum(wg + 128, axis=0, keepdims=True)
+        if cfg.trunc == "center":
+            delta = (2 ** cfg.k - 1) / 2.0
+            a = (xg + 128) >> cfg.k
+            b = (wg + 128) >> cfg.k
+            psum = psum + (2 ** cfg.k) * delta * (
+                jnp.sum(a, axis=-1, keepdims=True)
+                + jnp.sum(b, axis=0, keepdims=True)) + g * delta * delta
+        return psum
+
+    psum = jax.vmap(one_window, in_axes=(1, 0), out_axes=1)(xw, ww)
+    out = jnp.einsum("mun,mu,un->mn", psum, xq.scale.reshape(-1, nw),
+                     wq.scale.reshape(nw, N))
+    return out.reshape(*lead, N).astype(jnp.float32)

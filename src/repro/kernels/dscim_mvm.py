@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.remap import row_block
+
 __all__ = ["dscim_counts_pallas"]
 
 
@@ -44,11 +46,9 @@ def _kernel(x_ref, w_ref, cu_ref, lu_ref, cv_ref, lv_ref, out_ref, *,
     b = (w + 128) >> k
 
     # row -> block wiring: global row index mod 4^k, split into (bc, br)
-    n = 1 << k
     rows = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bk,), 0)
     blk = rows % (4 ** k)
-    bc = blk % n                              # u-axis block code per row
-    br = blk // n                             # v-axis block code per row
+    bc, br = row_block(blk, k)                # (u, v) block codes per row
 
     bm = x.shape[0]
     bn = w.shape[1]

@@ -27,7 +27,7 @@ from jax.experimental import pallas as pl
 
 from repro.core.macro import DSCIMConfig
 from repro.core import prng as prng_lib
-from repro.core.remap import fold, shifted_bits
+from repro.core.remap import fold, point_block, shifted_bits
 
 __all__ = ["block_point_tables", "dscim_counts_blocked"]
 
@@ -40,11 +40,9 @@ def block_point_tables(cfg: DSCIMConfig):
                                 cfg.seed_v, cfg.param_u, cfg.param_v)
     cu, lu = fold(u.astype(np.int32), cfg.k)
     cv, lv = fold(v.astype(np.int32), cfg.k)
-    n = 1 << cfg.k
     G = cfg.group
     S = shifted_bits(cfg.k)
-    blk = cu * 0
-    blk = cv * n + cu          # row block code (bc=cu-code, br=cv-code)
+    blk = point_block(cu, cv, cfg.k)   # owning row of each sampling point
     counts = np.bincount(blk, minlength=G)
     pmax = max(int(counts.max()), 1)
     # round pmax up so bk*pmax hits a lane-friendly contraction size

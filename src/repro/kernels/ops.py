@@ -42,7 +42,7 @@ def fold_constants(cfg: DSCIMConfig):
 
 def dscim_mvm(x_i8, w_i8, cfg: DSCIMConfig, *, bm: int = 128, bn: int = 128,
               bk: int = 8, bl: int | None = None,
-              interpret: bool | None = None):
+              interpret: bool | None = None, tune: bool = False):
     """Full DS-CIM psum estimate via the Pallas kernel (float32 (M,N)).
 
     Pads (M, K, N) to tile multiples; the int8 zero-padding contributes
@@ -54,9 +54,13 @@ def dscim_mvm(x_i8, w_i8, cfg: DSCIMConfig, *, bm: int = 128, bn: int = 128,
     Simpler and exact: we pad K with x=-128 (x'=0) so pad rows never fire.
     """
     interpret = (not ON_TPU) if interpret is None else interpret
-    bl = bl or min(cfg.length, 128)
     M, K = x_i8.shape
     N = w_i8.shape[1]
+    if tune:
+        from . import autotune
+        bm, bn, bk, bl = autotune.mvm_tiles((M, K, N), cfg,
+                                            interpret=interpret)
+    bl = bl or min(cfg.length, 128)
     # K padding with x' = 0 (x = -128): abit always 0 -> zero contribution.
     padk = (-K) % bk
     if padk:

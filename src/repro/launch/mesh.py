@@ -12,24 +12,32 @@ import jax
 
 from repro.parallel import ParallelCtx
 
-__all__ = ["make_production_mesh", "make_parallel_ctx", "make_debug_mesh"]
+__all__ = ["make_mesh", "make_production_mesh", "make_parallel_ctx",
+           "make_debug_mesh"]
+
+
+def make_mesh(shape, axes):
+    """Version-portable jax.make_mesh: jax.sharding.AxisType only exists on
+    newer jax; Auto is the default axis type there anyway, so omit the
+    kwarg when unavailable.  Shared by launch and runtime mesh builders."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_debug_mesh(data: int = 2, model: int = 2, pod: int = 0):
     """Small mesh for CI-grade machinery tests (8 fake devices)."""
     if pod:
-        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        return make_mesh((pod, data, model), ("pod", "data", "model"))
+    return make_mesh((data, model), ("data", "model"))
 
 
 def make_parallel_ctx(mesh, sp: bool = False) -> ParallelCtx:

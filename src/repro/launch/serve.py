@@ -3,7 +3,11 @@ approximate-MVM path as a first-class serving option (--dscim).
 
 DS-CIM modes map to DSCIMLinear backends (core/dscim_layer.py):
   exact        — int8 adder-tree baseline (DCIM)
-  lut          — bit-exact DS-CIM emulation (joint-count LUT)
+  lut          — bit-exact DS-CIM emulation (joint-count LUT, the oracle)
+  kernel       — the serving hot path: fused single-launch Pallas kernel
+                 (kernels/dscim_fused.py) — all quantization windows, sign
+                 corrections and dequant scales in one launch, batch dims
+                 on a batch grid axis, no (M, nw, N) psum in HBM
   paper_inject — paper-style per-output error injection (fast)
 The serve report compares greedy tokens + logit RMSE against the float
 path, which is the model-level reproduction of the paper's Table II
@@ -49,7 +53,8 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--dscim", default="off",
-                    help="off | <mode>:<variant>:<L>  e.g. lut:dscim1:256")
+                    help="off | <mode>:<variant>:<L>  e.g. kernel:dscim1:256 "
+                         "(fused Pallas hot path) or lut:dscim1:256 (oracle)")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)

@@ -27,9 +27,9 @@ def mlp(params, x, kind: str = "swiglu", linear=None):
     def mm(a, w):
         if linear is None:
             return a @ w
-        lead = a.shape[:-1]
-        y = linear(a.reshape(-1, a.shape[-1]), w)
-        return y.reshape(*lead, -1).astype(a.dtype)
+        # DSCIMLinear consumes (..., K) natively (the fused kernel maps
+        # leading dims onto a batch grid axis — no flatten round-trip)
+        return linear(a, w).astype(a.dtype)
 
     if kind == "swiglu":
         h = jax.nn.silu(mm(x, params["w_gate"])) * mm(x, params["w_up"])

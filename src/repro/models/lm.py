@@ -24,7 +24,7 @@ from repro.layers.attention import (attention, decode_attention,
 from repro.layers.mlp import init_mlp, mlp
 from repro.layers.moe import init_moe, moe, moe_local
 from repro.layers.norms import init_rmsnorm, layernorm, rmsnorm
-from repro.parallel import ParallelCtx
+from repro.parallel import ParallelCtx, shard_map
 
 __all__ = ["init_params", "forward", "prefill", "decode", "cache_specs",
            "lm_loss"]
@@ -41,6 +41,10 @@ def _linear_for(dscim_spec: str):
         return None
     from repro.core.dscim_layer import make_linear
     parts = dscim_spec.split(":")
+    if len(parts) < 3:
+        raise ValueError(f"bad dscim spec {dscim_spec!r}; want "
+                         "'<mode>:<variant>:<L>[:calib]', e.g. "
+                         "'kernel:dscim1:256'")
     mode, variant, length = parts[0], parts[1], int(parts[2])
     calib = parts[3] if len(parts) > 3 else "paper"
     return make_linear(variant, length, mode, calib)
@@ -128,11 +132,10 @@ def _moe_apply(lp_moe, h, cfg: ArchConfig, par: ParallelCtx | None):
                        has_shared=cfg.moe_shared > 0)
         return out, jax.lax.pmean(aux, (*dp, tp))
 
-    return jax.shard_map(
+    return shard_map(
         inner, mesh=par.mesh,
         in_specs=(pspecs, P(dp, None, None)),
         out_specs=(P(dp, None, None), P()),
-        check_vma=False,
     )(lp_moe, h)
 
 
@@ -169,10 +172,8 @@ def _head(params, cfg: ArchConfig, x):
         w = params["lm_head"].astype(x.dtype)
     lin = _linear_for(cfg.dscim)
     if lin is not None:
-        lead = x.shape[:-1]
-        y = lin(x.reshape(-1, x.shape[-1]).astype(jnp.float32),
-                w.astype(jnp.float32))
-        return y.reshape(*lead, -1).astype(jnp.float32)
+        return lin(x.astype(jnp.float32),
+                   w.astype(jnp.float32)).astype(jnp.float32)
     return (x @ w).astype(jnp.float32)
 
 

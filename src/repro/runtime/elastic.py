@@ -8,22 +8,19 @@ from __future__ import annotations
 
 import os
 
-import jax
+from repro.launch.mesh import make_mesh
 
 __all__ = ["mesh_from_env"]
 
 
 def mesh_from_env(default: str = "pod16x16"):
     spec = os.environ.get("REPRO_MESH", default)
-    auto = jax.sharding.AxisType.Auto
     if spec == "pod16x16":
-        return jax.make_mesh((16, 16), ("data", "model"),
-                             axis_types=(auto,) * 2)
+        return make_mesh((16, 16), ("data", "model"))
     if spec == "pod2x16x16":
-        return jax.make_mesh((2, 16, 16), ("pod", "data", "model"),
-                             axis_types=(auto,) * 3)
+        return make_mesh((2, 16, 16), ("pod", "data", "model"))
     if spec.startswith("d"):                       # e.g. d2x2 for tests
         dims = tuple(int(x) for x in spec[1:].split("x"))
         names = ("data", "model")[:len(dims)]
-        return jax.make_mesh(dims, names, axis_types=(auto,) * len(dims))
+        return make_mesh(dims, names)
     raise ValueError(f"unknown REPRO_MESH={spec!r}")

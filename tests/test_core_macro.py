@@ -3,7 +3,7 @@ bands, truncation-correction behavior."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.macro import DSCIMMacro, dscim1, dscim2
 from repro.core.seed_search import calibrated_config, rmse_numpy

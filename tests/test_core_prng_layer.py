@@ -127,7 +127,7 @@ def test_fig6c_naive_or_saturates_dscim_does_not():
 
 
 def test_kernel_mode_matches_lut():
-    """DSCIMLinear 'kernel' backend (blocked-points Pallas) == 'lut'."""
+    """DSCIMLinear 'kernel' backend (fused single-launch Pallas) == 'lut'."""
     rng = np.random.default_rng(5)
     x = jnp.asarray(rng.normal(0, 1, (4, 256)), jnp.float32)
     w = jnp.asarray(rng.normal(0, 0.1, (256, 16)), jnp.float32)

@@ -3,11 +3,11 @@ after remapping, a shared sampling point activates at most one row per OR
 group, for ALL data (Sec. IV-B)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import ormac, prng
 from repro.core.remap import (build_count_lut, fires, fold, group_size,
-                              row_block, shifted_bits)
+                              point_block, row_block, shifted_bits)
 
 
 @pytest.mark.parametrize("k", [1, 2, 3])
@@ -75,3 +75,37 @@ def test_row_block_wiring():
     bc, br = row_block(np.arange(16), 2)
     assert sorted(zip(bc.tolist(), br.tolist())) == [
         (i, j) for i in range(4) for j in range(4)]
+
+
+@pytest.mark.parametrize("k", [1, 2, 3])
+def test_point_block_inverts_row_block(k):
+    """point_block is the inverse pairing of row_block: a point whose folded
+    codes equal row g's block lands back on row g."""
+    g = np.arange(group_size(k))
+    bc, br = row_block(g, k)
+    np.testing.assert_array_equal(point_block(bc, br, k), g)
+
+
+@pytest.mark.parametrize("variant,L", [("dscim1", 256), ("dscim2", 64)])
+def test_kernels_agree_on_wiring(variant, L):
+    """The baseline (row->(bc,br) compare) and blocked-points (point->row
+    table) kernels derive their wiring from the same remap helpers — their
+    count matrices must agree exactly."""
+    import jax.numpy as jnp
+
+    from repro.core.seed_search import calibrated_config
+    from repro.kernels.dscim_mvm import dscim_counts_pallas
+    from repro.kernels.dscim_mvm_blocked import dscim_counts_blocked
+    from repro.kernels.ops import fold_constants
+
+    cfg = calibrated_config(variant, L, "paper")
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.integers(-128, 128, (16, 128)), jnp.int8)
+    w = jnp.asarray(rng.integers(-128, 128, (128, 16)), jnp.int8)
+    cu, lu, cv, lv = fold_constants(cfg)
+    base = np.asarray(dscim_counts_pallas(
+        x, w, cu, lu, cv, lv, k=cfg.k, length=cfg.length,
+        bm=16, bn=16, bk=8, bl=min(cfg.length, 64)))
+    blocked = np.asarray(dscim_counts_blocked(x, w, cfg, bm=16, bn=16,
+                                              bk=16))
+    np.testing.assert_array_equal(base, blocked)

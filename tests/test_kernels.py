@@ -4,7 +4,7 @@ kernel == ref == LUT == cycle-accurate OR-MAC."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.macro import DSCIMMacro
 from repro.core.seed_search import calibrated_config

@@ -1,0 +1,117 @@
+"""Fused batched DS-CIM MVM kernel (kernels/dscim_fused.py) vs the ``lut``
+oracle: batched inputs, all quantization granularities, odd/unpadded shapes,
+both calibrated macro variants, center truncation — plus the staged
+vmap-per-window baseline it replaces and the tile autotuner."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dscim_layer import DSCIMLinear
+from repro.core.macro import dscim1
+from repro.core.seed_search import calibrated_config
+from repro.kernels.dscim_fused import dscim_fused_mvm, dscim_windowed_vmap_mvm
+
+
+def _assert_matches(got, want):
+    """Identical estimator up to f32 summation-order rounding."""
+    scale = max(float(np.abs(want).max()), 1.0)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5 * scale)
+
+
+def _operands(rng, shape, K, N):
+    x = jnp.asarray(rng.normal(0, 1, (*shape, K)), jnp.float32)
+    w = jnp.asarray(rng.normal(0, 1, (K, N)), jnp.float32)
+    return x, w
+
+
+@pytest.mark.parametrize("group_k", [None, 64, 128])
+@pytest.mark.parametrize("variant,L,calib", [("dscim1", 256, "paper"),
+                                             ("dscim2", 64, "paper")])
+def test_fused_vs_lut_group_granularities(group_k, variant, L, calib):
+    cfg = calibrated_config(variant, L, calib)
+    rng = np.random.default_rng(L + cfg.k * 1000 + (group_k or 0))
+    x, w = _operands(rng, (6,), 200, 24)
+    want = np.asarray(DSCIMLinear(cfg, mode="lut", group_k=group_k)(x, w))
+    got = np.asarray(dscim_fused_mvm(x, w, cfg, group_k=group_k))
+    _assert_matches(got, want)
+
+
+@pytest.mark.parametrize("shape", [(3, 100, 17), (5, 130, 9), (1, 64, 1)])
+def test_fused_odd_unpadded_shapes(shape):
+    M, K, N = shape
+    cfg = calibrated_config("dscim1", 256, "paper")
+    rng = np.random.default_rng(sum(shape))
+    x, w = _operands(rng, (M,), K, N)
+    want = np.asarray(DSCIMLinear(cfg, mode="lut", group_k=128)(x, w))
+    got = np.asarray(dscim_fused_mvm(x, w, cfg, group_k=128))
+    _assert_matches(got, want)
+
+
+@pytest.mark.parametrize("lead", [(2, 3), (2, 2, 4)])
+def test_fused_batched_native(lead):
+    """Leading batch dims ride the batch grid axis — output matches the
+    flattened lut path exactly."""
+    cfg = calibrated_config("dscim2", 64, "paper")
+    rng = np.random.default_rng(len(lead))
+    x, w = _operands(rng, lead, 150, 20)
+    want = np.asarray(DSCIMLinear(cfg, mode="lut", group_k=64)(x, w))
+    got = np.asarray(dscim_fused_mvm(x, w, cfg, group_k=64))
+    assert got.shape == (*lead, 20)
+    _assert_matches(got, want)
+
+
+def test_fused_center_truncation():
+    cfg = dscim1(256, points="sobol", seed_u=0, seed_v=60, trunc="center")
+    rng = np.random.default_rng(9)
+    x, w = _operands(rng, (4,), 130, 11)
+    want = np.asarray(DSCIMLinear(cfg, mode="lut", group_k=64)(x, w))
+    got = np.asarray(dscim_fused_mvm(x, w, cfg, group_k=64))
+    _assert_matches(got, want)
+
+
+def test_fused_bf16_equals_f32_bits():
+    """{0,1} operands are exact in bf16; f32 accumulation keeps counts exact
+    — the two bit-dtype paths must agree bit-for-bit."""
+    cfg = calibrated_config("dscim1", 256, "paper")
+    rng = np.random.default_rng(13)
+    x, w = _operands(rng, (4,), 140, 12)
+    bf = np.asarray(dscim_fused_mvm(x, w, cfg, bits="bfloat16"))
+    f32 = np.asarray(dscim_fused_mvm(x, w, cfg, bits="float32"))
+    np.testing.assert_array_equal(bf, f32)
+
+
+def test_staged_vmap_baseline_matches_lut():
+    """The kept perf A/B baseline (pre-fusion staged path) stays bit-exact
+    vs the lut oracle."""
+    cfg = calibrated_config("dscim1", 256, "paper")
+    rng = np.random.default_rng(17)
+    x, w = _operands(rng, (5,), 200, 16)
+    want = np.asarray(DSCIMLinear(cfg, mode="lut", group_k=128)(x, w))
+    got = np.asarray(dscim_windowed_vmap_mvm(x, w, cfg, group_k=128))
+    _assert_matches(got, want)
+
+
+def test_kernel_mode_routes_to_fused():
+    """DSCIMLinear.mode='kernel' is the fused path (same numbers)."""
+    cfg = calibrated_config("dscim2", 64, "paper")
+    rng = np.random.default_rng(21)
+    x, w = _operands(rng, (2, 3), 100, 10)
+    via_layer = np.asarray(DSCIMLinear(cfg, mode="kernel", group_k=128)(x, w))
+    direct = np.asarray(dscim_fused_mvm(x, w, cfg, group_k=128))
+    np.testing.assert_array_equal(via_layer, direct)
+
+
+def test_autotuner_caches_and_matches():
+    from repro.kernels import autotune
+
+    autotune.clear()
+    cfg = calibrated_config("dscim1", 256, "paper")
+    rng = np.random.default_rng(23)
+    x, w = _operands(rng, (8,), 64, 8)
+    want = np.asarray(DSCIMLinear(cfg, mode="lut", group_k=64)(x, w))
+    got = np.asarray(dscim_fused_mvm(x, w, cfg, group_k=64, tune=True))
+    _assert_matches(got, want)
+    assert len(autotune._CACHE) == 1
+    # second call hits the cache (same key, no new entries)
+    dscim_fused_mvm(x, w, cfg, group_k=64, tune=True)
+    assert len(autotune._CACHE) == 1

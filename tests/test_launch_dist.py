@@ -110,7 +110,8 @@ def test_moe_ep_shard_map_numerics():
             out, aux = moe(p_, x_, top_k=2, capacity_factor=8.0,
                            ep_axis="model", has_shared=True)
             return out
-        f = jax.shard_map(inner, mesh=mesh,
+        from repro.parallel import shard_map
+        f = shard_map(inner, mesh=mesh,
             in_specs=({"router": P(None, None),
                        "experts": {"w_gate": P("model", None, None),
                                    "w_up": P("model", None, None),
@@ -119,7 +120,7 @@ def test_moe_ep_shard_map_numerics():
                                   "w_up": P(None, None),
                                   "w_down": P(None, None)}},
                       P("data", None, None)),
-            out_specs=P("data", None, None), check_vma=False)
+            out_specs=P("data", None, None))
         got = f(p, x)
         np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                    atol=2e-5)
@@ -134,8 +135,8 @@ def test_hlo_cost_analyzer_loop_exactness():
         import jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
         from repro.launch.hlo_cost import analyze_hlo
-        mesh = jax.make_mesh((2, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_debug_mesh
+        mesh = make_debug_mesh(2, 2)
         D, F, L, B = 64, 128, 5, 16
         def f(w1, w2, x):
             def body(h, ws):
