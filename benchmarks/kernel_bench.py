@@ -8,11 +8,17 @@ Headline A/B rows (ISSUE 1 acceptance):
     replaced, with the removed HBM traffic (the (M, nw, N) psum round-trip)
     reported in the derived roofline fields;
   * bf16 vs f32 bit-expansion operands inside the fused kernel.
+
+Prepare-once rows (ISSUE 2): fused MVM with prepared (resident int8)
+weights vs per-call weight quantization at serve decode shapes (M=1..16) —
+the derived fields record the float-weight HBM reads and quantization work
+the prepared path removes from every decode step.
 """
 from __future__ import annotations
 
 import sys
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -113,6 +119,39 @@ def run(smoke: bool = False):
         "us": us_fused,
         "derived": (f"launches=1;speedup_vs_staged={us_staged / us_fused:.2f}x;"
                     f"{shared}")})
+
+    # --- prepared (quantize-once) weights vs per-call quantization --------
+    # serve decode shapes: tiny M, weight-dominated — exactly where per-call
+    # weight requantization burns the most relative time/traffic
+    from repro.core.qweights import prepare_linear_weight
+    from repro.kernels.dscim_fused import dscim_fused_mvm_prepared
+    Kd, Nd = (128, 64) if smoke else (512, 128)
+    for Md in ([1] if smoke else [1, 8, 16]):
+        xd = jnp.asarray(rng.normal(0, 1, (Md, Kd)), jnp.float32)
+        wd = jnp.asarray(rng.normal(0, 1, (Kd, Nd)), jnp.float32)
+        qd = prepare_linear_weight(wd, group_k)
+        # time the jitted step — the serving regime, where per-call weight
+        # quantization lives inside the traced graph and prepare-once does not
+        f_percall = jax.jit(
+            lambda a, b: dscim_fused_mvm(a, b, cfg, group_k=group_k))
+        f_prep = jax.jit(lambda a, q: dscim_fused_mvm_prepared(a, q, cfg))
+        us_percall = timed(lambda: f_percall(xd, wd), n=reps)
+        us_prep = timed(lambda: f_prep(xd, qd), n=reps)
+        nwd = -(-Kd // group_k)
+        # per decode step the prepared path drops: the f32 weight read, the
+        # K*N quantize (abs/max/div/round) and the int8 plane write-back
+        wq_bytes = 4 * Kd * Nd + Kd * Nd
+        shared_d = (f"g{group_k};wquant_removed_bytes={wq_bytes}B;"
+                    f"wquant_removed_ops={Kd * Nd};"
+                    f"tpu_t_wquant_mem={wq_bytes / HBM:.2e}s")
+        rows.append({
+            "name": f"kernel/dscim_wquant_percall/decode/{Md}x{Kd}x{Nd}",
+            "us": us_percall, "derived": f"nw={nwd};{shared_d}"})
+        rows.append({
+            "name": f"kernel/dscim_prepared/decode/{Md}x{Kd}x{Nd}",
+            "us": us_prep,
+            "derived": (f"speedup_vs_percall={us_percall / us_prep:.2f}x;"
+                        f"{shared_d}")})
 
     # --- bf16 vs f32 bit-expansion operands in the fused kernel -----------
     us_bf16 = timed(lambda: dscim_fused_mvm(

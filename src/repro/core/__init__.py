@@ -9,8 +9,12 @@ Layering:
   seed_search — Sec. IV-C PRNG/seed optimization + calibrated presets
   error_model — calibrated statistical injection (big-model fast path)
   dscim_layer — DSCIMLinear: drop-in quantized linear for the LM framework
+  qweights  — prepared (quantize-once) weights: the CIM array's resident
+              int8 storage as a pytree; serve-startup param-tree conversion
   hwmodel   — analytical 40nm energy/area model (Tables III, Figs. 4/7)
 """
 from .macro import DSCIMConfig, DSCIMMacro, dscim1, dscim2  # noqa: F401
 from .dscim_layer import DSCIMLinear, make_linear           # noqa: F401
+from .qweights import (QuantizedLinearWeight,               # noqa: F401
+                       prepare_dscim_params, prepare_linear_weight)
 from .seed_search import calibrated_config                  # noqa: F401

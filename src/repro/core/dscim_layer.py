@@ -12,11 +12,25 @@ computes the matmul the way a DS-CIM accelerator would:
                      grid, sign-correction + dequant in-kernel, batched;
 * ``statistical``  — calibrated Gaussian injection (fast big-model path).
 
+Every backend accepts ``w`` as either a float ``(K, N)`` matrix (training /
+tests: quantized on the fly per call) or a prepared
+``core.qweights.QuantizedLinearWeight`` (serving: the int8 window planes and
+per-window scales are resident, mirroring the CIM array's static int8
+storage — only activations are quantized per call).  The two are
+bit-identical; ``prepare_dscim_params`` converts a whole param tree once at
+serve startup.
+
 The hardware accumulates in windows of ``cfg.rows`` (=128) physical rows and
 sums window results digitally (exact), so K > 128 decomposes into exact sums
 of 128-row stochastic MACs — which is what all backends implement (the error
 process is per-row i.i.d.-across-windows, so no explicit windowing is needed
 for lut/bitmatmul; ``statistical`` scales moments by K directly).
+
+Noise keys (``statistical`` / ``paper_inject``): when no explicit ``key`` is
+threaded from the serve/train step, the fallback key folds in the operand
+shape and the call-site ``salt`` (layer index × matmul site, threaded by
+models/lm.py) — distinct layers and distinct matmuls inside one layer draw
+distinct noise instead of replaying PRNGKey(0) everywhere.
 """
 from __future__ import annotations
 
@@ -30,6 +44,7 @@ import numpy as np
 from .error_model import ErrorModel
 from .macro import DSCIMConfig, DSCIMMacro
 from .quant import quantize_int8
+from .qweights import QuantizedLinearWeight
 from .seed_search import calibrated_config
 
 __all__ = ["DSCIMLinear", "make_linear"]
@@ -53,6 +68,7 @@ class DSCIMLinear:
     mode: Mode = "lut"
     group_k: int | None = 128
     tune: bool = False              # kernel mode: autotune fused-kernel tiles
+    seed: int = 0                   # base of the fallback noise key
 
     def __post_init__(self):
         self.macro = DSCIMMacro(self.cfg)
@@ -71,27 +87,69 @@ class DSCIMLinear:
         nw = x2.shape[1] // g
         return x2.reshape(M, nw, g), w2.reshape(nw, g, -1), nw, g
 
-    def __call__(self, x, w, key=None):
-        """x: (..., K) float; w: (K, N) float -> (..., N) float32."""
+    def _check_prepared(self, x, qw: QuantizedLinearWeight):
+        K = x.shape[-1]
+        if qw.k_orig != K:
+            raise ValueError(f"prepared weight K={qw.k_orig} vs x K={K}")
+        g = self.group_k or K
+        if qw.g != g:
+            raise ValueError(
+                f"prepared weight granularity g={qw.g} does not match the "
+                f"layer's group_k={self.group_k} (effective g={g}); "
+                "re-run prepare_dscim_params with the serving group_k")
+
+    def _resolve_key(self, key, salt, K: int, N: int):
+        """Explicit key wins (salt still decorrelates call sites sharing
+        one key); the fallback key folds in shape + call-site salt."""
+        if key is None:
+            key = jax.random.PRNGKey(self.seed)
+            key = jax.random.fold_in(jax.random.fold_in(key, K), N)
+        if salt is not None:
+            key = jax.random.fold_in(key, salt)
+        return key
+
+    def __call__(self, x, w, key=None, *, salt=None):
+        """x: (..., K) float; w: (K, N) float or QuantizedLinearWeight
+        -> (..., N) float32.  ``salt``: static or traced int decorrelating
+        the fallback noise key across call sites (see module docstring)."""
+        prepared = isinstance(w, QuantizedLinearWeight)
         if self.mode == "float":
+            if prepared:
+                raise TypeError("mode='float' needs float weights; "
+                                "don't prepare params for the float path")
             return x @ w
         if self.mode == "kernel":
             # fused single-launch Pallas path: quantization windows iterate
             # inside the kernel grid; sign-correction terms and per-window
             # dequant scales are applied in-kernel, leading batch dims ride
             # a batch grid axis (kernels/dscim_fused.py).
-            from repro.kernels.dscim_fused import dscim_fused_mvm
+            from repro.kernels.dscim_fused import (dscim_fused_mvm,
+                                                   dscim_fused_mvm_prepared)
+            if prepared:
+                self._check_prepared(x, w)
+                return dscim_fused_mvm_prepared(x, w, self.cfg,
+                                                tune=self.tune)
             return dscim_fused_mvm(x, w, self.cfg, group_k=self.group_k,
                                    tune=self.tune)
         lead = x.shape[:-1]
         K = x.shape[-1]
-        N = w.shape[-1]
         xf = x.reshape(-1, K)
-        x3, w3, nw, g = self._windowed(xf, w)          # float windows
+        if prepared:
+            self._check_prepared(x, w)
+            nw, g, N = w.nw, w.g, w.n
+            pad = nw * g - K
+            x3 = jnp.pad(xf, ((0, 0), (0, pad))) if pad else xf
+            x3 = x3.reshape(-1, nw, g)
+            w2 = w.q.astype(jnp.int32)                 # (nw,g,N) resident
+            wscale = w.scale                           # (nw,N) resident
+        else:
+            N = w.shape[-1]
+            x3, w3, nw, g = self._windowed(xf, w)      # float windows
+            wq = quantize_int8(w3, axis=1)             # (nw,1,N) scales
+            w2 = wq.q.astype(jnp.int32)                # (nw,g,N)
+            wscale = wq.scale.reshape(nw, N)
         xq = quantize_int8(x3, axis=-1)                # (M,nw,1) scales
-        wq = quantize_int8(w3, axis=1)                 # (nw,1,N) scales
         x2 = xq.q.astype(jnp.int32)                    # (M,nw,g)
-        w2 = wq.q.astype(jnp.int32)                    # (nw,g,N)
         if self.mode == "exact":
             psum = jnp.einsum("mug,ugn->mun", x2, w2).astype(jnp.float32)
         elif self.mode in ("lut", "bitmatmul"):
@@ -103,22 +161,22 @@ class DSCIMLinear:
             psum = mvm_w(x2, w2)                       # (M,nw,N)
         elif self.mode == "statistical":
             psum = jnp.einsum("mug,ugn->mun", x2, w2).astype(jnp.float32)
-            key = key if key is not None else jax.random.PRNGKey(0)
-            psum = self._errmodel.inject(psum, key, g)
+            psum = self._errmodel.inject(
+                psum, self._resolve_key(key, salt, K, N), g)
         elif self.mode == "paper_inject":
             psum = jnp.einsum("mug,ugn->mun", x2, w2).astype(jnp.float32)
         else:
             raise ValueError(self.mode)
         out = jnp.einsum("mun,mu,un->mn", psum,
-                         xq.scale.reshape(-1, nw), wq.scale.reshape(nw, N))
+                         xq.scale.reshape(-1, nw), wscale)
         if self.mode == "paper_inject":
             # Sec. V convention: one 128-row-window error magnitude added per
             # *output* of the MVM result, in float units of the mean window
             # scale (see EXPERIMENTS.md §Calibration-notes).
-            key = key if key is not None else jax.random.PRNGKey(0)
+            key = self._resolve_key(key, salt, K, N)
             rows = self.macro.cfg.rows
             s = (jnp.mean(xq.scale.reshape(-1, nw), axis=1, keepdims=True)
-                 * jnp.mean(wq.scale.reshape(nw, N), axis=0, keepdims=True))
+                 * jnp.mean(wscale, axis=0, keepdims=True))
             noise = (self._errmodel.mu1 * rows
                      + self._errmodel.sig1 * float(np.sqrt(rows))
                      * jax.random.normal(key, out.shape, out.dtype))

@@ -33,9 +33,16 @@ class QuantizedTensor(tuple):
 
 
 def quantize_int8(x, axis=-1, eps: float = 1e-8) -> QuantizedTensor:
-    """Symmetric per-channel int8: q = round(x / s), s = max|x| / 127."""
+    """Symmetric per-channel int8: q = round(x / s), s = max|x| / 127.
+
+    The scale is computed as ``amax * (1/127)`` — written as an explicit
+    reciprocal multiply because XLA's algebraic simplifier rewrites
+    divide-by-constant into exactly that inside jitted graphs; spelling it
+    out makes eager quantization (the prepare-once weight path,
+    core/qweights.py) bit-identical to in-graph quantization (the on-the-fly
+    path), instead of differing by 1 ulp on borderline values."""
     amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
-    scale = jnp.maximum(amax, eps) / 127.0
+    scale = jnp.maximum(amax, eps) * (1.0 / 127.0)
     q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
     return QuantizedTensor(q, scale.astype(jnp.float32), axis)
 

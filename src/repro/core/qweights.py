@@ -1,0 +1,185 @@
+"""Prepared (quantize-once) DS-CIM linear weights.
+
+The paper's macro stores weights as static int8 in the CIM array: weight
+quantization happens once, when the array is programmed, never per MVM.
+This module is the software twin of that property — a
+``QuantizedLinearWeight`` pytree holding the window-packed int8 planes and
+per-window dequant scales that a real DS-CIM chip keeps resident, plus a
+``prepare_dscim_params`` tree-walk that converts every DS-CIM-eligible
+matrix of a model's param tree once at serve startup.
+
+All ``DSCIMLinear`` backends and the fused Pallas kernel accept either a
+float ``(K, N)`` matrix (training / tests — quantized on the fly, the old
+behavior) or a ``QuantizedLinearWeight`` (serving — only activations are
+quantized per call).  The two paths are bit-identical by construction:
+``prepare_linear_weight`` is exactly the weight half of the old joint
+quantization (pad K with float zeros to a whole number of ``group_k``
+windows *before* quantizing, one symmetric int8 scale per window).
+
+Layout (matching the macro's 128-row accumulation windows):
+
+* ``q``     — int8 ``(*stack, nw, g, N)`` window planes; ``stack`` carries
+              scan-stacked layer dims (slicing under ``lax.scan`` preserves
+              the pytree aux data, so a stacked weight slices into per-layer
+              prepared weights for free);
+* ``scale`` — f32 ``(*stack, nw, N)`` per-window dequant scales — these
+              shard together with ``q`` on the N axis (launch/sharding.py);
+* ``k_orig``/``group_k`` — static pad metadata: the unpadded contraction
+              length and the requested window granularity.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .quant import quantize_int8
+
+__all__ = ["QuantizedLinearWeight", "prepare_linear_weight",
+           "dequantize_linear_weight", "prepare_dscim_params",
+           "split_dscim_mode", "path_str",
+           "ELIGIBLE_PATTERNS", "ATTN_PATTERNS"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedLinearWeight:
+    """Window-packed int8 weight planes + per-window scales (see module
+    docstring).  A registered pytree: ``q``/``scale`` are children, the pad
+    metadata is static aux data — so jit/scan/shard_map treat it natively.
+    """
+    q: Any             # int8 (*stack, nw, g, N)
+    scale: Any         # f32  (*stack, nw, N)
+    k_orig: int        # unpadded K (static)
+    group_k: int | None  # requested quantization granularity (static)
+
+    def tree_flatten(self):
+        return (self.q, self.scale), (self.k_orig, self.group_k)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], *aux)
+
+    # --- logical float-matrix view (so call sites like ``w.shape[1]`` and
+    # --- stacked-layer slicing keep working unchanged) ---------------------
+    @property
+    def nw(self) -> int:
+        return self.q.shape[-3]
+
+    @property
+    def g(self) -> int:
+        return self.q.shape[-2]
+
+    @property
+    def n(self) -> int:
+        return self.q.shape[-1]
+
+    @property
+    def stack(self) -> tuple:
+        return tuple(self.q.shape[:-3])
+
+    @property
+    def shape(self) -> tuple:
+        return (*self.stack, self.k_orig, self.n)
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+
+def prepare_linear_weight(w, group_k: int | None = 128
+                          ) -> QuantizedLinearWeight:
+    """Float ``(*stack, K, N)`` -> prepared weight (quantize once).
+
+    Bit-identical to the on-the-fly path: K is padded with float zeros to a
+    whole number of ``group_k`` windows *before* quantizing, and each window
+    gets one symmetric int8 scale over its (g, 1) slice.
+    """
+    *stack, K, N = w.shape
+    g = group_k or K
+    pad = (-K) % g
+    if pad:
+        widths = [(0, 0)] * len(stack) + [(0, pad), (0, 0)]
+        w = jnp.pad(w, widths)
+    nw = (K + pad) // g
+    qt = quantize_int8(w.reshape(*stack, nw, g, N), axis=-2)
+    return QuantizedLinearWeight(
+        qt.q, qt.scale.reshape(*stack, nw, N).astype(jnp.float32),
+        K, group_k)
+
+
+def dequantize_linear_weight(qw: QuantizedLinearWeight):
+    """Prepared -> float ``(*stack, K, N)`` (pad rows stripped)."""
+    wf = qw.q.astype(jnp.float32) * qw.scale[..., :, None, :]
+    wf = wf.reshape(*qw.stack, qw.nw * qw.g, qw.n)
+    return wf[..., :qw.k_orig, :]
+
+
+# Name patterns (flattened-path substrings) of the matrices the DS-CIM
+# serving path routes through DSCIMLinear — the MLP matmuls, the MoE shared
+# expert (dense on every token) and the LM head.  Attention projections are
+# exact by default (DESIGN.md §6) and only prepared for '<mode>+attn' specs.
+ELIGIBLE_PATTERNS = (
+    "mlp/w_up", "mlp/w_gate", "mlp/w_down",
+    "moe/shared/w_up", "moe/shared/w_gate", "moe/shared/w_down",
+    "lm_head",
+)
+ATTN_PATTERNS = ("attn/wq", "attn/wk", "attn/wv", "attn/wo")
+
+
+def path_str(path) -> str:
+    """Flattened-pytree path -> 'a/b/c' (shared with launch/sharding.py)."""
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
+def split_dscim_mode(spec: str) -> tuple[str, bool]:
+    """dscim spec -> (base mode, attn opt-in): 'kernel+attn:...' ->
+    ('kernel', True); 'off' -> ('off', False)."""
+    mode = spec.split(":")[0]
+    if mode.endswith("+attn"):
+        return mode[:-len("+attn")], True
+    return mode, False
+
+
+def prepare_dscim_params(params, cfg=None, *, group_k: int | None = 128,
+                         include_attn: bool = False,
+                         include_moe_shared: bool = True):
+    """Convert every DS-CIM-eligible matrix of ``params`` once (serve
+    startup).  Returns a new tree; float originals are dropped.
+
+    ``cfg`` (optional, ArchConfig-like): consulted for the ``dscim`` spec
+    ('off'/'float' specs return ``params`` unchanged; a '+attn' mode suffix
+    adds the attention projections) and for ``tie_embeddings`` — tied models
+    have no ``lm_head`` param, so a prepared head is materialized from
+    ``embed.T`` (the embedding itself stays float for the lookup).
+
+    ``include_moe_shared=False`` leaves the MoE shared expert float — needed
+    for distributed MoE serving, whose FSDP gather path expects float leaves
+    (models/lm.py ``_moe_apply``).
+    """
+    if cfg is not None:
+        spec = getattr(cfg, "dscim", "off")
+        mode, attn = split_dscim_mode(spec)
+        if mode in ("off", "float"):
+            return params
+        include_attn = include_attn or attn
+    pats = ELIGIBLE_PATTERNS if include_moe_shared else tuple(
+        p for p in ELIGIBLE_PATTERNS if "moe/shared" not in p)
+    pats += ATTN_PATTERNS if include_attn else ()
+
+    def assign(path, leaf):
+        p = path_str(path)
+        if getattr(leaf, "ndim", 0) >= 2 and any(t in p for t in pats):
+            return prepare_linear_weight(leaf, group_k)
+        return leaf
+
+    out = jax.tree_util.tree_map_with_path(assign, params)
+    if (cfg is not None and getattr(cfg, "tie_embeddings", False)
+            and not getattr(cfg, "stub_frontend", False)
+            and "lm_head" not in out):
+        out = dict(out,
+                   lm_head=prepare_linear_weight(params["embed"].T, group_k))
+    return out

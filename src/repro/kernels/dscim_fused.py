@@ -35,6 +35,21 @@ In-kernel padding uses the never-fire sentinel x = w = -128 (x' = w' = 0):
 counts, Σ(w+128), Σa and Σb pad contributions are all zero by construction,
 and the only non-zero pad term (-128·Σx picking up 128²·pad_g per window) is
 cancelled by a compile-time per-window constant.
+
+Serving entries (prepare-once weights, core/qweights.py):
+
+* ``dscim_fused_mvm_prepared(x, qw, cfg)`` — the quantize-free hot path:
+  the int8 window planes + per-window scales are resident (the CIM array's
+  static storage); only activations are quantized per call, so the jitted
+  decode step contains no weight quantization at all;
+* ``dscim_fused_mvm(x, w, cfg)`` — float-weight wrapper, now literally
+  ``prepare_linear_weight`` + the prepared entry (bit-identical by
+  construction; kept for training/tests and one-shot calls);
+* ``dscim_fused_mvm_sharded(x, qw, cfg, mesh)`` — multi-chip serving: the
+  prepared weight and its scales shard on N over the 'model' mesh axis
+  (shard_map; x broadcasts, output lands N-sharded).  Quantization windows
+  live on the K axis, so every shard computes its output columns exactly —
+  no collective in the MVM and bit-identical results to single-device.
 """
 from __future__ import annotations
 
@@ -47,14 +62,14 @@ from jax.experimental import pallas as pl
 
 from repro.core.macro import DSCIMConfig
 from repro.core.quant import quantize_int8
+from repro.core.qweights import QuantizedLinearWeight, prepare_linear_weight
 
 from .dscim_mvm_blocked import block_point_tables, dscim_counts_blocked
+from .ops import ON_TPU, default_bits, round_up as _round_up
 
-__all__ = ["dscim_fused_mvm", "dscim_windowed_vmap_mvm"]
-
-
-def _round_up(x: int, m: int) -> int:
-    return -(-x // m) * m
+__all__ = ["dscim_fused_mvm", "dscim_fused_mvm_prepared",
+           "dscim_fused_mvm_sharded", "quantize_activations_windowed",
+           "dscim_windowed_vmap_mvm"]
 
 
 def _kernel(x_ref, w_ref, tu_ref, tv_ref, sx_ref, sw_ref, out_ref, *,
@@ -144,41 +159,43 @@ def _fused_call(xq, wq, sx, sw, cfg: DSCIMConfig, *, g: int, bm: int,
     )(xq, wq, tu, tv, sx, sw)
 
 
-def _window_quantize(x, w, group_k: int | None):
-    """Float -> per-window int8 operands + scales (DSCIMLinear semantics:
-    pad K with float zeros *before* quantizing, one scale per window)."""
-    B, M, K = x.shape
-    N = w.shape[-1]
-    g = group_k or K
-    padk = (-K) % g
-    if padk:
-        x = jnp.pad(x, ((0, 0), (0, 0), (0, padk)))
-        w = jnp.pad(w, ((0, padk), (0, 0)))
-    nw = x.shape[-1] // g
-    xq = quantize_int8(x.reshape(B, M, nw, g), axis=-1)     # (B,M,nw,1) scales
-    wq = quantize_int8(w.reshape(nw, g, N), axis=1)         # (nw,1,N) scales
-    return xq, wq, nw, g
+def quantize_activations_windowed(x, nw: int, g: int):
+    """Float x (..., K) -> per-window int8 activations (DSCIMLinear
+    semantics: pad K with float zeros to nw*g *before* quantizing, one scale
+    per (row, window)).  Returns a QuantizedTensor with q (..., nw, g)."""
+    K = x.shape[-1]
+    pad = nw * g - K
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return quantize_int8(x.reshape(*x.shape[:-1], nw, g), axis=-1)
 
 
-def dscim_fused_mvm(x, w, cfg: DSCIMConfig, *, group_k: int | None = 128,
-                    bm: int | None = None, bn: int | None = None,
-                    bk: int | None = None, bits: str | None = None,
-                    interpret: bool | None = None, tune: bool = False):
-    """Fused DS-CIM linear: x (..., K) float, w (K, N) float -> (..., N) f32.
+def dscim_fused_mvm_prepared(x, qw: QuantizedLinearWeight, cfg: DSCIMConfig,
+                             *, bm: int | None = None, bn: int | None = None,
+                             bk: int | None = None, bits: str | None = None,
+                             interpret: bool | None = None,
+                             tune: bool = False):
+    """Quantize-free fused DS-CIM linear: x (..., K) float + prepared weight
+    -> (..., N) f32.
 
-    Single Pallas launch covering all quantization windows, sign-correction
-    terms and dequant scales; leading batch dims ride a batch grid axis.
-    ``bits`` defaults to bf16 on TPU (halved VMEM, doubled MXU rate; {0,1}
-    operands are exact) and f32 under interpret mode, where CPU bf16
-    emulation would dominate the runtime.  ``tune=True`` consults the tile
-    autotuner (kernels/autotune.py).
+    The serving hot path: ``qw`` holds the resident int8 window planes and
+    per-window scales (prepared once, core/qweights.py), so the only
+    quantization traced here is the per-call activation quantization — no
+    ``quantize_int8`` over (K, N) appears in the jitted step.  Single Pallas
+    launch covering all quantization windows, sign-correction terms and
+    dequant scales; leading batch dims ride a batch grid axis.  ``bits``
+    defaults to bf16 on TPU (halved VMEM, doubled MXU rate; {0,1} operands
+    are exact) and f32 under interpret mode, where CPU bf16 emulation would
+    dominate the runtime.  ``tune=True`` consults the tile autotuner
+    (kernels/autotune.py).
     """
-    from .ops import ON_TPU
     interpret = (not ON_TPU) if interpret is None else interpret
-    bits = bits or ("float32" if interpret else "bfloat16")
+    bits = bits or default_bits(interpret)
     lead = x.shape[:-1]
     K = x.shape[-1]
-    N = w.shape[-1]
+    if K != qw.k_orig:
+        raise ValueError(f"x K={K} vs prepared weight K={qw.k_orig}")
+    nw, g, N = qw.nw, qw.g, qw.n
     # native batch: keep the last lead dim as the M grid rows, fold any
     # extra leading dims into the batch grid axis (no flatten through M)
     if x.ndim <= 2:
@@ -188,7 +205,6 @@ def dscim_fused_mvm(x, w, cfg: DSCIMConfig, *, group_k: int | None = 128,
         x3 = x.reshape(B, lead[-1], K)
     B, M, _ = x3.shape
 
-    g = group_k or K
     if tune:
         from . import autotune
         bm, bn, bk = autotune.fused_tiles(
@@ -197,16 +213,16 @@ def dscim_fused_mvm(x, w, cfg: DSCIMConfig, *, group_k: int | None = 128,
     bm = bm or min(128, _round_up(M, 8))
     bn = bn or min(128, _round_up(N, 8))
 
-    xq, wq, nw, g = _window_quantize(x3, w, group_k)
+    xq = quantize_activations_windowed(x3, nw, g)       # (B,M,nw,1) scales
     gp = _round_up(g, bk)
     # never-fire sentinel padding (x' = w' = 0) along the window axis …
     x4 = jnp.pad(xq.q, ((0, 0), (0, 0), (0, 0), (0, gp - g)),
                  constant_values=-128)
-    w4 = jnp.pad(wq.q, ((0, 0), (0, gp - g), (0, 0)), constant_values=-128)
+    w4 = jnp.pad(qw.q, ((0, 0), (0, gp - g), (0, 0)), constant_values=-128)
     x2 = x4.reshape(B, M, nw * gp)
     w2 = w4.reshape(nw * gp, N)
     sx = xq.scale.reshape(B, M, nw)
-    sw = wq.scale.reshape(nw, N)
+    sw = qw.scale
     # … and along M/N (pad rows/cols never read back; scales padded with 0)
     padm, padn = _round_up(M, bm) - M, _round_up(N, bn) - N
     if padm:
@@ -221,20 +237,64 @@ def dscim_fused_mvm(x, w, cfg: DSCIMConfig, *, group_k: int | None = 128,
     return out[:, :M, :N].reshape(*lead, N)
 
 
+def dscim_fused_mvm(x, w, cfg: DSCIMConfig, *, group_k: int | None = 128,
+                    bm: int | None = None, bn: int | None = None,
+                    bk: int | None = None, bits: str | None = None,
+                    interpret: bool | None = None, tune: bool = False):
+    """Fused DS-CIM linear from float weights: x (..., K), w (K, N) float
+    -> (..., N) f32.  Exactly ``prepare_linear_weight`` + the prepared
+    entry, so it is bit-identical to the serve path by construction."""
+    qw = prepare_linear_weight(w, group_k)
+    return dscim_fused_mvm_prepared(x, qw, cfg, bm=bm, bn=bn, bk=bk,
+                                    bits=bits, interpret=interpret, tune=tune)
+
+
+def dscim_fused_mvm_sharded(x, qw: QuantizedLinearWeight, cfg: DSCIMConfig,
+                            mesh, *, axis: str = "model", **kw):
+    """Model-axis sharded fused MVM (multi-chip serving, ROADMAP item).
+
+    The prepared weight's output columns tile over the ``axis`` mesh axis —
+    ``q`` (nw, g, N) and ``scale`` (nw, N) both shard on N, x broadcasts,
+    and the output lands N-sharded (no collective: quantization windows
+    live on the local K axis, the StoX-Net/Stoch-IMC array-banking
+    decomposition).  Bit-identical to the single-device prepared path.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel import shard_map
+
+    nshard = mesh.shape[axis]
+    if qw.n % nshard != 0:
+        raise ValueError(f"N={qw.n} not divisible by mesh axis "
+                         f"{axis!r}={nshard}")
+    qspec = P(*([None] * (qw.q.ndim - 1)), axis)
+    sspec = P(*([None] * (qw.scale.ndim - 1)), axis)
+    xspec = P(*([None] * x.ndim))
+    ospec = P(*([None] * (x.ndim - 1)), axis)
+
+    def inner(xl, ql, sl):
+        qwl = QuantizedLinearWeight(ql, sl, qw.k_orig, qw.group_k)
+        return dscim_fused_mvm_prepared(xl, qwl, cfg, **kw)
+
+    return shard_map(inner, mesh=mesh, in_specs=(xspec, qspec, sspec),
+                     out_specs=ospec)(x, qw.q, qw.scale)
+
+
 def dscim_windowed_vmap_mvm(x, w, cfg: DSCIMConfig, *,
                             group_k: int | None = 128,
                             interpret: bool | None = None):
     """The pre-fusion staged path, kept as the perf A/B baseline: one
     blocked-kernel launch per window via vmap, psum (M, nw, N) staged in
     HBM, corrections and dequant applied in separate f32 passes."""
-    from .ops import ON_TPU
     interpret = (not ON_TPU) if interpret is None else interpret
     lead = x.shape[:-1]
     K = x.shape[-1]
     N = w.shape[-1]
     x2 = x.reshape(-1, K)
-    xq, wq, nw, g = _window_quantize(x2[None], w, group_k)
-    xw = xq.q[0].astype(jnp.int32)                 # (M, nw, g)
+    wq = prepare_linear_weight(w, group_k)
+    nw, g = wq.nw, wq.g
+    xq = quantize_activations_windowed(x2, nw, g)
+    xw = xq.q.astype(jnp.int32)                    # (M, nw, g)
     ww = wq.q.astype(jnp.int32)                    # (nw, g, N)
     M = xw.shape[0]
     bm = min(128, _round_up(M, 8))

@@ -1,5 +1,7 @@
 """jit'd public wrappers for the Pallas kernels: padding, precomputed fold
-constants, fused sign-correction terms, and CPU(interpret)/TPU dispatch.
+constants, fused sign-correction terms, and CPU(interpret)/TPU dispatch —
+plus the tile-rounding and bit-dtype policies shared by the fused serving
+entries (kernels/dscim_fused.py) and the autotuner.
 """
 from __future__ import annotations
 
@@ -16,9 +18,23 @@ from repro.core.remap import fold
 from .dscim_mvm import dscim_counts_pallas
 from .int8_matmul import int8_matmul_pallas
 
-__all__ = ["dscim_mvm", "int8_matmul", "fold_constants", "ON_TPU"]
+__all__ = ["dscim_mvm", "int8_matmul", "fold_constants", "ON_TPU",
+           "round_up", "default_bits"]
 
 ON_TPU = jax.default_backend() == "tpu"
+
+
+def round_up(x: int, m: int) -> int:
+    """Smallest multiple of m >= x (tile/pad arithmetic)."""
+    return -(-x // m) * m
+
+
+def default_bits(interpret: bool) -> str:
+    """Bit-expansion operand dtype policy for the fused DS-CIM kernels:
+    bf16 on real TPU ({0,1} values are exact, VMEM halves, MXU runs at its
+    bf16 rate); f32 under interpret mode, where CPU bf16 emulation would
+    dominate the runtime."""
+    return "float32" if interpret else "bfloat16"
 
 
 def _pad_to(x, mult, axis):

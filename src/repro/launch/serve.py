@@ -9,6 +9,23 @@ DS-CIM modes map to DSCIMLinear backends (core/dscim_layer.py):
                  corrections and dequant scales in one launch, batch dims
                  on a batch grid axis, no (M, nw, N) psum in HBM
   paper_inject — paper-style per-output error injection (fast)
+A '+attn' mode suffix (e.g. kernel+attn:dscim1:256) additionally routes the
+attention projections through the macro.
+
+Prepare-once weights (default, --no-prepare to A/B): before jitting the
+steps, every DS-CIM-eligible matrix is converted to a resident window-packed
+int8 ``QuantizedLinearWeight`` (launch/steps.py prepare_serving_params) —
+the software twin of the CIM array's static int8 storage.  The jitted decode
+step then quantizes activations only; per-token weight re-quantization, the
+old hot-path behavior, is gone from the HLO.  Outputs are bit-identical to
+the per-call path under float32 compute (the reduced/serve-test configs);
+under bfloat16 compute the per-call path quantizes the *cast* weights while
+prepare-once quantizes the f32 originals — prepared is the more faithful of
+the two (no double rounding), matching the hardware flow.  Multi-chip: the
+prepared planes + scales shard on N over the 'model' mesh axis
+(kernels/dscim_fused.py dscim_fused_mvm_sharded, launch/sharding.py
+qweight_specs).
+
 The serve report compares greedy tokens + logit RMSE against the float
 path, which is the model-level reproduction of the paper's Table II
 methodology on our own checkpoints.
@@ -23,16 +40,24 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch
-from repro.launch.steps import make_decode_step, make_prefill_step
+from repro.launch.steps import (make_decode_step, make_prefill_step,
+                                prepare_serving_params)
 from repro.models import get_model
 
 __all__ = ["serve_batch", "main"]
 
 
 def serve_batch(cfg, params, prompts: np.ndarray, n_tokens: int,
-                par=None):
-    """prompts (B, S) int32 -> generated (B, n_tokens) int32, logits list."""
+                par=None, prepare: bool = True):
+    """prompts (B, S) int32 -> generated (B, n_tokens) int32, logits list.
+
+    ``prepare``: quantize DS-CIM-eligible weights once before jitting
+    (no-op when cfg.dscim is 'off'/'float'); pass False to A/B the legacy
+    per-call weight-quantization path (bit-identical under f32 compute;
+    see the module docstring for the bf16-compute caveat)."""
     model = get_model(cfg)
+    if prepare:
+        params = prepare_serving_params(cfg, params, par)
     capacity = prompts.shape[1] + n_tokens
     prefill = jax.jit(make_prefill_step(cfg, par, capacity=capacity))
     decode = jax.jit(make_decode_step(cfg, par), donate_argnums=(2,))
@@ -53,8 +78,12 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--dscim", default="off",
-                    help="off | <mode>:<variant>:<L>  e.g. kernel:dscim1:256 "
-                         "(fused Pallas hot path) or lut:dscim1:256 (oracle)")
+                    help="off | <mode>[+attn]:<variant>:<L>  e.g. "
+                         "kernel:dscim1:256 (fused Pallas hot path) or "
+                         "lut:dscim1:256 (oracle)")
+    ap.add_argument("--no-prepare", action="store_true",
+                    help="keep float weights and re-quantize per call "
+                         "(legacy hot path; default is prepare-once int8)")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -77,7 +106,8 @@ def main(argv=None):
         import dataclasses
         cfg2 = dataclasses.replace(cfg, dscim=args.dscim)
         t0 = time.time()
-        ds_tokens, ds_logits = serve_batch(cfg2, params, prompts, args.tokens)
+        ds_tokens, ds_logits = serve_batch(cfg2, params, prompts, args.tokens,
+                                           prepare=not args.no_prepare)
         dt = time.time() - t0
         agree = float((ds_tokens == base_tokens).mean())
         rmse = float(jnp.sqrt(jnp.mean(

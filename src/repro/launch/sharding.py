@@ -10,6 +10,13 @@ batch -> spec tree.  Conventions (DESIGN.md §5):
 Rules are name-based over the flattened param tree, with divisibility
 fallbacks (e.g. starcoder2's kv=4 heads can't split 16 ways -> cache shards
 sequence instead; batch=1 long-context cells leave batch unsharded).
+
+Prepared DS-CIM weights (core/qweights.py ``QuantizedLinearWeight``) get a
+dedicated rule: the int8 window planes (*, nw, g, N) and per-window scales
+(*, nw, N) both shard their trailing N (output-column) dim over the TP
+'model' axis — the paper's multi-chip array banking: quantization windows
+stay chip-local on K, output columns tile across chips.  The window dims
+are never sharded (a window is one physical 128-row accumulation).
 """
 from __future__ import annotations
 
@@ -18,10 +25,11 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
+from repro.core.qweights import QuantizedLinearWeight, path_str as _path_str
 from repro.parallel import ParallelCtx
 
 __all__ = ["param_specs", "batch_specs", "cache_partition", "to_shardings",
-           "opt_state_specs"]
+           "opt_state_specs", "qweight_specs"]
 
 # name -> (spec for the trailing dims of the param, i.e. ignoring stacking)
 # fsdp axis written as 'F', tensor axis as 'T'; stacking dims get None.
@@ -54,11 +62,6 @@ _RULES = [
 ]
 
 
-def _path_str(path) -> str:
-    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
-                    for k in path)
-
-
 def _spec_for(path: str, ndim: int, shape, fsdp: str, tp: str, mesh):
     for pat, dims in _RULES:
         if pat in path:
@@ -75,15 +78,33 @@ def _spec_for(path: str, ndim: int, shape, fsdp: str, tp: str, mesh):
     return P()  # small params (norms, biases, u, mu, A_log...) replicated
 
 
+def qweight_specs(qw: QuantizedLinearWeight, tp: str, mesh
+                  ) -> QuantizedLinearWeight:
+    """Spec subtree for one prepared weight: N over the TP axis (divisible),
+    windows/groups/stack dims replicated.  Returned as a
+    QuantizedLinearWeight whose children are PartitionSpecs, so the spec
+    tree keeps the params' treedef (device_put / jit in_shardings work
+    unchanged)."""
+    t = tp if qw.q.shape[-1] % mesh.shape[tp] == 0 else None
+    return QuantizedLinearWeight(
+        P(*([None] * (qw.q.ndim - 1)), t),
+        P(*([None] * (qw.scale.ndim - 1)), t),
+        qw.k_orig, qw.group_k)
+
+
 def param_specs(cfg: ArchConfig, par: ParallelCtx, params_struct):
     """PartitionSpec pytree matching the (Shape/DtypeStruct or real) params."""
     fsdp = par.dp_axes[-1]
     tp = par.tp_axis
 
     def assign(path, leaf):
+        if isinstance(leaf, QuantizedLinearWeight):
+            return qweight_specs(leaf, tp, par.mesh)
         return _spec_for(_path_str(path), leaf.ndim, leaf.shape, fsdp, tp,
                          par.mesh)
-    return jax.tree_util.tree_map_with_path(assign, params_struct)
+    return jax.tree_util.tree_map_with_path(
+        assign, params_struct,
+        is_leaf=lambda x: isinstance(x, QuantizedLinearWeight))
 
 
 def opt_state_specs(pspecs):

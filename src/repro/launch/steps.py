@@ -1,4 +1,8 @@
-"""Step-function builders shared by train.py, serve.py and dryrun.py."""
+"""Step-function builders shared by train.py, serve.py and dryrun.py —
+plus ``prepare_serving_params``, the quantize-once entry of the DS-CIM
+serve path (convert every eligible weight matrix to a resident int8
+``QuantizedLinearWeight`` before jitting the prefill/decode steps, so no
+weight quantization appears in the decode-step HLO)."""
 from __future__ import annotations
 
 import jax
@@ -11,7 +15,33 @@ from repro.optim.adamw import AdamW
 from repro.parallel import ParallelCtx
 
 __all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
-           "make_eval_step"]
+           "make_eval_step", "prepare_serving_params"]
+
+
+def prepare_serving_params(cfg: ArchConfig, params,
+                           par: ParallelCtx | None = None):
+    """Quantize-once weight preparation for DS-CIM serving.
+
+    No-op for 'off'/'float' specs.  Otherwise every DS-CIM-eligible matrix
+    (MLP, MoE shared expert, LM head — plus attention projections for
+    '+attn' modes) is converted to a window-packed int8
+    ``QuantizedLinearWeight`` with the serving layer's ``group_k``, matching
+    the on-the-fly quantization bit for bit under f32 compute; under bf16
+    compute the per-call path quantizes cast weights, prepare-once the f32
+    originals (core/qweights.py).
+
+    With a mesh (``par`` given) the MoE shared expert stays float — its FSDP
+    gather path needs float leaves (models/lm.py ``_moe_apply``); it still
+    runs DS-CIM via on-the-fly quantization there."""
+    from repro.core.qweights import prepare_dscim_params, split_dscim_mode
+    spec = getattr(cfg, "dscim", "off")
+    if split_dscim_mode(spec)[0] in ("off", "float"):
+        return params
+    from repro.models.lm import _linear_for
+    lin = _linear_for(spec)
+    return prepare_dscim_params(params, cfg,
+                                group_k=lin.group_k if lin else 128,
+                                include_moe_shared=par is None)
 
 AUX_WEIGHT = 0.01  # MoE load-balance loss weight
 

@@ -6,11 +6,20 @@ max / running sum), so activation memory is O(S * chunk) — this is what makes
 the 32k-prefill cells compile with sane per-device memory.  Causality is
 enforced by masking (the masked-out upper-triangle blocks still burn MXU
 FLOPs in the baseline; EXPERIMENTS.md §Perf hillclimbs this).
+
+DS-CIM scope: the q/k/v/o projections stay on the exact path by default
+(DESIGN.md §6 — the MLP matmuls and LM head dominate).  A ``linear``
+operator (DSCIMLinear) can be passed to route the projections through the
+macro too — the opt-in '<mode>+attn' dscim spec (models/lm.py) — in which
+case the projection weights may also be prepared ``QuantizedLinearWeight``
+pytrees (core/qweights.py).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.qweights import QuantizedLinearWeight
 
 from .norms import qk_norm
 from .rope import apply_rope, rope_angles
@@ -18,6 +27,16 @@ from .rope import apply_rope, rope_angles
 __all__ = ["init_attention", "attention", "decode_attention", "AttnParams"]
 
 NEG_INF = -1e30
+
+
+def _mm(x, w, linear, salt):
+    """Projection matmul: exact by default, DS-CIM when ``linear`` given."""
+    if linear is None:
+        if isinstance(w, QuantizedLinearWeight):
+            raise TypeError("prepared attention weights need a DS-CIM "
+                            "`linear` operator (the '+attn' dscim mode)")
+        return x @ w
+    return linear(x, w, salt=salt).astype(x.dtype)
 
 
 def init_attention(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
@@ -50,12 +69,13 @@ def init_attention(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
 
 
 def _qkv(params, x, n_heads, n_kv, head_dim, positions, rope_theta,
-         use_qk_norm):
+         use_qk_norm, linear=None, salt=None):
     B, S, _ = x.shape
     n_heads = params["wq"].shape[1] // head_dim   # includes TP head padding
-    q = (x @ params["wq"]).reshape(B, S, n_heads, head_dim)
-    k = (x @ params["wk"]).reshape(B, S, n_kv, head_dim)
-    v = (x @ params["wv"]).reshape(B, S, n_kv, head_dim)
+    s = (lambda i: None) if salt is None else (lambda i: salt + i)
+    q = _mm(x, params["wq"], linear, s(4)).reshape(B, S, n_heads, head_dim)
+    k = _mm(x, params["wk"], linear, s(5)).reshape(B, S, n_kv, head_dim)
+    v = _mm(x, params["wv"], linear, s(6)).reshape(B, S, n_kv, head_dim)
     if use_qk_norm:
         q = qk_norm(q, params.get("q_norm"))
         k = qk_norm(k, params.get("k_norm"))
@@ -160,26 +180,31 @@ def _flash(q, k, v, q_pos, kv_pos, q_chunk: int, kv_chunk: int, n_rep: int):
 
 
 def attention(params, x, cfg, positions=None, q_chunk: int = 512,
-              kv_chunk: int = 1024, return_kv: bool = False):
+              kv_chunk: int = 1024, return_kv: bool = False,
+              linear=None, salt=None):
     """Full-sequence (train / prefill) GQA attention block.
 
     cfg needs: n_heads, n_kv, head_dim, rope_theta, qk_norm.
     Returns (out, (k, v)) where k/v are the cacheable projections.
+    ``linear``/``salt``: optional DS-CIM operator for the projections
+    (sites 4..7 of the per-layer salt space; mlp owns 0..2).
     """
     B, S, _ = x.shape
     if positions is None:
         positions = jnp.arange(S, dtype=jnp.int32)[None, :]
     q, k, v = _qkv(params, x, cfg.n_heads, cfg.n_kv, cfg.head_dim,
-                   positions, cfg.rope_theta, cfg.qk_norm)
+                   positions, cfg.rope_theta, cfg.qk_norm, linear, salt)
     n_rep = q.shape[2] // cfg.n_kv
     pos1 = positions[0]
     kv_chunk = q_chunk  # square blocks enable the causal pair-scan path
     out = _flash(q, k, v, pos1, pos1, q_chunk, kv_chunk, n_rep)
-    out = out.reshape(B, S, -1) @ params["wo"]
+    out = _mm(out.reshape(B, S, -1), params["wo"], linear,
+              None if salt is None else salt + 7)
     return (out, (k, v)) if return_kv else (out, None)
 
 
-def decode_attention(params, x, cache_k, cache_v, pos, cfg):
+def decode_attention(params, x, cache_k, cache_v, pos, cfg,
+                     linear=None, salt=None):
     """Single-token decode against a fixed-capacity KV cache.
 
     x (B,1,D); cache_k/v (B, T, n_kv, head_dim) with valid prefix length
@@ -191,7 +216,7 @@ def decode_attention(params, x, cache_k, cache_v, pos, cfg):
     T = cache_k.shape[1]
     positions = jnp.full((B, 1), pos, jnp.int32)
     q, k, v = _qkv(params, x, cfg.n_heads, cfg.n_kv, cfg.head_dim,
-                   positions, cfg.rope_theta, cfg.qk_norm)
+                   positions, cfg.rope_theta, cfg.qk_norm, linear, salt)
     new_k = jax.lax.dynamic_update_slice_in_dim(
         cache_k, k.astype(cache_k.dtype), pos, axis=1)
     new_v = jax.lax.dynamic_update_slice_in_dim(
@@ -205,7 +230,8 @@ def decode_attention(params, x, cache_k, cache_v, pos, cfg):
     s = jnp.where(mask, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhqk,bkhd->bqhd", p, vr.astype(jnp.float32))
-    out = out.reshape(B, 1, -1).astype(x.dtype) @ params["wo"]
+    out = _mm(out.reshape(B, 1, -1).astype(x.dtype), params["wo"], linear,
+              None if salt is None else salt + 7)
     return out, new_k, new_v
 
 

@@ -1,11 +1,17 @@
 """Feed-forward blocks: SwiGLU (llama/qwen family) and GELU (starcoder-ish),
 with an optional DS-CIM serving path (DSCIMLinear swaps in for the matmuls
 when a macro config is attached at serve time).
+
+Weights may be plain float matrices or prepared ``QuantizedLinearWeight``
+pytrees (core/qweights.py, serve startup quantize-once) — the latter require
+a ``linear`` operator that understands them (DSCIMLinear does).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.qweights import QuantizedLinearWeight
 
 __all__ = ["init_mlp", "mlp"]
 
@@ -22,17 +28,24 @@ def init_mlp(key, d_model: int, d_ff: int, kind: str = "swiglu",
     return p
 
 
-def mlp(params, x, kind: str = "swiglu", linear=None):
-    """linear: optional callable (x2d, w) -> y2d (e.g. DSCIMLinear)."""
-    def mm(a, w):
+def mlp(params, x, kind: str = "swiglu", linear=None, salt=None):
+    """linear: optional callable (x2d, w) -> y2d (e.g. DSCIMLinear).
+    ``salt``: static/traced int decorrelating the linear's fallback noise
+    key across layers; the three matmul sites fold in offsets 0..2."""
+    def mm(a, w, site):
         if linear is None:
+            if isinstance(w, QuantizedLinearWeight):
+                raise TypeError(
+                    "prepared (QuantizedLinearWeight) params need a DS-CIM "
+                    "`linear` operator — don't prepare for the float path")
             return a @ w
         # DSCIMLinear consumes (..., K) natively (the fused kernel maps
         # leading dims onto a batch grid axis — no flatten round-trip)
-        return linear(a, w).astype(a.dtype)
+        s = None if salt is None else salt + site
+        return linear(a, w, salt=s).astype(a.dtype)
 
     if kind == "swiglu":
-        h = jax.nn.silu(mm(x, params["w_gate"])) * mm(x, params["w_up"])
+        h = jax.nn.silu(mm(x, params["w_gate"], 0)) * mm(x, params["w_up"], 1)
     else:
-        h = jax.nn.gelu(mm(x, params["w_up"]))
-    return mm(h, params["w_down"])
+        h = jax.nn.gelu(mm(x, params["w_up"], 1))
+    return mm(h, params["w_down"], 2)

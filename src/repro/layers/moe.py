@@ -68,8 +68,13 @@ def _route(xs, router_w, top_k: int):
 
 
 def moe(params, x, *, top_k: int, capacity_factor: float = 1.25,
-        ep_axis: str | None = None, has_shared: bool = False):
-    """x (B, S, D) -> (out (B, S, D), aux).  See module docstring."""
+        ep_axis: str | None = None, has_shared: bool = False,
+        linear=None, salt=None):
+    """x (B, S, D) -> (out (B, S, D), aux).  See module docstring.
+
+    ``linear``/``salt``: optional DS-CIM operator for the *shared* expert's
+    dense matmuls (it runs on every token — same hot-path class as the MLP
+    block); the routed experts stay on the exact einsum path."""
     B, S, D = x.shape
     E = params["router"].shape[-1]
     # jax.lax.axis_size is newer-jax; psum(1, axis) is the portable idiom
@@ -127,7 +132,8 @@ def moe(params, x, *, top_k: int, capacity_factor: float = 1.25,
     out_t = jnp.zeros_like(xt).at[tok_idx].add(contrib)
 
     if has_shared:
-        out_t = out_t + mlp(params["shared"], xt, "swiglu")
+        out_t = out_t + mlp(params["shared"], xt, "swiglu", linear=linear,
+                            salt=salt)
     out = out_t.reshape(B, S_loc, D)
 
     if split_seq:
@@ -136,7 +142,8 @@ def moe(params, x, *, top_k: int, capacity_factor: float = 1.25,
 
 
 def moe_local(params, x, *, top_k: int, capacity_factor: float = 2.0,
-              has_shared: bool = False):
-    """Single-device convenience (smoke tests)."""
+              has_shared: bool = False, linear=None, salt=None):
+    """Single-device convenience (smoke tests + single-device serving —
+    the path that accepts prepared shared-expert weights)."""
     return moe(params, x, top_k=top_k, capacity_factor=capacity_factor,
-               ep_axis=None, has_shared=has_shared)
+               ep_axis=None, has_shared=has_shared, linear=linear, salt=salt)

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
+from repro.core.qweights import QuantizedLinearWeight
 from repro.layers.attention import (attention, decode_attention,
                                     init_attention)
 from repro.layers.mlp import init_mlp, mlp
@@ -30,24 +31,41 @@ __all__ = ["init_params", "forward", "prefill", "decode", "cache_specs",
            "lm_loss"]
 
 
-@functools.lru_cache(maxsize=8)
-def _linear_for(dscim_spec: str):
-    """DS-CIM linear operator for cfg.dscim = '<mode>:<variant>:<L>[:calib]'.
-
-    Applied to the MLP matmuls and the LM head (the dominant MVMs); the
-    attention projections stay on the exact path (documented scope,
-    DESIGN.md §6).  Returns None when 'off'."""
-    if dscim_spec == "off":
-        return None
-    from repro.core.dscim_layer import make_linear
+def _parse_dscim(dscim_spec: str):
+    """'<mode>[+attn]:<variant>:<L>[:calib]' -> (mode, attn, variant, L,
+    calib).  The '+attn' suffix opt-ins the attention projections (default
+    scope is MLP matmuls + LM head, DESIGN.md §6)."""
+    from repro.core.qweights import split_dscim_mode
     parts = dscim_spec.split(":")
     if len(parts) < 3:
         raise ValueError(f"bad dscim spec {dscim_spec!r}; want "
-                         "'<mode>:<variant>:<L>[:calib]', e.g. "
-                         "'kernel:dscim1:256'")
-    mode, variant, length = parts[0], parts[1], int(parts[2])
+                         "'<mode>[+attn]:<variant>:<L>[:calib]', e.g. "
+                         "'kernel:dscim1:256' or 'kernel+attn:dscim1:256'")
+    mode, attn_suffix = split_dscim_mode(dscim_spec)
     calib = parts[3] if len(parts) > 3 else "paper"
+    return mode, attn_suffix, parts[1], int(parts[2]), calib
+
+
+@functools.lru_cache(maxsize=8)
+def _linear_for(dscim_spec: str):
+    """DS-CIM linear operator for cfg.dscim (see ``_parse_dscim``).
+
+    Applied to the MLP matmuls, the MoE shared expert and the LM head (the
+    dominant MVMs).  Returns None when 'off'."""
+    if dscim_spec == "off":
+        return None
+    from repro.core.dscim_layer import make_linear
+    mode, _, variant, length, calib = _parse_dscim(dscim_spec)
     return make_linear(variant, length, mode, calib)
+
+
+@functools.lru_cache(maxsize=8)
+def _attn_linear_for(dscim_spec: str):
+    """The attention-projection DS-CIM operator — non-None only for
+    '<mode>+attn' specs."""
+    if dscim_spec == "off" or not _parse_dscim(dscim_spec)[1]:
+        return None
+    return _linear_for(dscim_spec)
 
 
 def _norm(cfg: ArchConfig, x, params):
@@ -98,12 +116,22 @@ def init_params(cfg: ArchConfig, key):
 # MoE dispatch: shard_map under a mesh, local fallback otherwise
 # ---------------------------------------------------------------------------
 
-def _moe_apply(lp_moe, h, cfg: ArchConfig, par: ParallelCtx | None):
+def _moe_apply(lp_moe, h, cfg: ArchConfig, par: ParallelCtx | None,
+               salt=None):
     if par is None:
         out, aux = moe_local(lp_moe, h, top_k=cfg.moe_topk,
                              capacity_factor=cfg.moe_capacity,
-                             has_shared=cfg.moe_shared > 0)
+                             has_shared=cfg.moe_shared > 0,
+                             linear=_linear_for(cfg.dscim), salt=salt)
         return out, aux
+    if cfg.moe_shared and isinstance(
+            lp_moe.get("shared", {}).get("w_gate"), QuantizedLinearWeight):
+        raise NotImplementedError(
+            "prepared MoE shared-expert weights are single-device-serve "
+            "only (the FSDP gather path expects float leaves); prepare "
+            "with prepare_serving_params(cfg, params, par) / "
+            "prepare_dscim_params(include_moe_shared=False) for "
+            "distributed MoE")
     fsdp = par.dp_axes[-1]
     tp = par.tp_axis
     dp = par.dp_axes
@@ -144,8 +172,16 @@ def _moe_apply(lp_moe, h, cfg: ArchConfig, par: ParallelCtx | None):
 # ---------------------------------------------------------------------------
 
 def _cast(tree, dtype):
-    return jax.tree.map(lambda a: a.astype(dtype) if a.dtype == jnp.float32
-                        else a, tree)
+    """Cast f32 leaves to the compute dtype.  Prepared weights pass through
+    untouched — their int8 planes are the compute representation and their
+    dequant scales must stay f32 for bit-exactness vs the float-weight path.
+    """
+    def f(a):
+        if isinstance(a, QuantizedLinearWeight):
+            return a
+        return a.astype(dtype) if a.dtype == jnp.float32 else a
+    return jax.tree.map(f, tree,
+                        is_leaf=lambda a: isinstance(a, QuantizedLinearWeight))
 
 
 def _constraint(x, cfg, par: ParallelCtx | None):
@@ -166,29 +202,41 @@ def _embed_in(params, cfg: ArchConfig, batch, dt):
 
 
 def _head(params, cfg: ArchConfig, x):
+    lin = _linear_for(cfg.dscim)
+    head = params.get("lm_head")
+    if isinstance(head, QuantizedLinearWeight):
+        # prepare-once serve path: the head (incl. the tied-embedding head,
+        # materialized from embed.T at prepare time) is resident int8
+        return lin(x.astype(jnp.float32), head,
+                   salt=8 * cfg.n_layers).astype(jnp.float32)
     if cfg.tie_embeddings and not cfg.stub_frontend:
         w = params["embed"].astype(x.dtype).T
     else:
         w = params["lm_head"].astype(x.dtype)
-    lin = _linear_for(cfg.dscim)
     if lin is not None:
-        return lin(x.astype(jnp.float32),
-                   w.astype(jnp.float32)).astype(jnp.float32)
+        return lin(x.astype(jnp.float32), w.astype(jnp.float32),
+                   salt=8 * cfg.n_layers).astype(jnp.float32)
     return (x @ w).astype(jnp.float32)
 
 
-def _block_apply(cfg: ArchConfig, par, lp, x, positions, collect_kv: bool):
+def _block_apply(cfg: ArchConfig, par, lp, x, positions, collect_kv: bool,
+                 layer_idx=None):
+    # per-layer salt space: mlp/shared-expert sites 0..2, attention 4..7,
+    # head 8*n_layers — decorrelates the DS-CIM noise backends' fallback
+    # keys across layers and matmul sites (dscim_layer.py docstring)
+    salt = None if layer_idx is None else layer_idx * 8
     h_attn, kv = attention(lp["attn"], _norm(cfg, x, lp["ln1"]), cfg,
                            positions, cfg.q_chunk, cfg.kv_chunk,
-                           return_kv=collect_kv)
+                           return_kv=collect_kv,
+                           linear=_attn_linear_for(cfg.dscim), salt=salt)
     x = x + h_attn
     x = _constraint(x, cfg, par)
     hn = _norm(cfg, x, lp["ln2"])
     if cfg.family == "moe":
-        h_ff, aux = _moe_apply(lp["moe"], hn, cfg, par)
+        h_ff, aux = _moe_apply(lp["moe"], hn, cfg, par, salt=salt)
     else:
         h_ff, aux = mlp(lp["mlp"], hn, cfg.mlp_kind,
-                        linear=_linear_for(cfg.dscim)), 0.0
+                        linear=_linear_for(cfg.dscim), salt=salt), 0.0
     x = _constraint(x + h_ff, cfg, par)
     return x, aux, kv
 
@@ -200,16 +248,20 @@ def forward(params, cfg: ArchConfig, batch, par: ParallelCtx | None = None):
     B, S, _ = x.shape
     positions = jnp.arange(S, dtype=jnp.int32)[None, :]
 
-    def body(carry, lp):
+    def body(carry, xs):
         x, aux = carry
+        lp, li = xs
         lp = _cast(lp, dt)
-        x, aux_l, _ = _block_apply(cfg, par, lp, x, positions, False)
+        x, aux_l, _ = _block_apply(cfg, par, lp, x, positions, False,
+                                   layer_idx=li)
         return (x, aux + aux_l), None
 
     if cfg.remat:
         body = jax.checkpoint(
             body, policy=jax.checkpoint_policies.nothing_saveable)
-    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), params["layers"])
+    (x, aux), _ = jax.lax.scan(
+        body, (x, jnp.float32(0.0)),
+        (params["layers"], jnp.arange(cfg.n_layers, dtype=jnp.int32)))
     x = _norm(cfg, x, params["final_norm"])
     return _head(params, cfg, x), aux / cfg.n_layers
 
@@ -227,15 +279,19 @@ def prefill(params, cfg: ArchConfig, batch, par: ParallelCtx | None = None,
     B, S, _ = x.shape
     positions = jnp.arange(S, dtype=jnp.int32)[None, :]
 
-    def body(x, lp):
+    def body(x, xs):
+        lp, li = xs
         lp = _cast(lp, dt)
-        x, _, kv = _block_apply(cfg, par, lp, x, positions, True)
+        x, _, kv = _block_apply(cfg, par, lp, x, positions, True,
+                                layer_idx=li)
         return x, (kv[0].astype(cdt), kv[1].astype(cdt))
 
     if cfg.remat:
         body = jax.checkpoint(
             body, policy=jax.checkpoint_policies.nothing_saveable)
-    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    x, (ks, vs) = jax.lax.scan(
+        body, x,
+        (params["layers"], jnp.arange(cfg.n_layers, dtype=jnp.int32)))
     if capacity is not None and capacity > S:
         pad = [(0, 0), (0, 0), (0, capacity - S), (0, 0), (0, 0)]
         ks = jnp.pad(ks, pad)
@@ -256,21 +312,25 @@ def decode(params, cfg: ArchConfig, batch, cache,
     pos = cache["pos"]
 
     def body(x, xs):
-        lp, ck, cv = xs
+        lp, ck, cv, li = xs
         lp = _cast(lp, dt)
+        salt = li * 8
         h, nk, nv = decode_attention(lp["attn"], _norm(cfg, x, lp["ln1"]),
-                                     ck, cv, pos, cfg)
+                                     ck, cv, pos, cfg,
+                                     linear=_attn_linear_for(cfg.dscim),
+                                     salt=salt)
         x = x + h
         hn = _norm(cfg, x, lp["ln2"])
         if cfg.family == "moe":
-            h_ff, _ = _moe_apply(lp["moe"], hn, cfg, par)
+            h_ff, _ = _moe_apply(lp["moe"], hn, cfg, par, salt=salt)
         else:
             h_ff = mlp(lp["mlp"], hn, cfg.mlp_kind,
-                       linear=_linear_for(cfg.dscim))
+                       linear=_linear_for(cfg.dscim), salt=salt)
         return x + h_ff, (nk, nv)
 
-    x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache["k"],
-                                         cache["v"]))
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"],
+                  jnp.arange(cfg.n_layers, dtype=jnp.int32)))
     x = _norm(cfg, x, params["final_norm"])
     logits = _head(params, cfg, x)[:, 0]
     return logits, {"k": nk, "v": nv, "pos": pos + 1}

@@ -1,0 +1,259 @@
+"""Prepared (quantize-once) DS-CIM weights: bit-exactness vs the on-the-fly
+path across granularities and odd K, pad-metadata round-trip, param-tree
+preparation, absence of weight quantization from the traced serving step,
+and the noise-key call-site salting fix."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dscim_layer import DSCIMLinear
+from repro.core.qweights import (QuantizedLinearWeight,
+                                 dequantize_linear_weight,
+                                 prepare_dscim_params, prepare_linear_weight)
+from repro.core.seed_search import calibrated_config
+from repro.kernels.dscim_fused import (dscim_fused_mvm,
+                                       dscim_fused_mvm_prepared)
+
+CFG = calibrated_config("dscim2", 64, "paper")
+
+
+def _operands(rng, M, K, N):
+    x = jnp.asarray(rng.normal(0, 1, (M, K)), jnp.float32)
+    w = jnp.asarray(rng.normal(0, 1, (K, N)), jnp.float32)
+    return x, w
+
+
+@pytest.mark.parametrize("group_k", [None, 64, 128])
+@pytest.mark.parametrize("K", [128, 200, 100])
+def test_prepared_fused_bit_identical(group_k, K):
+    """The acceptance bar: prepared == on-the-fly, bitwise, for every
+    granularity and odd (padded) K."""
+    rng = np.random.default_rng(K + (group_k or 0))
+    x, w = _operands(rng, 5, K, 24)
+    qw = prepare_linear_weight(w, group_k)
+    a = np.asarray(dscim_fused_mvm(x, w, CFG, group_k=group_k))
+    b = np.asarray(dscim_fused_mvm_prepared(x, qw, CFG))
+    np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("mode", ["exact", "lut", "bitmatmul"])
+def test_prepared_all_backends_bit_identical(mode):
+    rng = np.random.default_rng(7)
+    x, w = _operands(rng, 4, 150, 12)
+    lin = DSCIMLinear(CFG, mode=mode, group_k=64)
+    qw = prepare_linear_weight(w, 64)
+    np.testing.assert_array_equal(np.asarray(lin(x, w)),
+                                  np.asarray(lin(x, qw)))
+
+
+@pytest.mark.parametrize("K,group_k", [(100, 64), (130, 128), (64, None)])
+def test_pad_metadata_round_trip(K, group_k):
+    """Odd K: dequantize strips the zero pad rows exactly and the values
+    stay within one quantization step of the original."""
+    rng = np.random.default_rng(K)
+    w = jnp.asarray(rng.normal(0, 1, (K, 16)), jnp.float32)
+    qw = prepare_linear_weight(w, group_k)
+    assert qw.k_orig == K and qw.shape == (K, 16)
+    g = group_k or K
+    assert qw.g == g and qw.nw == -(-K // g)
+    wd = np.asarray(dequantize_linear_weight(qw))
+    assert wd.shape == (K, 16)
+    # one int8 step per window is the worst-case round error
+    step = np.asarray(qw.scale).max()
+    assert np.abs(wd - np.asarray(w)).max() <= 0.5 * step + 1e-7
+
+
+def test_prepared_weight_is_pytree_and_sliceable():
+    """Stacked (scan-layout) prepared weights slice into per-layer prepared
+    weights under tree ops — the property lax.scan relies on."""
+    rng = np.random.default_rng(3)
+    w = jnp.asarray(rng.normal(0, 1, (3, 128, 8)), jnp.float32)  # 3 layers
+    qw = prepare_linear_weight(w, 64)
+    assert qw.stack == (3,)
+    leaves, treedef = jax.tree_util.tree_flatten(qw)
+    assert len(leaves) == 2
+    qw2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert qw2.k_orig == 128 and qw2.group_k == 64
+    sl = jax.tree.map(lambda a: a[1], qw)
+    np.testing.assert_array_equal(np.asarray(sl.q), np.asarray(qw.q[1]))
+    one = prepare_linear_weight(w[1], 64)
+    np.testing.assert_array_equal(np.asarray(sl.q), np.asarray(one.q))
+    np.testing.assert_array_equal(np.asarray(sl.scale), np.asarray(one.scale))
+
+
+def test_prepare_dscim_params_tree_walk():
+    from repro.configs import get_arch
+    from repro.models import get_model
+
+    cfg = dataclasses.replace(get_arch("qwen3-0.6b").reduced(),
+                              dscim="exact:dscim1:256")
+    model = get_model(cfg)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    pp = prepare_dscim_params(params, cfg)
+    mlp = pp["layers"]["mlp"]
+    assert isinstance(mlp["w_up"], QuantizedLinearWeight)
+    assert isinstance(mlp["w_gate"], QuantizedLinearWeight)
+    assert isinstance(mlp["w_down"], QuantizedLinearWeight)
+    assert mlp["w_up"].stack == (cfg.n_layers,)
+    # attention stays float (default scope), embed stays float (lookup),
+    # tied-embedding head is materialized as a prepared matrix
+    assert not isinstance(pp["layers"]["attn"]["wq"], QuantizedLinearWeight)
+    assert not isinstance(pp["embed"], QuantizedLinearWeight)
+    assert isinstance(pp["lm_head"], QuantizedLinearWeight)
+    assert pp["lm_head"].shape == (cfg.d_model, cfg.vocab_padded)
+    # off/float specs are no-ops
+    assert prepare_dscim_params(params, dataclasses.replace(
+        cfg, dscim="off")) is params
+    # '+attn' opt-in prepares the projections too
+    pa = prepare_dscim_params(params, dataclasses.replace(
+        cfg, dscim="exact+attn:dscim1:256"))
+    assert isinstance(pa["layers"]["attn"]["wq"], QuantizedLinearWeight)
+
+
+def _count_rounds(jaxpr) -> int:
+    """Total quantization ``round`` primitives, recursing into scan/pjit
+    sub-jaxprs (the pretty-printer shares repeated lambdas, so string
+    counting under-reports)."""
+    def subs(v):
+        if hasattr(v, "jaxpr"):                      # ClosedJaxpr
+            return [v.jaxpr]
+        if hasattr(v, "eqns"):                       # Jaxpr
+            return [v]
+        if isinstance(v, (list, tuple)):
+            return [j for x in v for j in subs(x)]
+        return []
+
+    n = sum(1 for e in jaxpr.eqns if e.primitive.name == "round")
+    for e in jaxpr.eqns:
+        for v in e.params.values():
+            n += sum(_count_rounds(j) for j in subs(v))
+    return n
+
+
+def test_weight_quantization_absent_from_prepared_trace():
+    """The jitted prepared linear quantizes activations only: exactly one
+    round op in the jaxpr (the float path has a second one for w)."""
+    rng = np.random.default_rng(11)
+    x, w = _operands(rng, 2, 128, 8)
+    qw = prepare_linear_weight(w, 128)
+    lin = DSCIMLinear(CFG, mode="exact", group_k=128)
+    n_float = _count_rounds(jax.make_jaxpr(lambda a, b: lin(a, b))(x, w).jaxpr)
+    n_prep = _count_rounds(jax.make_jaxpr(lambda a, b: lin(a, b))(x, qw).jaxpr)
+    assert n_float == 2 and n_prep == 1
+
+
+def test_decode_step_prepared_bit_identical_and_quantize_free():
+    """Full serve stack: prepared params give bit-identical logits, and the
+    traced decode step contains half the quantizations (activations only)."""
+    from repro.configs import get_arch
+    from repro.launch.serve import serve_batch
+    from repro.launch.steps import make_decode_step, prepare_serving_params
+    from repro.models import get_model
+
+    cfg = dataclasses.replace(get_arch("qwen3-0.6b").reduced(),
+                              dscim="exact:dscim1:256")
+    model = get_model(cfg)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    pp = prepare_serving_params(cfg, params)
+    prompts = np.random.default_rng(0).integers(
+        0, cfg.vocab, (2, 8), dtype=np.int32)
+    t1, l1 = serve_batch(cfg, params, prompts, 4, prepare=False)
+    t2, l2 = serve_batch(cfg, params, prompts, 4, prepare=True)
+    np.testing.assert_array_equal(t1, t2)
+    np.testing.assert_array_equal(np.asarray(l1[0]), np.asarray(l2[0]))
+
+    decode = make_decode_step(cfg, None)
+    cache = {"k": jnp.zeros((cfg.n_layers, 2, 12, cfg.n_kv, cfg.head_dim)),
+             "v": jnp.zeros((cfg.n_layers, 2, 12, cfg.n_kv, cfg.head_dim)),
+             "pos": jnp.int32(8)}
+    batch = {"token": jnp.zeros((2,), jnp.int32)}
+    n_float = _count_rounds(jax.make_jaxpr(decode)(params, batch, cache).jaxpr)
+    n_prep = _count_rounds(jax.make_jaxpr(decode)(pp, batch, cache).jaxpr)
+    # 4 DS-CIM matmul sites per decode (gate/up/down in the scan body,
+    # traced once, + head): the float trace quantizes x and w at each site,
+    # the prepared trace only x
+    assert n_float == 8, n_float
+    assert n_prep == 4, n_prep
+
+
+def test_prepared_group_mismatch_raises():
+    rng = np.random.default_rng(5)
+    x, w = _operands(rng, 2, 128, 8)
+    qw = prepare_linear_weight(w, 64)
+    lin = DSCIMLinear(CFG, mode="exact", group_k=128)
+    with pytest.raises(ValueError, match="granularity"):
+        lin(x, qw)
+    with pytest.raises(TypeError):
+        DSCIMLinear(CFG, mode="float")(x, qw)
+
+
+# ---------------- noise-key call-site salting (satellite fix) ----------------
+
+def test_statistical_salt_decorrelates_call_sites():
+    rng = np.random.default_rng(17)
+    x, w = _operands(rng, 8, 128, 16)
+    lin = DSCIMLinear(calibrated_config("dscim1", 256, "paper"),
+                      mode="statistical")
+    a = np.asarray(lin(x, w, salt=0))
+    b = np.asarray(lin(x, w, salt=1))
+    assert not np.array_equal(a, b)          # distinct sites, distinct noise
+    np.testing.assert_array_equal(a, np.asarray(lin(x, w, salt=0)))
+    # explicit key still wins, salt still decorrelates under a shared key
+    k = jax.random.PRNGKey(42)
+    ka = np.asarray(lin(x, w, key=k, salt=0))
+    kb = np.asarray(lin(x, w, key=k, salt=1))
+    assert not np.array_equal(ka, kb)
+    # the fallback key also folds in the operand shape
+    w2 = jnp.asarray(np.random.default_rng(18).normal(0, 1, (128, 16)),
+                     jnp.float32)
+    assert not np.array_equal(np.asarray(lin(x, w)) - np.asarray(
+        DSCIMLinear(lin.cfg, mode="exact")(x, w)),
+        np.asarray(lin(x, w2)) - np.asarray(
+        DSCIMLinear(lin.cfg, mode="exact")(x, w2)))
+
+
+def test_paper_inject_layers_draw_distinct_noise():
+    """Through the LM stack, paper_inject noise now differs across layers
+    (the PRNGKey(0)-everywhere bug): with identical per-layer weights and
+    identical inputs, layer outputs would previously correlate exactly."""
+    lin = DSCIMLinear(calibrated_config("dscim2", 64, "paper"),
+                      mode="paper_inject")
+    rng = np.random.default_rng(23)
+    x, w = _operands(rng, 4, 128, 8)
+    exact = np.asarray(DSCIMLinear(lin.cfg, mode="exact")(x, w))
+    n0 = np.asarray(lin(x, w, salt=0)) - exact
+    n8 = np.asarray(lin(x, w, salt=8)) - exact
+    assert not np.array_equal(n0, n8)
+
+
+def test_attn_linear_spec_parsing_and_smoke():
+    from repro.models.lm import _attn_linear_for, _linear_for
+
+    assert _attn_linear_for("exact:dscim1:256") is None
+    lin = _attn_linear_for("exact+attn:dscim2:64")
+    assert lin is not None and lin.mode == "exact"
+    assert _linear_for("exact+attn:dscim2:64").mode == "exact"
+
+    # attention with DS-CIM projections (prepared or float) runs and stays
+    # close to the exact projections on benign inputs
+    from types import SimpleNamespace
+
+    from repro.layers.attention import attention, init_attention
+
+    cfg = SimpleNamespace(n_heads=4, n_kv=2, head_dim=16, rope_theta=1e4,
+                          qk_norm=False)
+    key = jax.random.PRNGKey(0)
+    p = init_attention(key, 64, 4, 2, 16)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 64)) * 0.1
+    ref, _ = attention(p, x, cfg, q_chunk=8, kv_chunk=8)
+    got, _ = attention(p, x, cfg, q_chunk=8, kv_chunk=8, linear=lin, salt=0)
+    assert got.shape == ref.shape
+    assert float(jnp.abs(got - ref).max()) < 0.1
+    pq = prepare_dscim_params({"attn": p}, None, group_k=128,
+                              include_attn=True)
+    got2, _ = attention(pq["attn"], x, cfg, q_chunk=8, kv_chunk=8,
+                        linear=lin, salt=0)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(got2))
