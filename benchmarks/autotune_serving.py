@@ -1,0 +1,81 @@
+"""Regenerate the checked-in fused-kernel autotune cache for the DS-CIM
+serving decode shapes (src/repro/kernels/autotune_cache.json).
+
+Covers the skinny-M GEMV tiles the serving hot path hits — the per-token
+decode matmuls of the reduced serve configs (M=1, request batch riding the
+batch grid axis: MLP gate/up/down, LM head, and the '+attn' projections)
+plus the decode-shape microbench GEMVs (M in {1, 8, 16}) — for the two
+calibrated macro variants the serve/bench paths use (DS-CIM1/L256,
+DS-CIM2/L64).  With the cache checked in, cold-start serving with
+``--tune`` (or ``REPRO_DSCIM_TUNE=1``) is a dictionary lookup, never a
+re-tune; unlisted shapes still sweep once and land in the
+``REPRO_AUTOTUNE_CACHE``-pointed file if set.
+
+Run from the repo root:  PYTHONPATH=src python -m benchmarks.autotune_serving
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+# write winners straight into the packaged cache
+os.environ["REPRO_AUTOTUNE_CACHE"] = os.path.join(
+    REPO, "src", "repro", "kernels", "autotune_cache.json")
+
+# (K, N) of the per-token serving matmuls for the reduced serve configs
+# (d_model=64, d_ff=96, vocab_padded=128, 4x16 q heads / 2x16 kv heads):
+# MLP gate/up + down, LM head, attention q/o and k/v projections.
+SERVE_KN = ((64, 96), (96, 64), (64, 128), (64, 64), (64, 32))
+# mesh serving: inside dscim_fused_mvm_sharded's shard_map each device
+# tunes for its *local* N = N/nshard — cover the --mesh model={4,8} sizes
+# the tests/CI use, so mesh cold starts are lookups too
+MESH_NSHARD = (4, 8)
+SERVE_BATCHES = (1, 4, 8)          # request batch = the batch grid axis, M=1
+BENCH_SHAPES = ((1, 1, 512, 128), (1, 8, 512, 128), (1, 16, 512, 128))
+GROUP_K = 128                      # DSCIMLinear serving default granularity
+
+
+def serve_kn() -> list:
+    """Full-N pairs plus their model-sharded local-N variants (deduped)."""
+    kn = set(SERVE_KN)
+    for (k, n) in SERVE_KN:
+        for s in MESH_NSHARD:
+            if n % s == 0:
+                kn.add((k, n // s))
+    return sorted(kn)
+
+
+def main():
+    from repro.core.seed_search import calibrated_config
+    from repro.kernels import autotune
+
+    # a *re*generation must re-time: drop the existing packaged winners
+    # first, or autotune.best would read them back (DEFAULT_CACHE is the
+    # very file being written) and never sweep the current candidate sets
+    if os.path.exists(autotune.DEFAULT_CACHE):
+        os.remove(autotune.DEFAULT_CACHE)
+    autotune.clear()
+
+    shapes = [(b, 1, k, n) for b in SERVE_BATCHES for (k, n) in serve_kn()]
+    shapes += list(BENCH_SHAPES)
+    rows = []
+    for variant, length in (("dscim1", 256), ("dscim2", 64)):
+        cfg = calibrated_config(variant, length, "paper")
+        for (B, M, K, N) in shapes:
+            # g of the prepared serve weight: prepare_linear_weight pads K
+            # up to a whole number of group_k windows, so g is always 128
+            t0 = time.time()
+            win = autotune.fused_tiles((B, M, K, N), cfg, GROUP_K,
+                                       interpret=True, bits="float32")
+            rows.append((variant, length, B, M, K, N, win,
+                         time.time() - t0))
+            print(f"{variant}/L{length} B{B} {M}x{K}x{N} -> bm,bn,bk={win} "
+                  f"({rows[-1][-1]:.1f}s)", flush=True)
+    print(f"# {len(rows)} keys -> {os.environ['REPRO_AUTOTUNE_CACHE']}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

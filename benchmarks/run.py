@@ -8,12 +8,13 @@ Prints ``name,us_per_call,derived`` CSV lines.  Sections:
   fig6_sparsity — Fig. 6(c) saturation-vs-sparsity
   seedsearch    — Sec. IV-C PRNG/seed optimization
   kernel_bench  — Pallas kernel microbench + TPU roofline terms
+  serve_bench   — host-loop vs scanned device-resident generation tok/s
   roofline      — per-(arch x shape x mesh) table from the dry-run JSONs
 
-The kernel_bench section additionally appends its rows (name, µs, derived
-roofline terms, git rev, timestamp) to ``BENCH_kernels.json`` at the repo
-root — a perf trajectory across PRs, so future changes have a baseline to
-compare against.
+The kernel_bench and serve_bench sections additionally append their rows
+(name, µs, derived roofline/dispatch terms, git rev, timestamp) to
+``BENCH_kernels.json`` at the repo root — a perf trajectory across PRs, so
+future changes have a baseline to compare against.
 
 Run everything:  PYTHONPATH=src python -m benchmarks.run
 One section:     PYTHONPATH=src python -m benchmarks.run t1_rmse
@@ -28,7 +29,9 @@ import time
 import traceback
 
 SECTIONS = ("t1_rmse", "fig6_sparsity", "t3_efficiency", "seedsearch",
-            "t1_accuracy", "t2_llm", "kernel_bench", "roofline")
+            "t1_accuracy", "t2_llm", "kernel_bench", "serve_bench",
+            "roofline")
+TRAJECTORY_SECTIONS = ("kernel_bench", "serve_bench")
 
 TRAJECTORY = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_kernels.json")
@@ -71,7 +74,7 @@ def main() -> None:
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["main"])
             rows = mod.main()
-            if name == "kernel_bench" and rows:
+            if name in TRAJECTORY_SECTIONS and rows:
                 append_trajectory(rows)
             print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
         except Exception:  # noqa: BLE001 — keep the harness going

@@ -1,0 +1,107 @@
+"""Serving-loop microbench: host-loop vs device-resident scanned generation
+(ISSUE 3 acceptance rows).
+
+Times the two ``serve_batch`` drivers on the reduced serve config with
+prepared (resident int8) DS-CIM weights at decode batch sizes M in
+{1, 8, 16}: the legacy host loop dispatches one jitted decode per token
+(n_tokens host round trips), the scanned path dispatches one jitted
+prefill+scan per request (launch/steps.py ``make_generate_fn``).  The
+derived fields record the dispatch accounting the scan removes:
+``dispatches`` per request for each driver, plus
+``dispatch_overhead_removed_us`` = (n_tokens-1) x the *directly measured*
+per-dispatch host cost (a warmed jitted identity on the token array — the
+fixed dispatch+transfer cost every host-loop step pays and the scan
+doesn't).  The direct measurement is used because on interpret-mode CPU
+the Pallas kernel time dominates and wobbles by ~10%, burying the ~ms
+dispatch cost in an end-to-end subtraction; on a real TPU the same fields
+apply unchanged.  Compile time is excluded (both drivers are warmed
+before timing).
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+
+DSCIM = "kernel:dscim1:256"
+
+
+def _host_loop(prefill, decode, params, batch, n_tokens):
+    logits, cache = prefill(params, batch)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    out = [tok]
+    for _ in range(n_tokens - 1):
+        tok, cache = decode(params, {"token": tok}, cache)
+        out.append(tok)
+    return jnp.stack(out, axis=1)
+
+
+def run(smoke: bool = False):
+    from repro.configs import get_arch
+    from repro.launch.steps import (make_decode_step, make_generate_fn,
+                                    make_prefill_step,
+                                    prepare_serving_params)
+    from repro.models import get_model
+
+    cfg = dataclasses.replace(get_arch("qwen3-0.6b").reduced(), dscim=DSCIM)
+    model = get_model(cfg)
+    params = prepare_serving_params(
+        cfg, model.init_params(cfg, jax.random.PRNGKey(0)))
+    n_tokens = 4 if smoke else 16
+    prompt_len = 8
+    reps = 1 if smoke else 3
+    rows = []
+    rng = np.random.default_rng(0)
+    for B in ([1] if smoke else [1, 8, 16]):
+        prompts = rng.integers(0, cfg.vocab, (B, prompt_len), dtype=np.int32)
+        batch = {"tokens": jnp.asarray(prompts)}
+        prefill = jax.jit(make_prefill_step(cfg, None,
+                                            capacity=prompt_len + n_tokens))
+        # cache donated between steps exactly like serve_batch's host loop
+        # (each timed rep starts from its own fresh prefill cache)
+        decode = jax.jit(make_decode_step(cfg, None), donate_argnums=(2,))
+        generate = make_generate_fn(cfg, None, n_tokens)
+        us_host = timed(lambda: _host_loop(prefill, decode, params, batch,
+                                           n_tokens), n=reps)
+        us_scan = timed(lambda: generate(params, batch)[0], n=reps)
+        # per-dispatch host cost, measured directly on a warmed jitted
+        # identity over the token array (what each removed dispatch pays)
+        tok = jnp.zeros((B,), jnp.int32)
+        noop = jax.jit(lambda t: t + 0)
+        us_dispatch = timed(lambda: noop(tok), n=max(reps, 3))
+        shared = (f"n_tokens={n_tokens};dispatches_host={n_tokens};"
+                  f"dispatches_scanned=1;"
+                  f"dispatch_us={us_dispatch:.1f};"
+                  f"dispatch_overhead_removed_us="
+                  f"{(n_tokens - 1) * us_dispatch:.1f}")
+        rows.append({
+            "name": f"serve/host_loop/{DSCIM}/B{B}x{prompt_len}+{n_tokens}",
+            "us": us_host,
+            "derived": (f"tok_s={B * n_tokens / us_host * 1e6:.1f};"
+                        f"{shared}")})
+        rows.append({
+            "name": f"serve/scanned/{DSCIM}/B{B}x{prompt_len}+{n_tokens}",
+            "us": us_scan,
+            "derived": (f"tok_s={B * n_tokens / us_scan * 1e6:.1f};"
+                        f"speedup_vs_host_loop={us_host / us_scan:.2f}x;"
+                        f"{shared}")})
+    return rows
+
+
+def main():
+    """Prints CSV rows and returns them (benchmarks.run appends them to the
+    BENCH_kernels.json trajectory)."""
+    smoke = "--smoke" in sys.argv[1:]
+    rows = run(smoke=smoke)
+    for r in rows:
+        emit(r["name"], r["us"], r["derived"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -7,12 +7,26 @@
 
   PYTHONPATH=src python examples/serve_dscim.py --tokens 16
 
+Generation is device-resident by default: ``serve_batch`` jits prefill plus
+an n-token ``lax.scan`` of decode steps into one dispatch per request
+(launch/steps.py ``make_generate_fn``) — the KV cache rides the scan carry
+and the per-token logit trace stays off the hot path (only the prefill
+logits come back; the RMSE report below needs nothing more).  Pass
+--host-loop to A/B the legacy one-dispatch-per-token driver.
+
 Weights are prepared once by default: every DS-CIM-eligible matrix becomes
-a resident window-packed int8 QuantizedLinearWeight before the steps are
-jitted — the paper-faithful model (the CIM array stores static int8;
-quantization happens at load, not per MVM), bit-identical to the per-call
-path under f32 compute (this example's reduced configs).  Pass --no-prepare
-to A/B the legacy per-token weight requantization.
+a resident window-packed int8 QuantizedLinearWeight before jitting — the
+paper-faithful model (the CIM array stores static int8; quantization
+happens at load, not per MVM), bit-identical to the per-call path under
+f32 compute (this example's reduced configs).  Pass --no-prepare to A/B
+the legacy per-token weight requantization.
+
+Multi-chip: --mesh model=K serves the whole scanned loop under a
+('data', 'model') mesh — prepared int8 planes + scales shard on N over
+'model' (the paper's array banking across chips), e.g.
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+    PYTHONPATH=src python examples/serve_dscim.py --mesh model=4
 """
 import argparse
 import dataclasses
@@ -35,8 +49,19 @@ def main():
     ap.add_argument("--no-prepare", action="store_true",
                     help="re-quantize weights every call (legacy hot path) "
                          "instead of the default prepare-once int8 weights")
+    ap.add_argument("--host-loop", action="store_true",
+                    help="legacy one-dispatch-per-token host loop instead "
+                         "of the scanned device-resident generate")
+    ap.add_argument("--mesh", default=None, metavar="SPEC",
+                    help="serve under a mesh, e.g. 'model=4' (needs that "
+                         "many jax devices; prepared qweights shard N over "
+                         "'model')")
     args = ap.parse_args()
 
+    par = None
+    if args.mesh:
+        from repro.launch.mesh import parallel_ctx_from_spec
+        par = parallel_ctx_from_spec(args.mesh)
     cfg = get_arch(args.arch).reduced()
     model = get_model(cfg)
     params = model.init_params(cfg, jax.random.PRNGKey(0))
@@ -51,13 +76,16 @@ def main():
                       ("dscim1/L256/fused-kernel", "kernel:dscim1:256")]:
         c = dataclasses.replace(cfg, dscim=spec)
         t0 = time.time()
-        toks, logits = serve_batch(c, params, prompts, args.tokens,
-                                   prepare=not args.no_prepare)
+        toks, logits = serve_batch(c, params, prompts, args.tokens, par=par,
+                                   prepare=not args.no_prepare,
+                                   scan=not args.host_loop)
         dt = time.time() - t0
         results[tag] = (toks, logits[0], args.batch * args.tokens / dt)
 
+    loop = "host-loop" if args.host_loop else "scanned"
+    mesh = f", mesh {args.mesh}" if args.mesh else ""
     base_toks, base_lg, base_tps = results["float"]
-    print(f"float: {base_tps:.1f} tok/s")
+    print(f"float ({loop}{mesh}): {base_tps:.1f} tok/s")
     for tag in list(results)[1:]:
         toks, lg, tps = results[tag]
         agree = float((toks == base_toks).mean())

@@ -44,10 +44,21 @@ import numpy as np
 from .error_model import ErrorModel
 from .macro import DSCIMConfig, DSCIMMacro
 from .quant import quantize_int8
-from .qweights import QuantizedLinearWeight
+from .qweights import QuantizedLinearWeight, prepare_linear_weight
 from .seed_search import calibrated_config
 
 __all__ = ["DSCIMLinear", "make_linear"]
+
+
+def _env_tune() -> bool:
+    """The ``REPRO_DSCIM_TUNE`` knob, read at trace time — DSCIMLinear
+    instances are lru-cached behind models/lm.py ``_linear_for``, so a
+    construction-time read would freeze the knob's first value for the
+    process lifetime.  Note jit caching still applies: the knob must be
+    set before a given (cfg, shapes) combination first compiles; already
+    compiled executables are reused without re-tracing."""
+    import os
+    return os.environ.get("REPRO_DSCIM_TUNE", "") not in ("", "0")
 
 Mode = Literal["exact", "lut", "bitmatmul", "kernel", "statistical",
                "paper_inject", "float"]
@@ -69,6 +80,16 @@ class DSCIMLinear:
     group_k: int | None = 128
     tune: bool = False              # kernel mode: autotune fused-kernel tiles
     seed: int = 0                   # base of the fallback noise key
+    # kernel mode under a mesh: route through the model-axis sharded fused
+    # MVM (a Pallas call must live inside shard_map on a multi-device mesh;
+    # the N-sharded decomposition is bit-identical to single-device).
+    # batch_axes: DP mesh axes the leading batch dim of x/out additionally
+    # shards over (so 'data=2,model=4' meshes don't redo the whole batch in
+    # every data group).  The pure-jnp backends partition under GSPMD and
+    # ignore these.
+    mesh: jax.sharding.Mesh | None = None
+    shard_axis: str = "model"
+    batch_axes: tuple = ()
 
     def __post_init__(self):
         self.macro = DSCIMMacro(self.cfg)
@@ -124,13 +145,21 @@ class DSCIMLinear:
             # dequant scales are applied in-kernel, leading batch dims ride
             # a batch grid axis (kernels/dscim_fused.py).
             from repro.kernels.dscim_fused import (dscim_fused_mvm,
-                                                   dscim_fused_mvm_prepared)
+                                                   dscim_fused_mvm_prepared,
+                                                   dscim_fused_mvm_sharded)
+            tune = self.tune or _env_tune()
+            if self.mesh is not None:
+                qw = w if prepared else prepare_linear_weight(w, self.group_k)
+                self._check_prepared(x, qw)
+                return dscim_fused_mvm_sharded(x, qw, self.cfg, self.mesh,
+                                               axis=self.shard_axis,
+                                               batch_axes=self.batch_axes,
+                                               tune=tune)
             if prepared:
                 self._check_prepared(x, w)
-                return dscim_fused_mvm_prepared(x, w, self.cfg,
-                                                tune=self.tune)
+                return dscim_fused_mvm_prepared(x, w, self.cfg, tune=tune)
             return dscim_fused_mvm(x, w, self.cfg, group_k=self.group_k,
-                                   tune=self.tune)
+                                   tune=tune)
         lead = x.shape[:-1]
         K = x.shape[-1]
         xf = x.reshape(-1, K)
@@ -185,10 +214,22 @@ class DSCIMLinear:
 
 
 def make_linear(variant: str = "dscim1", length: int = 256,
-                mode: Mode = "lut", calib: str = "paper") -> DSCIMLinear:
-    """Convenience: calibrated DS-CIM1/2 linear ('paper' or 'opt' point sets)."""
+                mode: Mode = "lut", calib: str = "paper", *,
+                mesh: jax.sharding.Mesh | None = None,
+                shard_axis: str = "model", batch_axes: tuple = (),
+                tune: bool = False) -> DSCIMLinear:
+    """Convenience: calibrated DS-CIM1/2 linear ('paper' or 'opt' point
+    sets).  ``mesh``/``shard_axis``/``batch_axes`` wire the kernel mode
+    through the sharded fused MVM (multi-chip serving: N over the model
+    axis, the request batch over the DP axes); ``tune`` — or the
+    ``REPRO_DSCIM_TUNE`` env knob, read when the kernel call is traced
+    (set it before first compile; cached executables don't re-trace) —
+    consults the fused-tile autotuner; with the checked-in autotune cache
+    (kernels/autotune.py) this is a lookup, not a re-tune, for the serving
+    shapes."""
     if variant in ("dscim1", "dscim2"):
         cfg = calibrated_config(variant, length, calib)
     else:
         raise ValueError(variant)
-    return DSCIMLinear(cfg, mode)
+    return DSCIMLinear(cfg, mode, tune=tune, mesh=mesh,
+                       shard_axis=shard_axis, batch_axes=tuple(batch_axes))

@@ -39,7 +39,7 @@ from .quant import quantize_int8
 
 __all__ = ["QuantizedLinearWeight", "prepare_linear_weight",
            "dequantize_linear_weight", "prepare_dscim_params",
-           "split_dscim_mode", "path_str",
+           "qweight_replicated_specs", "split_dscim_mode", "path_str",
            "ELIGIBLE_PATTERNS", "ATTN_PATTERNS"]
 
 
@@ -110,6 +110,19 @@ def prepare_linear_weight(w, group_k: int | None = 128
         K, group_k)
 
 
+def qweight_replicated_specs(qw: QuantizedLinearWeight
+                             ) -> QuantizedLinearWeight:
+    """All-``None`` PartitionSpec subtree for one prepared weight: every
+    device holds the whole int8 planes + scales.  The single source for the
+    replicated MoE shared-expert convention — launch/sharding.py placement
+    and the models/lm.py shard_map in_specs must agree, so both call this.
+    """
+    from jax.sharding import PartitionSpec as P
+    return QuantizedLinearWeight(P(*([None] * qw.q.ndim)),
+                                 P(*([None] * qw.scale.ndim)),
+                                 qw.k_orig, qw.group_k)
+
+
 def dequantize_linear_weight(qw: QuantizedLinearWeight):
     """Prepared -> float ``(*stack, K, N)`` (pad rows stripped)."""
     wf = qw.q.astype(jnp.float32) * qw.scale[..., :, None, :]
@@ -156,9 +169,12 @@ def prepare_dscim_params(params, cfg=None, *, group_k: int | None = 128,
     have no ``lm_head`` param, so a prepared head is materialized from
     ``embed.T`` (the embedding itself stays float for the lookup).
 
-    ``include_moe_shared=False`` leaves the MoE shared expert float — needed
-    for distributed MoE serving, whose FSDP gather path expects float leaves
-    (models/lm.py ``_moe_apply``).
+    ``include_moe_shared=False`` leaves the MoE shared expert float (it then
+    runs through the FSDP-shard + gather path under a mesh).  Prepared
+    shared experts serve fine both single-device and distributed — their
+    planes replicate and the shard_map MoE body computes them locally
+    (models/lm.py ``_moe_apply``, launch/sharding.py) — so this is an
+    escape hatch, not a requirement.
     """
     if cfg is not None:
         spec = getattr(cfg, "dscim", "off")

@@ -2,14 +2,19 @@
 
 Sweeps a small candidate list of tile shapes per (kernel kind, shape, cfg)
 key, times each candidate on shared synthetic operands of the requested
-shape, and caches the winner — in
-memory always, and on disk when ``REPRO_AUTOTUNE_CACHE`` points at a JSON
-file (so serving processes inherit tuned tiles across restarts).
+shape, and caches the winner — in memory always, on disk when
+``REPRO_AUTOTUNE_CACHE`` points at a JSON file (so serving processes
+inherit tuned tiles across restarts), and from the **checked-in serving
+cache** ``autotune_cache.json`` next to this module, which ships winners
+for the DS-CIM decode serving shapes (skinny-M GEMV tiles, B on the batch
+grid axis) so cold-start serving never re-tunes them.  Lookup order:
+memory -> env-pointed cache -> packaged cache; only the env-pointed file
+is ever written.
 
 Deliberately simple: a handful of curated candidates beats an exhaustive
-sweep for these kernels (the tile space is tiny — MXU-aligned bm/bn and a
-couple of contraction sub-tile sizes), and timing happens at most once per
-key per process.
+sweep for these kernels (the tile space is tiny — MXU-aligned bm/bn, the
+pad-free bm=M decode tiles, and a couple of contraction sub-tile sizes),
+and timing happens at most once per key per process.
 """
 from __future__ import annotations
 
@@ -19,10 +24,15 @@ import time
 
 import jax
 
-__all__ = ["best", "fused_tiles", "mvm_tiles", "clear"]
+__all__ = ["best", "fused_tiles", "mvm_tiles", "clear", "DEFAULT_CACHE"]
 
 _CACHE: dict[str, tuple] = {}
 _CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+# checked-in winners for the serving shapes (benchmarks/autotune_serving.py
+# regenerates it; keys embed shape/cfg/bits/backend so stale entries can
+# never match a different geometry)
+DEFAULT_CACHE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                             "autotune_cache.json")
 
 
 def clear():
@@ -33,8 +43,7 @@ def _disk_path() -> str | None:
     return os.environ.get(_CACHE_ENV) or None
 
 
-def _load_disk() -> dict:
-    path = _disk_path()
+def _read_json(path: str) -> dict:
     if path and os.path.exists(path):
         try:
             with open(path) as f:
@@ -44,11 +53,23 @@ def _load_disk() -> dict:
     return {}
 
 
+def _load_disk() -> dict:
+    """Merged on-disk caches: packaged serving defaults first, the
+    env-pointed (writable) cache overriding them."""
+    data: dict = {}
+    for path in (DEFAULT_CACHE, _disk_path()):
+        data.update(_read_json(path))
+    return data
+
+
 def _save_disk(key: str, val: tuple):
     path = _disk_path()
     if not path:
         return
-    data = _load_disk()
+    # read back only the env-pointed file itself — merging the packaged
+    # cache in would freeze its current entries there, where they'd shadow
+    # future updates to the checked-in winners
+    data = _read_json(path)
     data[key] = list(val)
     try:
         with open(path, "w") as f:
@@ -108,7 +129,12 @@ def _mxu_opts(dim: int):
 
 def fused_tiles(shape, cfg, g: int, *, interpret: bool,
                 bits: str = "bfloat16"):
-    """(bm, bn, bk) winner for dscim_fused_mvm on (B, M, K, N) operands."""
+    """(bm, bn, bk) winner for dscim_fused_mvm on (B, M, K, N) operands.
+
+    Decode serving shapes (M <= 16 — the skinny GEMV regime, batch riding
+    the batch grid axis) get their own candidate set: the pad-free bm=M
+    tile plus the 8/16-row aligned ones (candidates that fail to launch on
+    a backend — e.g. sub-sublane tiles on TPU — are skipped by ``best``)."""
     import jax.numpy as jnp
     import numpy as np
 
@@ -117,8 +143,12 @@ def fused_tiles(shape, cfg, g: int, *, interpret: bool,
     B, M, K, N = shape
     key = f"fused/{cfg.name}/k{cfg.k}L{cfg.length}t{cfg.trunc}/" \
           f"{B}x{M}x{K}x{N}/g{g}/{bits}/{'cpu' if interpret else 'tpu'}"
+    if M <= 16:
+        bms = sorted({M, -(-M // 8) * 8, 16})
+    else:
+        bms = _mxu_opts(M)[:2]
     cands = [(bm, bn, bk)
-             for bm in _mxu_opts(M)[:2] for bn in _mxu_opts(N)[:2]
+             for bm in bms for bn in _mxu_opts(N)[:2]
              for bk in (16, 32) if bk <= max(g, 16)]
     # one shared operand set for all candidates (shape, not data, matters)
     rng = np.random.default_rng(0)

@@ -210,7 +210,14 @@ def dscim_fused_mvm_prepared(x, qw: QuantizedLinearWeight, cfg: DSCIMConfig,
         bm, bn, bk = autotune.fused_tiles(
             (B, M, K, N), cfg, g, interpret=interpret, bits=bits)
     bk = bk or min(16, g)
-    bm = bm or min(128, _round_up(M, 8))
+    if bm is None:
+        # decode-shape (skinny-M GEMV) default: a pad-free bm=M tile — the
+        # M grid dim collapses to 1 and no dead rows are computed (the
+        # 8-row rounding would do 8x the M-work at M=1).  Interpret mode
+        # has no sublane-alignment constraint; on TPU the aligned default
+        # stays (Mosaic min sublane tiles) and the autotuner — whose
+        # candidate set includes bm=M — picks whatever actually wins.
+        bm = M if (M <= 16 and interpret) else min(128, _round_up(M, 8))
     bn = bn or min(128, _round_up(N, 8))
 
     xq = quantize_activations_windowed(x3, nw, g)       # (B,M,nw,1) scales
@@ -250,27 +257,56 @@ def dscim_fused_mvm(x, w, cfg: DSCIMConfig, *, group_k: int | None = 128,
 
 
 def dscim_fused_mvm_sharded(x, qw: QuantizedLinearWeight, cfg: DSCIMConfig,
-                            mesh, *, axis: str = "model", **kw):
+                            mesh, *, axis: str = "model",
+                            batch_axes: tuple = (), **kw):
     """Model-axis sharded fused MVM (multi-chip serving, ROADMAP item).
 
     The prepared weight's output columns tile over the ``axis`` mesh axis —
-    ``q`` (nw, g, N) and ``scale`` (nw, N) both shard on N, x broadcasts,
-    and the output lands N-sharded (no collective: quantization windows
-    live on the local K axis, the StoX-Net/Stoch-IMC array-banking
-    decomposition).  Bit-identical to the single-device prepared path.
+    ``q`` (nw, g, N) and ``scale`` (nw, N) both shard on N, and the output
+    lands N-sharded (no collective: quantization windows live on the local
+    K axis, the StoX-Net/Stoch-IMC array-banking decomposition).
+    ``batch_axes``: DP mesh axes the leading dim of x/out additionally
+    shards over (when x has a batch dim and it divides) — on a
+    data x model serving mesh each data group then computes only its batch
+    slice instead of redoing the full batch; with no batch axes or a
+    non-dividing batch, x broadcasts.  Bit-identical to the single-device
+    prepared path either way (per-element math is placement-invariant).
+
+    When N does not divide over the axis, the call degrades to a replicated
+    shard_map (every device computes the full output — still correct, still
+    a legal Pallas-under-mesh placement) instead of failing, and warns once
+    per trace: the redundant compute + resident planes on every device are
+    a misconfiguration an operator should see.  Serving meshes should pick
+    an axis size dividing every DS-CIM matrix's N.
     """
+    import math as _math
+
     from jax.sharding import PartitionSpec as P
 
     from repro.parallel import shard_map
 
     nshard = mesh.shape[axis]
-    if qw.n % nshard != 0:
-        raise ValueError(f"N={qw.n} not divisible by mesh axis "
-                         f"{axis!r}={nshard}")
-    qspec = P(*([None] * (qw.q.ndim - 1)), axis)
-    sspec = P(*([None] * (qw.scale.ndim - 1)), axis)
-    xspec = P(*([None] * x.ndim))
-    ospec = P(*([None] * (x.ndim - 1)), axis)
+    t = axis if qw.n % nshard == 0 else None
+    if t is None:
+        import warnings
+        warnings.warn(
+            f"dscim_fused_mvm_sharded: N={qw.n} not divisible by mesh axis "
+            f"{axis!r}={nshard}; replicating — every device computes the "
+            "full output (no speedup, N-fold redundant work/memory)",
+            stacklevel=2)
+    # leading batch dim over the DP axes (x ndim >= 2 keeps K unsharded)
+    b = None
+    if batch_axes and x.ndim >= 2:
+        bsize = _math.prod(mesh.shape[a] for a in batch_axes)
+        if x.shape[0] % bsize == 0:
+            b = tuple(batch_axes)
+    qspec = P(*([None] * (qw.q.ndim - 1)), t)
+    sspec = P(*([None] * (qw.scale.ndim - 1)), t)
+    xdims = [b] + [None] * (x.ndim - 1)       # b is None unless it divides
+    # out has x's ndim with K replaced by N; 1D x -> 1D out (N,)
+    odims = [b] + [None] * (x.ndim - 2) + [t] if x.ndim >= 2 else [t]
+    xspec = P(*xdims)
+    ospec = P(*odims)
 
     def inner(xl, ql, sl):
         qwl = QuantizedLinearWeight(ql, sl, qw.k_orig, qw.group_k)

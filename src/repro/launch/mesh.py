@@ -13,7 +13,7 @@ import jax
 from repro.parallel import ParallelCtx
 
 __all__ = ["make_mesh", "make_production_mesh", "make_parallel_ctx",
-           "make_debug_mesh"]
+           "make_debug_mesh", "parallel_ctx_from_spec"]
 
 
 def make_mesh(shape, axes):
@@ -43,3 +43,20 @@ def make_debug_mesh(data: int = 2, model: int = 2, pod: int = 0):
 def make_parallel_ctx(mesh, sp: bool = False) -> ParallelCtx:
     dp_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
     return ParallelCtx(mesh=mesh, dp_axes=dp_axes, tp_axis="model", sp=sp)
+
+
+def parallel_ctx_from_spec(spec: str) -> ParallelCtx:
+    """CLI mesh spec -> ParallelCtx: 'model=4' or 'data=2,model=4'.
+
+    The serving convention (launch/serve.py ``--mesh``): a ('data',
+    'model') mesh with omitted axes defaulting to 1 — 'model=4' is a pure
+    tensor-parallel serving mesh; needs data*model visible jax devices."""
+    sizes = {"data": 1, "model": 1}
+    for part in spec.split(","):
+        axis, _, n = part.partition("=")
+        if axis not in sizes or not n.isdigit() or int(n) < 1:
+            raise ValueError(f"bad mesh spec {spec!r}; want e.g. 'model=4' "
+                             "or 'data=2,model=4'")
+        sizes[axis] = int(n)
+    mesh = make_mesh((sizes["data"], sizes["model"]), ("data", "model"))
+    return make_parallel_ctx(mesh)

@@ -1,5 +1,15 @@
-"""Batched serving driver: prefill + greedy decode, with the DS-CIM
+"""Batched serving driver: device-resident generation with the DS-CIM
 approximate-MVM path as a first-class serving option (--dscim).
+
+Generation is **scanned** by default: ``serve_batch`` builds one jitted
+``generate`` (launch/steps.py ``make_generate_fn``) that runs prefill plus
+an (n_tokens-1)-step ``lax.scan`` of decode steps on device — the host
+dispatches exactly once per request instead of once per token, the KV
+cache lives in the scan carry (buffers reused in place, never copied back
+to host), and tokens accumulate on device.  The legacy host loop (one
+jitted decode dispatch per token, cache donated between calls) is kept
+behind ``scan=False`` as the dispatch-overhead A/B; benchmarks/serve_bench
+records both as tok/s trajectory rows.
 
 DS-CIM modes map to DSCIMLinear backends (core/dscim_layer.py):
   exact        — int8 adder-tree baseline (DCIM)
@@ -7,24 +17,30 @@ DS-CIM modes map to DSCIMLinear backends (core/dscim_layer.py):
   kernel       — the serving hot path: fused single-launch Pallas kernel
                  (kernels/dscim_fused.py) — all quantization windows, sign
                  corrections and dequant scales in one launch, batch dims
-                 on a batch grid axis, no (M, nw, N) psum in HBM
+                 on a batch grid axis, no (M, nw, N) psum in HBM; decode
+                 shapes get pad-free skinny-M tiles from the checked-in
+                 autotune cache (kernels/autotune.py)
   paper_inject — paper-style per-output error injection (fast)
 A '+attn' mode suffix (e.g. kernel+attn:dscim1:256) additionally routes the
 attention projections through the macro.
 
-Prepare-once weights (default, --no-prepare to A/B): before jitting the
-steps, every DS-CIM-eligible matrix is converted to a resident window-packed
-int8 ``QuantizedLinearWeight`` (launch/steps.py prepare_serving_params) —
-the software twin of the CIM array's static int8 storage.  The jitted decode
-step then quantizes activations only; per-token weight re-quantization, the
-old hot-path behavior, is gone from the HLO.  Outputs are bit-identical to
-the per-call path under float32 compute (the reduced/serve-test configs);
-under bfloat16 compute the per-call path quantizes the *cast* weights while
-prepare-once quantizes the f32 originals — prepared is the more faithful of
-the two (no double rounding), matching the hardware flow.  Multi-chip: the
-prepared planes + scales shard on N over the 'model' mesh axis
-(kernels/dscim_fused.py dscim_fused_mvm_sharded, launch/sharding.py
-qweight_specs).
+Prepare-once weights (default, --no-prepare to A/B): before jitting, every
+DS-CIM-eligible matrix — including the MoE shared expert, also under a
+mesh — is converted to a resident window-packed int8
+``QuantizedLinearWeight`` (launch/steps.py prepare_serving_params), the
+software twin of the CIM array's static int8 storage.  The jitted loop
+then quantizes activations only.  Outputs are bit-identical to the
+per-call path under float32 compute; under bfloat16 compute prepared is
+the more faithful of the two (no double rounding of cast weights).
+
+Multi-chip (--mesh, e.g. --mesh model=4): ``serve_batch`` takes a
+ParallelCtx (launch/mesh.py ``parallel_ctx_from_spec``), places the
+prepared params by launch/sharding.py rules — int8 planes + per-window
+scales N-sharded over 'model' (``qweight_specs``), prepared shared
+experts replicated — and the whole scanned loop runs under the mesh: the
+kernel mode routes through ``dscim_fused_mvm_sharded`` (shard_map; windows
+stay chip-local on K, no collective in the MVM) with no per-token host
+sync anywhere.  Bit-identical to single-device serving.
 
 The serve report compares greedy tokens + logit RMSE against the float
 path, which is the model-level reproduction of the paper's Table II
@@ -40,32 +56,61 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch
-from repro.launch.steps import (make_decode_step, make_prefill_step,
-                                prepare_serving_params)
+from repro.launch.steps import (make_decode_step, make_generate_fn,
+                                make_prefill_step, prepare_serving_params)
 from repro.models import get_model
 
 __all__ = ["serve_batch", "main"]
 
 
 def serve_batch(cfg, params, prompts: np.ndarray, n_tokens: int,
-                par=None, prepare: bool = True):
+                par=None, prepare: bool = True, scan: bool = True,
+                trace_logits: bool = False):
     """prompts (B, S) int32 -> generated (B, n_tokens) int32, logits list.
 
+    ``par``: ParallelCtx for multi-chip serving — params are placed by the
+    launch/sharding.py rules (prepared qweights N-sharded over 'model')
+    and the whole generation loop runs under the mesh.
     ``prepare``: quantize DS-CIM-eligible weights once before jitting
     (no-op when cfg.dscim is 'off'/'float'); pass False to A/B the legacy
     per-call weight-quantization path (bit-identical under f32 compute;
-    see the module docstring for the bf16-compute caveat)."""
-    model = get_model(cfg)
+    see the module docstring for the bf16-compute caveat).
+    ``scan``: device-resident scanned generation (default — one dispatch
+    per request); False runs the legacy host loop (one dispatch per
+    token, cache donated between steps).
+    ``trace_logits``: also return the per-step logit trace (off the hot
+    path by default: the returned list then holds only prefill logits)."""
     if prepare:
         params = prepare_serving_params(cfg, params, par)
+    if par is not None:
+        from repro.launch.sharding import param_specs, to_shardings
+        params = jax.device_put(
+            params, to_shardings(par.mesh, param_specs(cfg, par, params)))
+    batch = {"tokens": jnp.asarray(prompts)}
+    if scan:
+        generate = make_generate_fn(cfg, par, n_tokens,
+                                    trace_logits=trace_logits)
+        tokens, logits = generate(params, batch)
+        trace = list(np.asarray(logits)) if trace_logits else [logits]
+        return np.asarray(tokens), trace
+    # legacy host loop (dispatch-overhead A/B baseline)
     capacity = prompts.shape[1] + n_tokens
     prefill = jax.jit(make_prefill_step(cfg, par, capacity=capacity))
-    decode = jax.jit(make_decode_step(cfg, par), donate_argnums=(2,))
-    logits, cache = prefill(params, {"tokens": jnp.asarray(prompts)})
+    if trace_logits:
+        # per-step logits ride along so the two drivers A/B the full trace
+        decode_lg = jax.jit(make_decode_step(cfg, par, return_logits=True),
+                            donate_argnums=(2,))
+    else:
+        decode = jax.jit(make_decode_step(cfg, par), donate_argnums=(2,))
+    logits, cache = prefill(params, batch)
     tok = jnp.argmax(logits, -1).astype(jnp.int32)
     out, logit_trace = [tok], [logits]
     for _ in range(n_tokens - 1):
-        tok, cache = decode(params, {"token": tok}, cache)
+        if trace_logits:
+            tok, logits, cache = decode_lg(params, {"token": tok}, cache)
+            logit_trace.append(logits)
+        else:
+            tok, cache = decode(params, {"token": tok}, cache)
         out.append(tok)
     return np.stack([np.asarray(t) for t in out], axis=1), logit_trace
 
@@ -84,8 +129,26 @@ def main(argv=None):
     ap.add_argument("--no-prepare", action="store_true",
                     help="keep float weights and re-quantize per call "
                          "(legacy hot path; default is prepare-once int8)")
+    ap.add_argument("--host-loop", action="store_true",
+                    help="legacy one-dispatch-per-token host loop instead "
+                         "of the scanned device-resident generate (A/B)")
+    ap.add_argument("--mesh", default=None, metavar="SPEC",
+                    help="serve under a mesh, e.g. 'model=4' or "
+                         "'data=2,model=4' (needs that many jax devices; "
+                         "prepared qweights shard N over 'model')")
+    ap.add_argument("--tune", action="store_true",
+                    help="consult the fused-kernel tile autotuner (the "
+                         "checked-in cache makes this a lookup for the "
+                         "serving decode shapes)")
     args = ap.parse_args(argv)
 
+    if args.tune:
+        import os
+        os.environ["REPRO_DSCIM_TUNE"] = "1"
+    par = None
+    if args.mesh:
+        from repro.launch.mesh import parallel_ctx_from_spec
+        par = parallel_ctx_from_spec(args.mesh)
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
@@ -95,11 +158,14 @@ def main(argv=None):
     prompts = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len),
                            dtype=np.int32)
 
+    mode = "host-loop" if args.host_loop else "scanned"
     t0 = time.time()
-    base_tokens, base_logits = serve_batch(cfg, params, prompts, args.tokens)
+    base_tokens, base_logits = serve_batch(cfg, params, prompts, args.tokens,
+                                           par=par, scan=not args.host_loop)
     dt = time.time() - t0
     tps = args.batch * args.tokens / dt
-    print(f"[serve] float path: {tps:.1f} tok/s "
+    print(f"[serve] float path ({mode}"
+          f"{', mesh ' + args.mesh if args.mesh else ''}): {tps:.1f} tok/s "
           f"(batch={args.batch}, {args.tokens} steps)")
 
     if args.dscim != "off":
@@ -107,7 +173,9 @@ def main(argv=None):
         cfg2 = dataclasses.replace(cfg, dscim=args.dscim)
         t0 = time.time()
         ds_tokens, ds_logits = serve_batch(cfg2, params, prompts, args.tokens,
-                                           prepare=not args.no_prepare)
+                                           par=par,
+                                           prepare=not args.no_prepare,
+                                           scan=not args.host_loop)
         dt = time.time() - t0
         agree = float((ds_tokens == base_tokens).mean())
         rmse = float(jnp.sqrt(jnp.mean(

@@ -17,6 +17,9 @@ dedicated rule: the int8 window planes (*, nw, g, N) and per-window scales
 'model' axis — the paper's multi-chip array banking: quantization windows
 stay chip-local on K, output columns tile across chips.  The window dims
 are never sharded (a window is one physical 128-row accumulation).
+Exception: a prepared MoE *shared-expert* weight replicates instead — the
+shard_map MoE body computes the dense shared expert locally per token
+slice (models/lm.py), so its int8 planes must be whole on every device.
 """
 from __future__ import annotations
 
@@ -25,7 +28,8 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
-from repro.core.qweights import QuantizedLinearWeight, path_str as _path_str
+from repro.core.qweights import (QuantizedLinearWeight, path_str as _path_str,
+                                 qweight_replicated_specs)
 from repro.parallel import ParallelCtx
 
 __all__ = ["param_specs", "batch_specs", "cache_partition", "to_shardings",
@@ -99,6 +103,12 @@ def param_specs(cfg: ArchConfig, par: ParallelCtx, params_struct):
 
     def assign(path, leaf):
         if isinstance(leaf, QuantizedLinearWeight):
+            if "moe/shared" in _path_str(path):
+                # prepared shared expert: replicate the resident int8
+                # planes — the shard_map MoE body (models/lm.py) computes
+                # the dense-on-every-token shared expert locally with no
+                # FSDP gather, bit-identical to single-device serving
+                return qweight_replicated_specs(leaf)
             return qweight_specs(leaf, tp, par.mesh)
         return _spec_for(_path_str(path), leaf.ndim, leaf.shape, fsdp, tp,
                          par.mesh)

@@ -2,8 +2,13 @@
 plus ``prepare_serving_params``, the quantize-once entry of the DS-CIM
 serve path (convert every eligible weight matrix to a resident int8
 ``QuantizedLinearWeight`` before jitting the prefill/decode steps, so no
-weight quantization appears in the decode-step HLO)."""
+weight quantization appears in the decode-step HLO), and
+``make_generate_fn``, the device-resident generation loop (prefill + an
+n-token ``lax.scan`` of decode steps inside one jit — the host sees one
+dispatch per request instead of one per token)."""
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -15,7 +20,7 @@ from repro.optim.adamw import AdamW
 from repro.parallel import ParallelCtx
 
 __all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
-           "make_eval_step", "prepare_serving_params"]
+           "make_eval_step", "make_generate_fn", "prepare_serving_params"]
 
 
 def prepare_serving_params(cfg: ArchConfig, params,
@@ -30,9 +35,10 @@ def prepare_serving_params(cfg: ArchConfig, params,
     compute the per-call path quantizes cast weights, prepare-once the f32
     originals (core/qweights.py).
 
-    With a mesh (``par`` given) the MoE shared expert stays float — its FSDP
-    gather path needs float leaves (models/lm.py ``_moe_apply``); it still
-    runs DS-CIM via on-the-fly quantization there."""
+    The MoE shared expert is prepared under a mesh too: its resident int8
+    planes replicate across the mesh (launch/sharding.py) and the shard_map
+    MoE body computes it locally, bit-identically to single-device serving
+    (models/lm.py ``_moe_apply``) — the former float-only guard is gone."""
     from repro.core.qweights import prepare_dscim_params, split_dscim_mode
     spec = getattr(cfg, "dscim", "off")
     if split_dscim_mode(spec)[0] in ("off", "float"):
@@ -40,8 +46,7 @@ def prepare_serving_params(cfg: ArchConfig, params,
     from repro.models.lm import _linear_for
     lin = _linear_for(spec)
     return prepare_dscim_params(params, cfg,
-                                group_k=lin.group_k if lin else 128,
-                                include_moe_shared=par is None)
+                                group_k=lin.group_k if lin else 128)
 
 AUX_WEIGHT = 0.01  # MoE load-balance loss weight
 
@@ -83,12 +88,66 @@ def make_prefill_step(cfg: ArchConfig, par: ParallelCtx | None,
 
 
 def make_decode_step(cfg: ArchConfig, par: ParallelCtx | None,
-                     greedy: bool = True):
+                     greedy: bool = True, return_logits: bool = False):
+    """One greedy decode step.  ``return_logits``: also return the step's
+    logits — the host-loop logit-trace driver (launch/serve.py) rides the
+    same step function instead of re-implementing it."""
     model = get_model(cfg)
 
     def decode_step(params, batch, cache):
         logits, cache = model.decode(params, cfg, batch, cache, par)
         token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if return_logits:
+            return token, logits, cache
         return token, cache
 
     return decode_step
+
+
+@functools.lru_cache(maxsize=8)
+def make_generate_fn(cfg: ArchConfig, par: ParallelCtx | None = None,
+                     n_tokens: int = 16, *, trace_logits: bool = False,
+                     jit: bool = True):
+    """Device-resident greedy generation: prefill + an (n_tokens-1)-step
+    ``lax.scan`` of decode steps inside a single jit.
+
+    The host dispatches exactly once per request; the KV cache lives in the
+    scan carry (XLA reuses its buffers in place — no per-token host round
+    trip, no per-token cache copy), and the generated tokens accumulate on
+    device in the scan ys.  ``generate(params, batch)`` with ``batch =
+    {"tokens": (B, S) int32}`` returns ``(tokens (B, n_tokens) int32,
+    logits)`` where ``logits`` is the prefill last-token logits by default —
+    the per-token logit trace is off the hot path and only materialized
+    (stacked, (n_tokens, B, Vp)) under ``trace_logits=True``.
+
+    Under a mesh (``par`` given) the whole scanned loop runs inside the one
+    jit with the params' committed shardings — prepared DS-CIM weights route
+    through the model-axis sharded fused MVM (core/dscim_layer.py) with no
+    per-token host sync.  The builder is cached, so repeated ``serve_batch``
+    calls with the same (cfg, par, n_tokens) reuse the compiled executable.
+    """
+    model = get_model(cfg)
+
+    def generate(params, batch):
+        capacity = batch["tokens"].shape[1] + n_tokens
+        logits0, cache = model.prefill(params, cfg, batch, par,
+                                       capacity=capacity)
+        tok0 = jnp.argmax(logits0, axis=-1).astype(jnp.int32)
+
+        def step(carry, _):
+            tok, cache = carry
+            logits, cache = model.decode(params, cfg, {"token": tok},
+                                         cache, par)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return (tok, cache), ((tok, logits) if trace_logits else tok)
+
+        (_, cache), ys = jax.lax.scan(step, (tok0, cache), None,
+                                      length=n_tokens - 1)
+        toks = ys[0] if trace_logits else ys
+        tokens = jnp.concatenate(
+            [tok0[:, None], jnp.moveaxis(toks, 0, 1)], axis=1)
+        if trace_logits:
+            return tokens, jnp.concatenate([logits0[None], ys[1]], axis=0)
+        return tokens, logits0
+
+    return jax.jit(generate) if jit else generate

@@ -46,26 +46,38 @@ def _parse_dscim(dscim_spec: str):
     return mode, attn_suffix, parts[1], int(parts[2]), calib
 
 
-@functools.lru_cache(maxsize=8)
-def _linear_for(dscim_spec: str):
+@functools.lru_cache(maxsize=16)
+def _linear_for(dscim_spec: str, par: ParallelCtx | None = None):
     """DS-CIM linear operator for cfg.dscim (see ``_parse_dscim``).
 
     Applied to the MLP matmuls, the MoE shared expert and the LM head (the
-    dominant MVMs).  Returns None when 'off'."""
+    dominant MVMs).  Returns None when 'off'.
+
+    ``par``: under a mesh, the 'kernel' mode operator carries the mesh so
+    prepared weights route through the sharded fused MVM
+    (kernels/dscim_fused.py ``dscim_fused_mvm_sharded`` — a Pallas call
+    must run inside shard_map on a multi-device mesh; N shards over the TP
+    axis, the request batch over the DP axes, and the windows-stay-local
+    decomposition is bit-identical to single-device).  The pure-jnp
+    backends partition fine under GSPMD and ignore the mesh."""
     if dscim_spec == "off":
         return None
     from repro.core.dscim_layer import make_linear
     mode, _, variant, length, calib = _parse_dscim(dscim_spec)
-    return make_linear(variant, length, mode, calib)
+    mesh = par.mesh if (par is not None and mode == "kernel") else None
+    axis = par.tp_axis if par is not None else "model"
+    dp = par.dp_axes if (par is not None and mode == "kernel") else ()
+    return make_linear(variant, length, mode, calib, mesh=mesh,
+                       shard_axis=axis, batch_axes=dp)
 
 
-@functools.lru_cache(maxsize=8)
-def _attn_linear_for(dscim_spec: str):
+@functools.lru_cache(maxsize=16)
+def _attn_linear_for(dscim_spec: str, par: ParallelCtx | None = None):
     """The attention-projection DS-CIM operator — non-None only for
     '<mode>+attn' specs."""
     if dscim_spec == "off" or not _parse_dscim(dscim_spec)[1]:
         return None
-    return _linear_for(dscim_spec)
+    return _linear_for(dscim_spec, par)
 
 
 def _norm(cfg: ArchConfig, x, params):
@@ -124,14 +136,15 @@ def _moe_apply(lp_moe, h, cfg: ArchConfig, par: ParallelCtx | None,
                              has_shared=cfg.moe_shared > 0,
                              linear=_linear_for(cfg.dscim), salt=salt)
         return out, aux
-    if cfg.moe_shared and isinstance(
-            lp_moe.get("shared", {}).get("w_gate"), QuantizedLinearWeight):
-        raise NotImplementedError(
-            "prepared MoE shared-expert weights are single-device-serve "
-            "only (the FSDP gather path expects float leaves); prepare "
-            "with prepare_serving_params(cfg, params, par) / "
-            "prepare_dscim_params(include_moe_shared=False) for "
-            "distributed MoE")
+    # Shared expert under the mesh: a prepared (resident int8) shared expert
+    # replicates across the mesh (launch/sharding.py keeps its planes
+    # unsharded) and the shard_map body computes it locally — bit-identical
+    # per token to single-device serving, no FSDP gather of int8 planes.
+    # Float shared weights keep the FSDP-shard + gather path; either way the
+    # gathered/replicated weights feed the same DS-CIM linear as the local
+    # path (the operator must be the *local* one — no nested shard_map).
+    shared_prepared = bool(cfg.moe_shared) and isinstance(
+        lp_moe.get("shared", {}).get("w_gate"), QuantizedLinearWeight)
     fsdp = par.dp_axes[-1]
     tp = par.tp_axis
     dp = par.dp_axes
@@ -139,17 +152,23 @@ def _moe_apply(lp_moe, h, cfg: ArchConfig, par: ParallelCtx | None,
               "w_down": P(tp, fsdp, None)}
     pspecs = {"router": P(None, None), "experts": especs}
     if cfg.moe_shared:
-        pspecs["shared"] = {"w_gate": P(None, fsdp), "w_up": P(None, fsdp),
-                            "w_down": P(fsdp, None)}
+        if shared_prepared:
+            from repro.core.qweights import qweight_replicated_specs
+            pspecs["shared"] = {k: qweight_replicated_specs(v)
+                                for k, v in lp_moe["shared"].items()}
+        else:
+            pspecs["shared"] = {"w_gate": P(None, fsdp),
+                                "w_up": P(None, fsdp),
+                                "w_down": P(fsdp, None)}
 
-    def inner(lp, x):
+    def inner(lp, x, *s):
         # FSDP: gather the weight shards before use (explicit ZeRO-3)
         e = lp["experts"]
         e = {"w_gate": jax.lax.all_gather(e["w_gate"], fsdp, axis=2, tiled=True),
              "w_up": jax.lax.all_gather(e["w_up"], fsdp, axis=2, tiled=True),
              "w_down": jax.lax.all_gather(e["w_down"], fsdp, axis=1, tiled=True)}
         lp2 = dict(lp, experts=e)
-        if cfg.moe_shared:
+        if cfg.moe_shared and not shared_prepared:
             sh = lp["shared"]
             lp2["shared"] = {
                 "w_gate": jax.lax.all_gather(sh["w_gate"], fsdp, axis=1, tiled=True),
@@ -157,14 +176,22 @@ def _moe_apply(lp_moe, h, cfg: ArchConfig, par: ParallelCtx | None,
                 "w_down": jax.lax.all_gather(sh["w_down"], fsdp, axis=0, tiled=True)}
         out, aux = moe(lp2, x, top_k=cfg.moe_topk, ep_axis=tp,
                        capacity_factor=cfg.moe_capacity,
-                       has_shared=cfg.moe_shared > 0)
+                       has_shared=cfg.moe_shared > 0,
+                       linear=_linear_for(cfg.dscim),
+                       salt=s[0] if s else None)
         return out, jax.lax.pmean(aux, (*dp, tp))
 
+    # the (possibly traced) salt rides as an explicit replicated operand —
+    # shard_map bodies must not close over tracers
+    operands = (lp_moe, h)
+    in_specs = (pspecs, P(dp, None, None))
+    if salt is not None:
+        operands += (jnp.asarray(salt, jnp.int32),)
+        in_specs += (P(),)
     return shard_map(
-        inner, mesh=par.mesh,
-        in_specs=(pspecs, P(dp, None, None)),
+        inner, mesh=par.mesh, in_specs=in_specs,
         out_specs=(P(dp, None, None), P()),
-    )(lp_moe, h)
+    )(*operands)
 
 
 # ---------------------------------------------------------------------------
@@ -201,8 +228,8 @@ def _embed_in(params, cfg: ArchConfig, batch, dt):
     return x
 
 
-def _head(params, cfg: ArchConfig, x):
-    lin = _linear_for(cfg.dscim)
+def _head(params, cfg: ArchConfig, x, par: ParallelCtx | None = None):
+    lin = _linear_for(cfg.dscim, par)
     head = params.get("lm_head")
     if isinstance(head, QuantizedLinearWeight):
         # prepare-once serve path: the head (incl. the tied-embedding head,
@@ -228,7 +255,7 @@ def _block_apply(cfg: ArchConfig, par, lp, x, positions, collect_kv: bool,
     h_attn, kv = attention(lp["attn"], _norm(cfg, x, lp["ln1"]), cfg,
                            positions, cfg.q_chunk, cfg.kv_chunk,
                            return_kv=collect_kv,
-                           linear=_attn_linear_for(cfg.dscim), salt=salt)
+                           linear=_attn_linear_for(cfg.dscim, par), salt=salt)
     x = x + h_attn
     x = _constraint(x, cfg, par)
     hn = _norm(cfg, x, lp["ln2"])
@@ -236,7 +263,7 @@ def _block_apply(cfg: ArchConfig, par, lp, x, positions, collect_kv: bool,
         h_ff, aux = _moe_apply(lp["moe"], hn, cfg, par, salt=salt)
     else:
         h_ff, aux = mlp(lp["mlp"], hn, cfg.mlp_kind,
-                        linear=_linear_for(cfg.dscim), salt=salt), 0.0
+                        linear=_linear_for(cfg.dscim, par), salt=salt), 0.0
     x = _constraint(x + h_ff, cfg, par)
     return x, aux, kv
 
@@ -263,7 +290,7 @@ def forward(params, cfg: ArchConfig, batch, par: ParallelCtx | None = None):
         body, (x, jnp.float32(0.0)),
         (params["layers"], jnp.arange(cfg.n_layers, dtype=jnp.int32)))
     x = _norm(cfg, x, params["final_norm"])
-    return _head(params, cfg, x), aux / cfg.n_layers
+    return _head(params, cfg, x, par), aux / cfg.n_layers
 
 
 def prefill(params, cfg: ArchConfig, batch, par: ParallelCtx | None = None,
@@ -297,7 +324,7 @@ def prefill(params, cfg: ArchConfig, batch, par: ParallelCtx | None = None,
         ks = jnp.pad(ks, pad)
         vs = jnp.pad(vs, pad)
     x = _norm(cfg, x[:, -1:], params["final_norm"])
-    logits = _head(params, cfg, x)[:, 0]
+    logits = _head(params, cfg, x, par)[:, 0]
     return logits, {"k": ks, "v": vs, "pos": jnp.int32(S)}
 
 
@@ -317,7 +344,7 @@ def decode(params, cfg: ArchConfig, batch, cache,
         salt = li * 8
         h, nk, nv = decode_attention(lp["attn"], _norm(cfg, x, lp["ln1"]),
                                      ck, cv, pos, cfg,
-                                     linear=_attn_linear_for(cfg.dscim),
+                                     linear=_attn_linear_for(cfg.dscim, par),
                                      salt=salt)
         x = x + h
         hn = _norm(cfg, x, lp["ln2"])
@@ -325,7 +352,7 @@ def decode(params, cfg: ArchConfig, batch, cache,
             h_ff, _ = _moe_apply(lp["moe"], hn, cfg, par, salt=salt)
         else:
             h_ff = mlp(lp["mlp"], hn, cfg.mlp_kind,
-                       linear=_linear_for(cfg.dscim), salt=salt)
+                       linear=_linear_for(cfg.dscim, par), salt=salt)
         return x + h_ff, (nk, nv)
 
     x, (nk, nv) = jax.lax.scan(

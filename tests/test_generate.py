@@ -1,0 +1,140 @@
+"""Device-resident scanned generation (launch/steps.py make_generate_fn):
+bit-identical tokens + logits vs the legacy host loop for every DS-CIM
+mode under f32 compute, exactly one decode scan in the traced HLO (one
+host dispatch per request), cache-donation no-copy behavior, and the
+logit-trace-off-the-hot-path default."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.launch.serve import serve_batch
+from repro.launch.steps import (make_decode_step, make_generate_fn,
+                                make_prefill_step, prepare_serving_params)
+from repro.models import get_model
+
+
+def _setup(dscim="off", arch="qwen3-0.6b"):
+    cfg = get_arch(arch).reduced()
+    if dscim != "off":
+        cfg = dataclasses.replace(cfg, dscim=dscim)
+    model = get_model(cfg)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    prompts = np.random.default_rng(0).integers(0, cfg.vocab, (2, 8),
+                                                dtype=np.int32)
+    return cfg, params, prompts
+
+
+# every DSCIMLinear backend, the fused Pallas kernel path, and the '+attn'
+# opt-in — the scanned loop must replay the host loop bit for bit (f32
+# compute; the noise backends' fallback keys fold shape+salt only, so the
+# per-step draws match across drivers too)
+MODES = ["off", "exact:dscim2:64", "lut:dscim2:64", "bitmatmul:dscim2:64",
+         "kernel:dscim2:64", "kernel+attn:dscim2:64",
+         "statistical:dscim2:64", "paper_inject:dscim2:64"]
+
+
+@pytest.mark.parametrize("dscim", MODES)
+def test_scanned_matches_host_loop_bitwise(dscim):
+    cfg, params, prompts = _setup(dscim)
+    t_host, l_host = serve_batch(cfg, params, prompts, 5, scan=False)
+    t_scan, l_scan = serve_batch(cfg, params, prompts, 5, scan=True)
+    np.testing.assert_array_equal(t_host, t_scan)
+    np.testing.assert_array_equal(np.asarray(l_host[0]),
+                                  np.asarray(l_scan[0]))
+
+
+def _count_scans(jaxpr, length) -> int:
+    """Scan primitives of the given trip count, recursing into sub-jaxprs."""
+    def subs(v):
+        if hasattr(v, "jaxpr"):                      # ClosedJaxpr
+            return [v.jaxpr]
+        if hasattr(v, "eqns"):                       # Jaxpr
+            return [v]
+        if isinstance(v, (list, tuple)):
+            return [j for x in v for j in subs(x)]
+        return []
+
+    n = sum(1 for e in jaxpr.eqns
+            if e.primitive.name == "scan" and e.params.get("length") == length)
+    for e in jaxpr.eqns:
+        for v in e.params.values():
+            n += sum(_count_scans(j, length) for j in subs(v))
+    return n
+
+
+def test_generate_is_single_dispatch_single_scan():
+    """The whole decode loop is one lax.scan inside one jit: the traced
+    generate contains exactly one scan of length n_tokens-1 (the layer
+    scans have length n_layers and don't collide for this n_tokens)."""
+    cfg, params, prompts = _setup("exact:dscim2:64")
+    pp = prepare_serving_params(cfg, params)
+    batch = {"tokens": jnp.asarray(prompts)}
+    n = 6
+    assert n - 1 != cfg.n_layers
+    gen = make_generate_fn(cfg, None, n, jit=False)
+    jaxpr = jax.make_jaxpr(gen)(pp, batch)
+    assert _count_scans(jaxpr.jaxpr, n - 1) == 1
+
+
+def test_scanned_cache_no_copy_and_host_loop_donation():
+    """No-copy cache handling in both drivers.  Scanned: the KV cache lives
+    in the scan carry, so compiled temp memory grows only with the cache
+    *capacity*, never with one-copy-per-token (8x the tokens must stay far
+    under host-loop-copy scaling).  Host loop: donate_argnums actually
+    aliases — the donated cache buffer is deleted after the decode call."""
+    cfg, params, prompts = _setup("exact:dscim2:64")
+    pp = prepare_serving_params(cfg, params)
+    batch = {"tokens": jnp.asarray(prompts)}
+    B, S = prompts.shape
+    # bytes per cache position: k+v planes over layers/batch/kv-heads (f32)
+    slot = 2 * cfg.n_layers * B * cfg.n_kv * cfg.head_dim * 4
+    m4 = make_generate_fn(cfg, None, 4).lower(pp, batch) \
+        .compile().memory_analysis()
+    m32 = make_generate_fn(cfg, None, 32).lower(pp, batch) \
+        .compile().memory_analysis()
+    growth = m32.temp_size_in_bytes - m4.temp_size_in_bytes
+    # capacity grows by 28 slots; a per-token cache copy would add
+    # ~31 * (S+32) * slot bytes — require well under that, allowing a few
+    # capacity-proportional working buffers
+    assert growth < 6 * 28 * slot, (growth, slot)
+
+    prefill = jax.jit(make_prefill_step(cfg, None, capacity=S + 4))
+    decode = jax.jit(make_decode_step(cfg, None), donate_argnums=(2,))
+    logits, cache = prefill(pp, batch)
+    kbuf = cache["k"]
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    _, cache2 = decode(pp, {"token": tok}, cache)
+    assert kbuf.is_deleted()      # donated in place, not copied
+    assert not cache2["k"].is_deleted()
+
+
+def test_logit_trace_off_hot_path_by_default():
+    """Default serve returns only the prefill logits; trace_logits=True
+    materializes the full on-device per-step stack, consistent with the
+    default's tokens."""
+    cfg, params, prompts = _setup()
+    toks, lite = serve_batch(cfg, params, prompts, 5)
+    assert len(lite) == 1 and lite[0].shape == (2, cfg.vocab_padded)
+    toks_t, trace = serve_batch(cfg, params, prompts, 5, trace_logits=True)
+    assert len(trace) == 5
+    np.testing.assert_array_equal(toks, toks_t)
+    np.testing.assert_array_equal(np.asarray(lite[0]), np.asarray(trace[0]))
+    # greedy argmax of the traced logits reproduces the returned tokens
+    np.testing.assert_array_equal(
+        np.stack([np.argmax(lg, -1) for lg in trace], axis=1), toks_t)
+    # the host loop returns the same full per-step trace (driver A/B)
+    _, trace_h = serve_batch(cfg, params, prompts, 5, scan=False,
+                             trace_logits=True)
+    assert len(trace_h) == 5
+    for a, b in zip(trace, trace_h):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_generate_fn_builder_is_cached():
+    cfg, _, _ = _setup()
+    assert make_generate_fn(cfg, None, 7) is make_generate_fn(cfg, None, 7)
+    assert make_generate_fn(cfg, None, 7) is not make_generate_fn(cfg, None, 8)
