@@ -1,21 +1,23 @@
-"""Serving-loop microbench: host-loop vs device-resident scanned generation
-(ISSUE 3 acceptance rows).
+"""Serving-loop microbench: host-loop vs scanned generation (ISSUE 3),
+plus the only-live-work rows (ISSUE 4) — EOS early-exit + continuous
+batching vs the fixed-length scan on a skewed-completion-length queue,
+and the int8 block-paged KV cache vs the dense float cache.
 
-Times the two ``serve_batch`` drivers on the reduced serve config with
-prepared (resident int8) DS-CIM weights at decode batch sizes M in
-{1, 8, 16}: the legacy host loop dispatches one jitted decode per token
-(n_tokens host round trips), the scanned path dispatches one jitted
-prefill+scan per request (launch/steps.py ``make_generate_fn``).  The
-derived fields record the dispatch accounting the scan removes:
-``dispatches`` per request for each driver, plus
-``dispatch_overhead_removed_us`` = (n_tokens-1) x the *directly measured*
-per-dispatch host cost (a warmed jitted identity on the token array — the
-fixed dispatch+transfer cost every host-loop step pays and the scan
-doesn't).  The direct measurement is used because on interpret-mode CPU
-the Pallas kernel time dominates and wobbles by ~10%, burying the ~ms
-dispatch cost in an end-to-end subtraction; on a real TPU the same fields
-apply unchanged.  Compile time is excluded (both drivers are warmed
-before timing).
+Accounting (the ISSUE 4 fix): every serve row now carries
+``live_slot_steps`` and ``occupancy`` — the fixed-length drivers burn a
+slot-step per (slot, step) whether or not the slot still has useful work,
+so their occupancy on a skewed workload is sum(budgets)/(B*n_tokens) and
+the old all-slots tok/s over-credited padded/finished slots.  ``tok_s``
+on queue rows counts *useful* tokens only (each request's budget-long
+prefix), which is exactly the live-slot-step-credited rate: a live
+slot-step emits one useful token, a dead one earns nothing.
+
+The paged-KV rows record resident decode-cache bytes (dense fixed-
+capacity float cache vs int8 pages + per-page scales + bf16 tails +
+page table, core/kvcache.py) and the logit drift measured on the
+teacher-matched prefix — per row, decode steps up to the first token
+divergence — so feedback of a flipped argmax doesn't masquerade as
+quantization error.  Compile time is excluded everywhere (warmed runs).
 """
 from __future__ import annotations
 
@@ -41,17 +43,10 @@ def _host_loop(prefill, decode, params, batch, n_tokens):
     return jnp.stack(out, axis=1)
 
 
-def run(smoke: bool = False):
-    from repro.configs import get_arch
+def _dispatch_rows(cfg, params, smoke):
+    """PR 3 rows: host loop vs scanned generate, dispatch accounting."""
     from repro.launch.steps import (make_decode_step, make_generate_fn,
-                                    make_prefill_step,
-                                    prepare_serving_params)
-    from repro.models import get_model
-
-    cfg = dataclasses.replace(get_arch("qwen3-0.6b").reduced(), dscim=DSCIM)
-    model = get_model(cfg)
-    params = prepare_serving_params(
-        cfg, model.init_params(cfg, jax.random.PRNGKey(0)))
+                                    make_prefill_step)
     n_tokens = 4 if smoke else 16
     prompt_len = 8
     reps = 1 if smoke else 3
@@ -63,22 +58,22 @@ def run(smoke: bool = False):
         prefill = jax.jit(make_prefill_step(cfg, None,
                                             capacity=prompt_len + n_tokens))
         # cache donated between steps exactly like serve_batch's host loop
-        # (each timed rep starts from its own fresh prefill cache)
         decode = jax.jit(make_decode_step(cfg, None), donate_argnums=(2,))
         generate = make_generate_fn(cfg, None, n_tokens)
         us_host = timed(lambda: _host_loop(prefill, decode, params, batch,
                                            n_tokens), n=reps)
         us_scan = timed(lambda: generate(params, batch)[0], n=reps)
-        # per-dispatch host cost, measured directly on a warmed jitted
-        # identity over the token array (what each removed dispatch pays)
         tok = jnp.zeros((B,), jnp.int32)
         noop = jax.jit(lambda t: t + 0)
         us_dispatch = timed(lambda: noop(tok), n=max(reps, 3))
+        # fixed-length drivers: every slot-step is counted live (no EOS),
+        # which is exactly the over-credit the queue rows below expose
         shared = (f"n_tokens={n_tokens};dispatches_host={n_tokens};"
                   f"dispatches_scanned=1;"
                   f"dispatch_us={us_dispatch:.1f};"
                   f"dispatch_overhead_removed_us="
-                  f"{(n_tokens - 1) * us_dispatch:.1f}")
+                  f"{(n_tokens - 1) * us_dispatch:.1f};"
+                  f"live_slot_steps={B * n_tokens};occupancy=1.00")
         rows.append({
             "name": f"serve/host_loop/{DSCIM}/B{B}x{prompt_len}+{n_tokens}",
             "us": us_host,
@@ -90,6 +85,160 @@ def run(smoke: bool = False):
             "derived": (f"tok_s={B * n_tokens / us_scan * 1e6:.1f};"
                         f"speedup_vs_host_loop={us_host / us_scan:.2f}x;"
                         f"{shared}")})
+    return rows
+
+
+def _queue_rows(cfg, params, smoke):
+    """ISSUE 4 A/B at skewed completion lengths: a queue of R requests with
+    budgets 2..n_tokens served by (a) the PR 3 fixed-length scan in
+    R/slots-sized batches, (b) the EOS early-exit while_loop on the same
+    batches (exits at each batch's max budget), (c) continuous batching
+    (early-exit segments + admission into freed slots)."""
+    from repro.launch.serve import serve_batch, serve_continuous
+    n_tokens = 4 if smoke else 16
+    slots = 2 if smoke else 4
+    R = 4 if smoke else 8
+    prompt_len = 8
+    reps = 1 if smoke else 3    # odd, so timed()'s median is a real median
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, (R, prompt_len), dtype=np.int32)
+    budgets = np.linspace(2, n_tokens, R).round().astype(np.int32)
+    rng.shuffle(budgets)                     # admission order is skewed too
+    useful = int(budgets.sum())
+    tag = f"{DSCIM}/R{R}s{slots}x{prompt_len}+{n_tokens}"
+
+    def fixed_queue():
+        for i in range(0, R, slots):
+            serve_batch(cfg, params, prompts[i:i + slots], n_tokens,
+                        prepare=False)
+
+    def early_exit_queue():
+        for i in range(0, R, slots):
+            serve_batch(cfg, params, prompts[i:i + slots], n_tokens,
+                        prepare=False, eos_id=-1,
+                        max_new=budgets[i:i + slots])
+
+    stats = {}     # filled by the timed runs (no extra serve just for it)
+
+    def continuous_queue():
+        outs, st = serve_continuous(cfg, params, prompts, n_tokens,
+                                    slots=slots, seg_len=4, max_new=budgets,
+                                    eos_id=-1, prepare=False)
+        stats.update(st)
+        return outs
+
+    us_fixed = timed(fixed_queue, n=reps)
+    us_ee = timed(early_exit_queue, n=reps)
+    us_cont = timed(continuous_queue, n=reps)
+    # early exit runs each batch to its max budget (tokens incl. prefill,
+    # so max-1 decode steps after the batch prefill step)
+    ee_slot_steps = sum(slots * int(budgets[i:i + slots].max())
+                        for i in range(0, R, slots))
+    rows = [{
+        "name": f"serve/fixed_scan_queue/{tag}",
+        "us": us_fixed,
+        "derived": (f"tok_s={useful / us_fixed * 1e6:.1f};"
+                    f"useful_tokens={useful};"
+                    f"live_slot_steps={useful};"
+                    f"slot_steps={R * n_tokens};"
+                    f"occupancy={useful / (R * n_tokens):.2f}"),
+    }, {
+        "name": f"serve/early_exit_queue/{tag}",
+        "us": us_ee,
+        "derived": (f"tok_s={useful / us_ee * 1e6:.1f};"
+                    f"useful_tokens={useful};"
+                    f"live_slot_steps={useful};"
+                    f"slot_steps={ee_slot_steps};"
+                    f"occupancy={useful / ee_slot_steps:.2f};"
+                    f"speedup_vs_fixed={us_fixed / us_ee:.2f}x"),
+    }, {
+        # stated on the same token-slot basis as the other two rows
+        # (admission tokens count as live slot-steps, one slot-step per
+        # token emitted), so the three occupancy numbers are comparable —
+        # serve_continuous's own stats count decode steps only
+        "name": f"serve/continuous_queue/{tag}",
+        "us": us_cont,
+        "derived": (f"tok_s={useful / us_cont * 1e6:.1f};"
+                    f"useful_tokens={useful};"
+                    f"live_slot_steps={useful};"
+                    f"slot_steps={stats['slot_steps'] + R};"
+                    f"occupancy={useful / (stats['slot_steps'] + R):.2f};"
+                    f"speedup_vs_fixed={us_fixed / us_cont:.2f}x"),
+    }]
+    return rows
+
+
+def _paged_kv_rows(cfg_float, params, smoke):
+    """Int8 block-paged KV cache vs the dense float cache: tok/s, resident
+    decode-cache bytes, and teacher-matched-prefix logit drift."""
+    from repro.core.kvcache import (dense_cache_bytes, kv_cache_bytes,
+                                    paged_cache_specs)
+    from repro.launch.serve import logit_drift_rmse, serve_batch
+    from repro.launch.steps import make_generate_fn
+    B, prompt_len = 4, 16
+    n_tokens = 16 if smoke else 112        # capacity 32 / 128
+    page_size = 4
+    reps = 1 if smoke else 3
+    capacity = prompt_len + n_tokens
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg_float.vocab, (B, prompt_len),
+                           dtype=np.int32)
+    batch = {"tokens": jnp.asarray(prompts)}
+    gen_f = make_generate_fn(cfg_float, None, n_tokens)
+    gen_q = make_generate_fn(cfg_float, None, n_tokens, kv="int8",
+                             page_size=page_size)
+    us_f = timed(lambda: gen_f(params, batch)[0], n=reps)
+    us_q = timed(lambda: gen_q(params, batch)[0], n=reps)
+    bytes_f = dense_cache_bytes(cfg_float, B, capacity)
+    bytes_q = kv_cache_bytes(paged_cache_specs(cfg_float, B, capacity,
+                                               page_size))
+    # drift on the teacher-matched prefix (same fed-back tokens)
+    tf, lf = serve_batch(cfg_float, params, prompts, n_tokens,
+                         trace_logits=True, prepare=False)
+    tq, lq = serve_batch(cfg_float, params, prompts, n_tokens,
+                         trace_logits=True, prepare=False, kv="int8",
+                         page_size=page_size)
+    drift = logit_drift_rmse(tf, tq, lf, lq)
+    # fraction of the trace before the first per-row divergence — a raw
+    # all-positions agreement would be dominated by the feedback cascade
+    # after one argmax flip, not by the quantization under test
+    prefix = np.mean([(np.nonzero(tf[b] != tq[b])[0][0] + 1) / n_tokens
+                      if (tf[b] != tq[b]).any() else 1.0
+                      for b in range(B)])
+    shared = (f"kv_bytes_float={bytes_f};kv_bytes_int8={bytes_q};"
+              f"kv_bytes_ratio={bytes_f / bytes_q:.2f};"
+              f"logit_drift_rmse={drift:.5f};"
+              f"matched_prefix_frac={prefix:.3f};"
+              f"page_size={page_size};capacity={capacity}")
+    tag = f"float/B{B}x{prompt_len}+{n_tokens}"
+    return [{
+        "name": f"serve/kv_float/{tag}",
+        "us": us_f,
+        "derived": f"tok_s={B * n_tokens / us_f * 1e6:.1f};{shared}",
+    }, {
+        "name": f"serve/kv_int8_paged/{tag}",
+        "us": us_q,
+        "derived": (f"tok_s={B * n_tokens / us_q * 1e6:.1f};"
+                    f"speedup_vs_float_kv={us_f / us_q:.2f}x;{shared}"),
+    }]
+
+
+def run(smoke: bool = False):
+    from repro.configs import get_arch
+    from repro.launch.steps import prepare_serving_params
+    from repro.models import get_model
+
+    cfg = dataclasses.replace(get_arch("qwen3-0.6b").reduced(), dscim=DSCIM)
+    model = get_model(cfg)
+    params = prepare_serving_params(
+        cfg, model.init_params(cfg, jax.random.PRNGKey(0)))
+    rows = _dispatch_rows(cfg, params, smoke)
+    rows += _queue_rows(cfg, params, smoke)
+    cfg_float = dataclasses.replace(cfg, dscim="off")
+    rows += _paged_kv_rows(cfg_float,
+                           model.init_params(cfg_float,
+                                             jax.random.PRNGKey(0)),
+                           smoke)
     return rows
 
 

@@ -27,6 +27,20 @@ Multi-chip: --mesh model=K serves the whole scanned loop under a
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
     PYTHONPATH=src python examples/serve_dscim.py --mesh model=4
+
+Only-live-work serving (ISSUE 4):
+  --eos ID        EOS early exit — the scanned loop becomes a
+                  lax.while_loop that stops once every row has emitted
+                  EOS; finished rows are done-masked (cache position
+                  frozen, tokens pinned to pad)
+  --temp/--top-k  sampling inside the scan (greedy stays the default;
+                  the PRNG key rides the loop carry)
+  --kv int8       block-paged int8 KV cache (core/kvcache.py): per-page
+                  per-kv-head scales, ~4x fewer resident decode cache
+                  bytes, dequant fused into the paged flash inner loop
+For continuous batching (admission into freed slots between scan
+segments) use the serving driver:  python -m repro.launch.serve
+--continuous --eos 7 --kv int8 --dscim kernel:dscim1:256
 """
 import argparse
 import dataclasses
@@ -56,7 +70,18 @@ def main():
                     help="serve under a mesh, e.g. 'model=4' (needs that "
                          "many jax devices; prepared qweights shard N over "
                          "'model')")
+    ap.add_argument("--eos", type=int, default=None, metavar="ID",
+                    help="EOS early exit (lax.while_loop generation with "
+                         "done-masked ragged completion)")
+    ap.add_argument("--temp", type=float, default=None,
+                    help="temperature sampling inside the scan")
+    ap.add_argument("--top-k", type=int, default=None,
+                    help="top-k sampling inside the scan")
+    ap.add_argument("--kv", choices=("float", "int8"), default="float",
+                    help="dense float KV cache or the block-paged int8 one")
     args = ap.parse_args()
+    from repro.launch.serve import _sample_spec
+    sample = _sample_spec(args)
 
     par = None
     if args.mesh:
@@ -78,7 +103,9 @@ def main():
         t0 = time.time()
         toks, logits = serve_batch(c, params, prompts, args.tokens, par=par,
                                    prepare=not args.no_prepare,
-                                   scan=not args.host_loop)
+                                   scan=not args.host_loop,
+                                   eos_id=args.eos, sample=sample,
+                                   kv=args.kv)
         dt = time.time() - t0
         results[tag] = (toks, logits[0], args.batch * args.tokens / dt)
 

@@ -1,0 +1,254 @@
+"""Int8 block-paged KV cache for the decode hot path (ISSUE 4 tentpole).
+
+Decode HBM traffic on a served DS-CIM model is dominated by the KV cache
+long before the int8 MVMs are (the paper's premise is cheap low-precision
+compute; Khatamifard et al. and Stoch-IMC make the same point about the
+memory system being the real bottleneck of stochastic pipelines).  This
+module stores the cache as **int8 pages with per-page, per-kv-head dequant
+scales**, cutting resident decode KV bytes ~4x, and indexes them through a
+**page table** so cache capacity is a pool-size knob decoupled from
+per-request length (continuous batching re-uses freed pages immediately).
+
+Layout (a plain dict, riding the generation scan carry like the dense
+cache does):
+
+  k_pages / v_pages  int8  (L, P, ps, KV, HD)   page pool, P physical pages
+  k_scale / v_scale  f32   (L, P, KV)           per-page per-kv-head scales
+  k_tail  / v_tail   bf16  (L, B, ps, KV, HD)   the partially-filled page
+                                                 per slot, kept unquantized
+  page_table         int32 (B, MP)              logical block -> physical page
+  pos                int32 (B,)                  per-slot token counts
+
+Write path: each decoded token lands in its slot's *tail* page at offset
+``pos % ps`` (bf16 — the most recent tokens attend at higher precision);
+when the tail fills, it is quantized once (fresh per-page absmax scales)
+and flushed to the physical page given by the page table.  Tokens are
+therefore quantized exactly once — no incremental requantization drift.
+Read path: ``decode_attention_paged`` (layers/attention.py) scans logical
+pages flash-style and dequantizes each int8 page inside the online-softmax
+inner loop; the tail page overlays its logical slot in full precision.
+
+Page allocation is host-side (``PageAllocator``): the continuous-batching
+scheduler (launch/serve.py) grants a request its pages at admission and
+returns them at completion, so the jitted segment never allocates.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["quantize_page", "dequantize_page", "paged_from_dense",
+           "init_paged_cache", "admit_request", "admit_dense",
+           "paged_cache_specs", "kv_cache_bytes", "dense_cache_bytes",
+           "PageAllocator", "n_pages_for"]
+
+TAIL_DTYPE = jnp.bfloat16
+
+
+def quantize_page(x):
+    """Symmetric int8 page quantization with per-kv-head scales.
+
+    x (..., ps, KV, HD) float -> (q int8 same shape, scale (..., KV) f32);
+    absmax taken over the page's (token, head_dim) axes so every kv head
+    gets its own dequant scale (outlier heads don't poison the page)."""
+    x = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=(-3, -1))
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x / scale[..., None, :, None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_page(q, scale):
+    """Inverse of ``quantize_page``: q (..., ps, KV, HD) int8 -> f32."""
+    return q.astype(jnp.float32) * scale[..., None, :, None]
+
+
+def n_pages_for(capacity: int, page_size: int) -> int:
+    """Logical pages needed for one sequence of ``capacity`` tokens."""
+    return -(-capacity // page_size)
+
+
+def default_page_table(batch: int, max_pages: int):
+    """Slot-major contiguous assignment (slot b owns pages [b*MP,(b+1)*MP))
+    — the one-shot ``serve_batch`` layout; the continuous scheduler assigns
+    rows from its allocator instead."""
+    return jnp.arange(batch * max_pages, dtype=jnp.int32).reshape(
+        batch, max_pages)
+
+
+def init_paged_cache(n_layers: int, batch: int, n_pages: int, page_size: int,
+                     max_pages: int, n_kv: int, head_dim: int):
+    """Empty pool + idle slots (pos 0, slot-major default page table,
+    clamped into the pool so an undersized pool — n_pages < batch *
+    max_pages, legal for the continuous scheduler — never leaves idle
+    slots gathering out of bounds before their first admission)."""
+    table = jnp.minimum(default_page_table(batch, max_pages), n_pages - 1)
+    return {
+        "k_pages": jnp.zeros((n_layers, n_pages, page_size, n_kv, head_dim),
+                             jnp.int8),
+        "v_pages": jnp.zeros((n_layers, n_pages, page_size, n_kv, head_dim),
+                             jnp.int8),
+        "k_scale": jnp.ones((n_layers, n_pages, n_kv), jnp.float32),
+        "v_scale": jnp.ones((n_layers, n_pages, n_kv), jnp.float32),
+        "k_tail": jnp.zeros((n_layers, batch, page_size, n_kv, head_dim),
+                            TAIL_DTYPE),
+        "v_tail": jnp.zeros((n_layers, batch, page_size, n_kv, head_dim),
+                            TAIL_DTYPE),
+        "page_table": table,
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def _scatter_pages(cache, ks, vs, phys):
+    """Quantize full pages ks/vs (L, ..., nf, ps, KV, HD) and scatter them
+    into the pool at physical indices ``phys`` (..., nf)."""
+    qk, sk = quantize_page(ks)
+    qv, sv = quantize_page(vs)
+    return dict(
+        cache,
+        k_pages=cache["k_pages"].at[:, phys].set(qk),
+        v_pages=cache["v_pages"].at[:, phys].set(qv),
+        k_scale=cache["k_scale"].at[:, phys].set(sk),
+        v_scale=cache["v_scale"].at[:, phys].set(sv))
+
+
+def paged_from_dense(ks, vs, page_size: int, n_pages: int | None = None,
+                     max_pages: int | None = None):
+    """Convert a dense prefill cache (L, B, S, KV, HD) into a paged one.
+
+    Full pages are quantized (per-page absmax scales); the S % ps remainder
+    stays unquantized in the tail.  The default page table is slot-major
+    over ``max_pages`` logical pages per slot; callers that decode past
+    ``max_pages * page_size`` total tokens MUST pass ``max_pages`` sized
+    for prompt + generation (launch/steps.py does) — the default only
+    guarantees one decode page of headroom past the prompt."""
+    L, B, S, KV, HD = ks.shape
+    ps = page_size
+    nf, rem = divmod(S, ps)
+    if max_pages is None:
+        # always include the page the next decoded token lands in: for
+        # rem == 0 that is page nf (fresh), for rem > 0 the tail page
+        max_pages = nf + 1
+    if n_pages is None:
+        n_pages = B * max_pages
+    # the slot-major default table needs a page per (slot, logical page);
+    # undersized pools are a scheduler feature (explicit page_table rows
+    # via admit_request), not a conversion one
+    assert n_pages >= B * max_pages, (n_pages, B, max_pages)
+    cache = init_paged_cache(L, B, n_pages, ps, max_pages, KV, HD)
+    cache["pos"] = jnp.full((B,), S, jnp.int32)
+    if nf:
+        pk = ks[:, :, :nf * ps].reshape(L, B, nf, ps, KV, HD)
+        pv = vs[:, :, :nf * ps].reshape(L, B, nf, ps, KV, HD)
+        cache = _scatter_pages(cache, pk, pv, cache["page_table"][:, :nf])
+    if rem:
+        cache["k_tail"] = cache["k_tail"].at[:, :, :rem].set(
+            ks[:, :, nf * ps:].astype(TAIL_DTYPE))
+        cache["v_tail"] = cache["v_tail"].at[:, :, :rem].set(
+            vs[:, :, nf * ps:].astype(TAIL_DTYPE))
+    return cache
+
+
+def admit_request(cache, ks1, vs1, slot, page_ids):
+    """Write one request's prefill KV (dense, (L, 1, S, KV, HD)) into slot
+    ``slot`` of a live paged cache, onto host-allocated physical pages
+    ``page_ids`` ((MP,) int32 — entries past the request's need unused).
+    Jittable with traced slot/page_ids (S and shapes static)."""
+    L, _, S, KV, HD = ks1.shape
+    ps = cache["k_tail"].shape[2]
+    nf, rem = divmod(S, ps)
+    cache = dict(cache,
+                 page_table=cache["page_table"].at[slot].set(page_ids),
+                 pos=cache["pos"].at[slot].set(S))
+    if nf:
+        pk = ks1[:, 0, :nf * ps].reshape(L, nf, ps, KV, HD)
+        pv = vs1[:, 0, :nf * ps].reshape(L, nf, ps, KV, HD)
+        cache = _scatter_pages(cache, pk, pv, page_ids[:nf])
+    tail_k = jnp.zeros((L, ps, KV, HD), cache["k_tail"].dtype)
+    tail_v = jnp.zeros((L, ps, KV, HD), cache["v_tail"].dtype)
+    if rem:
+        tail_k = tail_k.at[:, :rem].set(
+            ks1[:, 0, nf * ps:].astype(tail_k.dtype))
+        tail_v = tail_v.at[:, :rem].set(
+            vs1[:, 0, nf * ps:].astype(tail_v.dtype))
+    return dict(cache,
+                k_tail=cache["k_tail"].at[:, slot].set(tail_k),
+                v_tail=cache["v_tail"].at[:, slot].set(tail_v))
+
+
+def admit_dense(cache, ks1, vs1, slot):
+    """Dense-cache counterpart of ``admit_request``: overwrite batch row
+    ``slot`` of a (L, B, T, KV, HD) cache with a B=1 prefill padded to T."""
+    L, _, S, KV, HD = ks1.shape
+    T = cache["k"].shape[2]
+    pad = [(0, 0), (0, 0), (0, T - S), (0, 0), (0, 0)]
+    kp = jnp.pad(ks1.astype(cache["k"].dtype), pad)
+    vp = jnp.pad(vs1.astype(cache["v"].dtype), pad)
+    return dict(cache,
+                k=jax.lax.dynamic_update_slice(cache["k"], kp,
+                                               (0, slot, 0, 0, 0)),
+                v=jax.lax.dynamic_update_slice(cache["v"], vp,
+                                               (0, slot, 0, 0, 0)),
+                pos=cache["pos"].at[slot].set(S))
+
+
+def paged_cache_specs(cfg, batch: int, capacity: int, page_size: int,
+                      n_pages: int | None = None):
+    """ShapeDtypeStruct tree of the paged cache (sharding-rule input)."""
+    mp = n_pages_for(capacity, page_size)
+    if n_pages is None:
+        n_pages = batch * mp
+    f = jax.ShapeDtypeStruct
+    L, KV, HD = cfg.n_layers, cfg.n_kv, cfg.head_dim
+    return {
+        "k_pages": f((L, n_pages, page_size, KV, HD), jnp.int8),
+        "v_pages": f((L, n_pages, page_size, KV, HD), jnp.int8),
+        "k_scale": f((L, n_pages, KV), jnp.float32),
+        "v_scale": f((L, n_pages, KV), jnp.float32),
+        "k_tail": f((L, batch, page_size, KV, HD), TAIL_DTYPE),
+        "v_tail": f((L, batch, page_size, KV, HD), TAIL_DTYPE),
+        "page_table": f((batch, mp), jnp.int32),
+        "pos": f((batch,), jnp.int32),
+    }
+
+
+def _nbytes(spec) -> int:
+    return int(np.prod(spec.shape)) * np.dtype(spec.dtype).itemsize
+
+
+def kv_cache_bytes(cache_or_specs) -> int:
+    """Resident decode-cache bytes (pages + scales + tails + page table;
+    the per-slot positions are bookkeeping, not cache traffic)."""
+    tree = {k: v for k, v in cache_or_specs.items() if k != "pos"}
+    return sum(_nbytes(v) for v in jax.tree.leaves(tree))
+
+
+def dense_cache_bytes(cfg, batch: int, capacity: int) -> int:
+    """k+v bytes of the dense fixed-capacity cache at cfg.cache_dtype."""
+    itemsize = jnp.dtype(cfg.cache_dtype).itemsize
+    return 2 * cfg.n_layers * batch * capacity * cfg.n_kv * cfg.head_dim \
+        * itemsize
+
+
+class PageAllocator:
+    """Host-side free-list over the physical page pool.  The continuous
+    scheduler allocates a request's pages at admission and frees them at
+    completion — capacity is the pool size, not slots x max_len."""
+
+    def __init__(self, n_pages: int):
+        self.n_pages = n_pages
+        self._free = list(range(n_pages - 1, -1, -1))
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int):
+        """n physical page ids, or None if the pool can't cover them."""
+        if n > len(self._free):
+            return None
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, ids) -> None:
+        self._free.extend(int(i) for i in ids)

@@ -3,44 +3,53 @@ approximate-MVM path as a first-class serving option (--dscim).
 
 Generation is **scanned** by default: ``serve_batch`` builds one jitted
 ``generate`` (launch/steps.py ``make_generate_fn``) that runs prefill plus
-an (n_tokens-1)-step ``lax.scan`` of decode steps on device — the host
-dispatches exactly once per request instead of once per token, the KV
-cache lives in the scan carry (buffers reused in place, never copied back
-to host), and tokens accumulate on device.  The legacy host loop (one
-jitted decode dispatch per token, cache donated between calls) is kept
-behind ``scan=False`` as the dispatch-overhead A/B; benchmarks/serve_bench
+up to (n_tokens-1) decode steps on device — the host dispatches exactly
+once per request instead of once per token, the KV cache lives in the
+loop carry (buffers reused in place, never copied back to host), and
+tokens accumulate on device.  The legacy host loop (one jitted decode
+dispatch per token, cache donated between calls) is kept behind
+``scan=False`` as the dispatch-overhead A/B; benchmarks/serve_bench
 records both as tok/s trajectory rows.
+
+Only-live-work serving (ISSUE 4):
+
+* **EOS early exit** (``eos_id=...`` / ``--eos``): the scanned loop
+  becomes a ``lax.while_loop`` that stops the moment every slot has
+  emitted EOS (or hit its per-slot ``max_new`` budget).  Finished slots
+  are done-masked — their cache position stops advancing, their tokens
+  pin to ``pad_id`` — so completion is ragged, and no decode steps run
+  past the last live slot.
+* **Sampling in the scan** (``sample=...`` / ``--temp --top-k``): greedy
+  argmax remains the default; 'temp:<t>' and 'topk:<k>[:<t>]' draw inside
+  the jitted loop with the PRNG key riding the carry (one split per step
+  — the while and scan drivers sample identically).
+* **Int8 paged KV cache** (``kv='int8'`` / ``--kv int8``): decode reads
+  an int8 block-paged cache with per-page per-kv-head scales
+  (core/kvcache.py) — ~4x fewer resident decode cache bytes, dequant
+  fused into the paged flash attention inner loop, capacity decoupled
+  from request length via the page table.
+* **Continuous batching** (``serve_continuous`` / ``--continuous``): a
+  scheduler above the scanned loop — requests are admitted into freed
+  slots between fixed-size scan segments (launch/steps.py
+  ``make_segment_fn``/``make_admit_fn``), carries (cache, per-slot
+  positions, done mask, RNG) persist across segments, pages are
+  allocated at admission and recycled at completion, and throughput is
+  reported per *live* slot-step so occupancy is visible.
 
 DS-CIM modes map to DSCIMLinear backends (core/dscim_layer.py):
   exact        — int8 adder-tree baseline (DCIM)
   lut          — bit-exact DS-CIM emulation (joint-count LUT, the oracle)
   kernel       — the serving hot path: fused single-launch Pallas kernel
-                 (kernels/dscim_fused.py) — all quantization windows, sign
-                 corrections and dequant scales in one launch, batch dims
-                 on a batch grid axis, no (M, nw, N) psum in HBM; decode
-                 shapes get pad-free skinny-M tiles from the checked-in
-                 autotune cache (kernels/autotune.py)
+                 (kernels/dscim_fused.py)
   paper_inject — paper-style per-output error injection (fast)
 A '+attn' mode suffix (e.g. kernel+attn:dscim1:256) additionally routes the
 attention projections through the macro.
 
-Prepare-once weights (default, --no-prepare to A/B): before jitting, every
-DS-CIM-eligible matrix — including the MoE shared expert, also under a
-mesh — is converted to a resident window-packed int8
-``QuantizedLinearWeight`` (launch/steps.py prepare_serving_params), the
-software twin of the CIM array's static int8 storage.  The jitted loop
-then quantizes activations only.  Outputs are bit-identical to the
-per-call path under float32 compute; under bfloat16 compute prepared is
-the more faithful of the two (no double rounding of cast weights).
-
-Multi-chip (--mesh, e.g. --mesh model=4): ``serve_batch`` takes a
-ParallelCtx (launch/mesh.py ``parallel_ctx_from_spec``), places the
-prepared params by launch/sharding.py rules — int8 planes + per-window
-scales N-sharded over 'model' (``qweight_specs``), prepared shared
-experts replicated — and the whole scanned loop runs under the mesh: the
-kernel mode routes through ``dscim_fused_mvm_sharded`` (shard_map; windows
-stay chip-local on K, no collective in the MVM) with no per-token host
-sync anywhere.  Bit-identical to single-device serving.
+Prepare-once weights (default, --no-prepare to A/B) and multi-chip meshes
+(--mesh, e.g. --mesh model=4) behave as in PR 2/3: prepared int8 planes
+shard N over 'model', the whole loop runs under the mesh, bit-identical
+to single-device serving.  The paged KV pool shards over the DP axes like
+the request batch (launch/sharding.py ``cache_partition``).
 
 The serve report compares greedy tokens + logit RMSE against the float
 path, which is the model-level reproduction of the paper's Table II
@@ -56,16 +65,30 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch
-from repro.launch.steps import (make_decode_step, make_generate_fn,
-                                make_prefill_step, prepare_serving_params)
+from repro.launch.steps import (init_serve_state, make_admit_fn,
+                                make_decode_step, make_generate_fn,
+                                make_prefill_step, make_segment_fn,
+                                prepare_serving_params)
 from repro.models import get_model
 
-__all__ = ["serve_batch", "main"]
+__all__ = ["serve_batch", "serve_continuous", "logit_drift_rmse", "main"]
+
+
+def _place(cfg, params, par, prepare):
+    if prepare:
+        params = prepare_serving_params(cfg, params, par)
+    if par is not None:
+        from repro.launch.sharding import param_specs, to_shardings
+        params = jax.device_put(
+            params, to_shardings(par.mesh, param_specs(cfg, par, params)))
+    return params
 
 
 def serve_batch(cfg, params, prompts: np.ndarray, n_tokens: int,
                 par=None, prepare: bool = True, scan: bool = True,
-                trace_logits: bool = False):
+                trace_logits: bool = False, eos_id: int | None = None,
+                sample: str = "greedy", kv: str = "float",
+                page_size: int = 8, max_new=None, rng_seed: int = 0):
     """prompts (B, S) int32 -> generated (B, n_tokens) int32, logits list.
 
     ``par``: ParallelCtx for multi-chip serving — params are placed by the
@@ -73,27 +96,42 @@ def serve_batch(cfg, params, prompts: np.ndarray, n_tokens: int,
     and the whole generation loop runs under the mesh.
     ``prepare``: quantize DS-CIM-eligible weights once before jitting
     (no-op when cfg.dscim is 'off'/'float'); pass False to A/B the legacy
-    per-call weight-quantization path (bit-identical under f32 compute;
-    see the module docstring for the bf16-compute caveat).
-    ``scan``: device-resident scanned generation (default — one dispatch
-    per request); False runs the legacy host loop (one dispatch per
-    token, cache donated between steps).
+    per-call weight-quantization path.
+    ``scan``: device-resident generation (default — one dispatch per
+    request); False runs the legacy host loop (one dispatch per token,
+    cache donated between steps; greedy/float-KV/fixed-length only).
     ``trace_logits``: also return the per-step logit trace (off the hot
-    path by default: the returned list then holds only prefill logits)."""
-    if prepare:
-        params = prepare_serving_params(cfg, params, par)
-    if par is not None:
-        from repro.launch.sharding import param_specs, to_shardings
-        params = jax.device_put(
-            params, to_shardings(par.mesh, param_specs(cfg, par, params)))
+    path by default: the returned list then holds only prefill logits).
+    ``eos_id``: EOS early-exit — the loop becomes a ``lax.while_loop``
+    that stops once every row is finished; tokens past a row's EOS are
+    pinned to pad.  ``max_new`` ((B,) ints, optional) adds per-slot token
+    budgets (counted including the first, prefill-sampled token).
+    ``sample``: 'greedy' | 'temp:<t>' | 'topk:<k>[:<t>]' (``rng_seed``
+    seeds the in-scan PRNG key).
+    ``kv``: 'float' (dense cache) | 'int8' (block-paged quantized cache,
+    ``page_size`` tokens per page)."""
+    params = _place(cfg, params, par, prepare)
     batch = {"tokens": jnp.asarray(prompts)}
+    if max_new is not None:
+        batch["max_new"] = jnp.asarray(max_new, jnp.int32)
+        if eos_id is None:
+            raise ValueError("max_new budgets need the early-exit variant; "
+                             "pass eos_id (any id, e.g. -1, works)")
+    if sample != "greedy":
+        batch["rng"] = jax.random.PRNGKey(rng_seed)
     if scan:
         generate = make_generate_fn(cfg, par, n_tokens,
-                                    trace_logits=trace_logits)
+                                    trace_logits=trace_logits,
+                                    eos_id=eos_id, sample=sample,
+                                    kv=kv, page_size=page_size)
         tokens, logits = generate(params, batch)
         trace = list(np.asarray(logits)) if trace_logits else [logits]
         return np.asarray(tokens), trace
     # legacy host loop (dispatch-overhead A/B baseline)
+    if eos_id is not None or sample != "greedy" or kv != "float":
+        raise ValueError("the legacy host loop serves the greedy fixed-"
+                         "length float-KV path only (scan=True for "
+                         "eos/sampling/paged-KV)")
     capacity = prompts.shape[1] + n_tokens
     prefill = jax.jit(make_prefill_step(cfg, par, capacity=capacity))
     if trace_logits:
@@ -113,6 +151,179 @@ def serve_batch(cfg, params, prompts: np.ndarray, n_tokens: int,
             tok, cache = decode(params, {"token": tok}, cache)
         out.append(tok)
     return np.stack([np.asarray(t) for t in out], axis=1), logit_trace
+
+
+def serve_continuous(cfg, params, prompts: np.ndarray, n_tokens: int, *,
+                     slots: int = 4, seg_len: int = 4, max_new=None,
+                     eos_id: int | None = None, sample: str = "greedy",
+                     kv: str = "float", page_size: int = 8,
+                     n_pages: int | None = None, par=None,
+                     prepare: bool = True, rng_seed: int = 0):
+    """Continuous-batching scheduler: serve a queue of R requests through
+    ``slots`` persistent decode slots.
+
+    prompts (R, S) int32 — the request queue (fixed prompt length per
+    scheduler; length bucketing is a follow-on).  Between fixed-size scan
+    segments (``seg_len`` done-masked decode steps in one dispatch,
+    launch/steps.py ``make_segment_fn``) the host admits waiting requests
+    into freed slots with one jitted prefill each (``make_admit_fn``) —
+    the KV cache, per-slot positions, done mask and RNG key persist across
+    segments.  A request completes on EOS (``eos_id``) or its per-request
+    budget (``max_new`` (R,), default ``n_tokens``), releasing its slot
+    (and, for ``kv='int8'``, its physical pages — ``n_pages`` sizes the
+    pool independently of slots x max_len) for the next admission.
+
+    Returns (outputs, stats): ``outputs[r]`` is request r's np.int32 token
+    array (<= its budget, ending at EOS if hit); ``stats`` records wall
+    time, end-to-end tok/s over *useful* tokens (i.e. credited per live
+    slot-step — dead/padded slot-steps earn nothing), and batch occupancy
+    = live slot-steps / total slot-steps."""
+    from repro.core.kvcache import PageAllocator, n_pages_for
+    params = _place(cfg, params, par, prepare)
+    prompts = np.asarray(prompts)
+    R, S = prompts.shape
+    budgets = np.full((R,), n_tokens, np.int32) if max_new is None \
+        else np.asarray(max_new, np.int32)
+    assert budgets.shape == (R,) and (budgets >= 1).all()
+    capacity = S + int(budgets.max())
+    mp = n_pages_for(capacity, page_size)
+    state = init_serve_state(cfg, slots, capacity, kv=kv,
+                             page_size=page_size, n_pages=n_pages,
+                             seed=rng_seed)
+    alloc = PageAllocator(state["cache"]["k_pages"].shape[1]) \
+        if kv == "int8" else None
+    admit = make_admit_fn(cfg, par, eos_id=eos_id, sample=sample)
+    segment = make_segment_fn(cfg, par, seg_len, eos_id=eos_id,
+                              sample=sample)
+    no_pages = jnp.zeros((mp,), jnp.int32)
+
+    slot_req = [-1] * slots           # slot -> request id (-1 = free)
+    slot_pages: list = [None] * slots
+    out = [[] for _ in range(R)]
+    next_req = 0
+    live_steps = total_steps = segments = 0
+    t0 = time.perf_counter()
+    while True:
+        done_h = np.asarray(state["done"])
+        for b in range(slots):
+            if slot_req[b] >= 0 and done_h[b]:     # harvest finished slot
+                if alloc is not None:
+                    alloc.free(slot_pages[b])
+                    slot_pages[b] = None
+                slot_req[b] = -1
+            if slot_req[b] < 0 and next_req < R:   # admit a waiting request
+                pages = no_pages
+                if alloc is not None:
+                    # grant only what this request's budget can touch;
+                    # page_ids pads to mp with a self-owned id (never
+                    # read unmasked, never flushed — pos stays under the
+                    # budget's page count)
+                    need = n_pages_for(S + int(budgets[next_req]),
+                                       page_size)
+                    ids = alloc.alloc(need)
+                    if ids is None:                # pool exhausted: wait
+                        continue
+                    slot_pages[b] = ids
+                    pages = jnp.asarray(ids + [ids[-1]] * (mp - need),
+                                        jnp.int32)
+                r, next_req = next_req, next_req + 1
+                state, tok0 = admit(params, state, jnp.asarray(prompts[r:r + 1]),
+                                    jnp.int32(b), pages,
+                                    jnp.int32(budgets[r]))
+                out[r].append(int(tok0))
+                slot_req[b] = r
+                done_h = np.asarray(state["done"])
+        if all(r < 0 for r in slot_req):
+            if next_req >= R:
+                break
+            raise RuntimeError(
+                f"page pool too small for request {next_req} "
+                f"({n_pages_for(S + int(budgets[next_req]), page_size)} "
+                f"pages needed, {alloc.free_pages} free)")
+        if np.asarray(state["done"]).all():
+            continue  # all finished at admission: harvest, don't segment
+        state, toks, lives = segment(params, state)
+        toks, lives = np.asarray(toks), np.asarray(lives)
+        for s in range(seg_len):
+            for b in range(slots):
+                if lives[s, b] and slot_req[b] >= 0:
+                    out[slot_req[b]].append(int(toks[s, b]))
+        live_steps += int(lives.sum())
+        total_steps += seg_len * slots
+        segments += 1
+    dt = time.perf_counter() - t0
+    useful = sum(len(o) for o in out)
+    # tok_s is already the live-credited rate: every live slot-step emits
+    # exactly one useful token (plus one per admission), so dead/padded
+    # slot-steps earn nothing — occupancy shows how many there were
+    stats = {
+        "wall_s": dt,
+        "tok_s": useful / dt,
+        "occupancy": live_steps / max(total_steps, 1),
+        "live_slot_steps": live_steps,
+        "slot_steps": total_steps,
+        "segments": segments,
+        "requests": R,
+        "useful_tokens": useful,
+    }
+    return [np.asarray(o, np.int32) for o in out], stats
+
+
+def _sample_spec(args) -> str:
+    # `is not None` so --temp 0 reaches the sampler's t > 0 validation
+    # instead of silently degrading to greedy / t=1
+    if args.top_k is not None:
+        return f"topk:{args.top_k}:" \
+               f"{args.temp if args.temp is not None else 1.0}"
+    if args.temp is not None:
+        return f"temp:{args.temp}"
+    return "greedy"
+
+
+def _useful_lengths(tokens: np.ndarray, eos_id: int | None) -> np.ndarray:
+    """Per-row token count up to and including the first EOS."""
+    n = tokens.shape[1]
+    if eos_id is None:
+        return np.full((tokens.shape[0],), n)
+    out = []
+    for row in tokens:
+        hits = np.nonzero(row == eos_id)[0]
+        out.append(int(hits[0]) + 1 if len(hits) else n)
+    return np.asarray(out)
+
+
+def _useful_tokens(tokens: np.ndarray, eos_id: int | None) -> int:
+    """Tokens up to and including each row's first EOS — the early-exit
+    report must not credit the pad tokens past it."""
+    return int(_useful_lengths(tokens, eos_id).sum())
+
+
+def logit_drift_rmse(tokens_ref, tokens_alt, logits_ref, logits_alt):
+    """RMSE between two drivers' per-step logit traces on the teacher-
+    matched prefix: per row, steps up to and including the first token
+    divergence — past it the drivers feed different tokens back, so the
+    comparison would measure feedback divergence, not the perturbation
+    under test (e.g. int8 KV quantization).  ``logits_*`` are the
+    trace_logits stacks ((n_steps, B, V) after np.stack), ``tokens_*``
+    the (B, n_steps) token outputs.  Shared by benchmarks/serve_bench.py
+    and the acceptance test so the metric can't drift between them."""
+    lf, lq = np.stack(logits_ref), np.stack(logits_alt)
+    tokens_ref, tokens_alt = np.asarray(tokens_ref), np.asarray(tokens_alt)
+    n = tokens_ref.shape[1]
+    errs = []
+    for b in range(tokens_ref.shape[0]):
+        mism = np.nonzero(tokens_ref[b] != tokens_alt[b])[0]
+        end = mism[0] + 1 if len(mism) else n
+        errs.append(((lf[:end, b] - lq[:end, b]) ** 2).ravel())
+    return float(np.sqrt(np.mean(np.concatenate(errs))))
+
+
+def _agreement(a: np.ndarray, b: np.ndarray, eos_id: int | None) -> float:
+    """Token agreement over the reference rows' useful prefixes only —
+    pad-vs-pad positions past EOS would otherwise inflate the metric."""
+    lens = _useful_lengths(b, eos_id)
+    hits = sum(int((a[i, :l] == b[i, :l]).sum()) for i, l in enumerate(lens))
+    return hits / max(int(lens.sum()), 1)
 
 
 def main(argv=None):
@@ -136,6 +347,29 @@ def main(argv=None):
                     help="serve under a mesh, e.g. 'model=4' or "
                          "'data=2,model=4' (needs that many jax devices; "
                          "prepared qweights shard N over 'model')")
+    ap.add_argument("--eos", type=int, default=None, metavar="ID",
+                    help="EOS token id: the scanned loop becomes a "
+                         "lax.while_loop that exits once every row has "
+                         "finished (done-masked ragged completion)")
+    ap.add_argument("--temp", type=float, default=None,
+                    help="temperature sampling inside the scan (default "
+                         "greedy argmax)")
+    ap.add_argument("--top-k", type=int, default=None,
+                    help="top-k sampling inside the scan (combines with "
+                         "--temp)")
+    ap.add_argument("--kv", choices=("float", "int8"), default="float",
+                    help="KV cache layout: dense float (default) or the "
+                         "block-paged int8 cache (core/kvcache.py)")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="tokens per KV page for --kv int8")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching: serve --requests prompts "
+                         "through --batch persistent slots, admitting "
+                         "between --segment-len step scan segments")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="queue length for --continuous")
+    ap.add_argument("--segment-len", type=int, default=4,
+                    help="decode steps per scan segment for --continuous")
     ap.add_argument("--tune", action="store_true",
                     help="consult the fused-kernel tile autotuner (the "
                          "checked-in cache makes this a lookup for the "
@@ -152,35 +386,67 @@ def main(argv=None):
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    if args.dscim != "off":
+        import dataclasses
+        cfg_ds = dataclasses.replace(cfg, dscim=args.dscim)
     model = get_model(cfg)
     params = model.init_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
-    prompts = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len),
-                           dtype=np.int32)
+    sample = _sample_spec(args)
+
+    if args.continuous:
+        cfgs = [("float", cfg)] + ([(args.dscim, cfg_ds)]
+                                   if args.dscim != "off" else [])
+        prompts = rng.integers(0, cfg.vocab, (args.requests, args.prompt_len),
+                               dtype=np.int32)
+        # skewed per-request budgets exercise slot recycling
+        budgets = rng.integers(max(2, args.tokens // 4), args.tokens + 1,
+                               (args.requests,), dtype=np.int32)
+        for tag, c in cfgs:
+            outs, stats = serve_continuous(
+                c, params, prompts, args.tokens, slots=args.batch,
+                seg_len=args.segment_len, max_new=budgets,
+                eos_id=args.eos if args.eos is not None else -1,
+                sample=sample, kv=args.kv, page_size=args.page_size,
+                par=par, prepare=not args.no_prepare)
+            print(f"[serve-cb] {tag}: {stats['tok_s']:.1f} tok/s over "
+                  f"{stats['useful_tokens']} useful tokens, occupancy "
+                  f"{stats['occupancy']:.2f} "
+                  f"({stats['live_slot_steps']}/{stats['slot_steps']} "
+                  f"slot-steps live, "
+                  f"{stats['segments']} segments of {args.segment_len})")
+        return 0
 
     mode = "host-loop" if args.host_loop else "scanned"
+    prompts = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len),
+                           dtype=np.int32)
     t0 = time.time()
-    base_tokens, base_logits = serve_batch(cfg, params, prompts, args.tokens,
-                                           par=par, scan=not args.host_loop)
+    base_tokens, base_logits = serve_batch(
+        cfg, params, prompts, args.tokens, par=par, scan=not args.host_loop,
+        eos_id=args.eos, sample=sample, kv=args.kv,
+        page_size=args.page_size)
     dt = time.time() - t0
-    tps = args.batch * args.tokens / dt
+    useful = _useful_tokens(base_tokens, args.eos)
+    tps = useful / dt
     print(f"[serve] float path ({mode}"
-          f"{', mesh ' + args.mesh if args.mesh else ''}): {tps:.1f} tok/s "
-          f"(batch={args.batch}, {args.tokens} steps)")
+          f"{', mesh ' + args.mesh if args.mesh else ''}"
+          f"{', kv=int8' if args.kv == 'int8' else ''}): {tps:.1f} tok/s "
+          f"({useful} useful tokens, batch={args.batch}, "
+          f"{args.tokens} steps)")
 
     if args.dscim != "off":
-        import dataclasses
-        cfg2 = dataclasses.replace(cfg, dscim=args.dscim)
         t0 = time.time()
-        ds_tokens, ds_logits = serve_batch(cfg2, params, prompts, args.tokens,
-                                           par=par,
-                                           prepare=not args.no_prepare,
-                                           scan=not args.host_loop)
+        ds_tokens, ds_logits = serve_batch(
+            cfg_ds, params, prompts, args.tokens, par=par,
+            prepare=not args.no_prepare, scan=not args.host_loop,
+            eos_id=args.eos, sample=sample, kv=args.kv,
+            page_size=args.page_size)
         dt = time.time() - t0
-        agree = float((ds_tokens == base_tokens).mean())
+        agree = _agreement(ds_tokens, base_tokens, args.eos)
         rmse = float(jnp.sqrt(jnp.mean(
             (ds_logits[0] - base_logits[0]) ** 2)))
-        print(f"[serve] dscim={args.dscim}: {args.batch*args.tokens/dt:.1f} "
+        print(f"[serve] dscim={args.dscim}: "
+              f"{_useful_tokens(ds_tokens, args.eos) / dt:.1f} "
               f"tok/s, token agreement {agree:.3f}, "
               f"prefill logit RMSE {rmse:.4f}")
     return 0

@@ -153,7 +153,28 @@ def cache_partition(cfg: ArchConfig, par: ParallelCtx, cache_struct):
         p = _path_str(path)
         shp = leaf.shape
         if p.endswith("pos"):
+            # scalar (lockstep decode) replicates; per-slot (B,) positions
+            # shard over DP with the request batch
+            if getattr(leaf, "ndim", 0) == 1:
+                return P(dp if _div(shp[0], dp, par.mesh) else None)
             return P()
+        # int8 block-paged KV cache (core/kvcache.py): the physical page
+        # pool shards over the DP axes like the request batch (slot-major
+        # allocation keeps a slot's pages on its own DP shard); kv heads
+        # take TP when divisible, pages/window dims never split
+        if "k_pages" in p or "v_pages" in p:      # (L, P, ps, KV, HD)
+            pspec = dp if _div(shp[1], dp, par.mesh) else None
+            return P(None, pspec, None,
+                     tp if shp[3] % tp_n == 0 else None, None)
+        if "k_scale" in p or "v_scale" in p:      # (L, P, KV)
+            pspec = dp if _div(shp[1], dp, par.mesh) else None
+            return P(None, pspec, tp if shp[2] % tp_n == 0 else None)
+        if "k_tail" in p or "v_tail" in p:        # (L, B, ps, KV, HD)
+            bspec = dp if _div(shp[1], dp, par.mesh) else None
+            return P(None, bspec, None,
+                     tp if shp[3] % tp_n == 0 else None, None)
+        if "page_table" in p:                     # (B, MP)
+            return P(dp if _div(shp[0], dp, par.mesh) else None, None)
         if p in ("k", "v") or p.endswith("/k") or p.endswith("/v"):
             L, B, T, KV, HD = shp
             bspec = dp if _div(B, dp, par.mesh) else None

@@ -5,7 +5,26 @@ serve path (convert every eligible weight matrix to a resident int8
 weight quantization appears in the decode-step HLO), and
 ``make_generate_fn``, the device-resident generation loop (prefill + an
 n-token ``lax.scan`` of decode steps inside one jit — the host sees one
-dispatch per request instead of one per token)."""
+dispatch per request instead of one per token).
+
+ISSUE 4 additions — "only do live work" on the decode hot path:
+  * ``make_generate_fn(eos_id=...)`` switches the fixed-length scan to a
+    ``lax.while_loop`` that exits as soon as every slot has emitted EOS
+    (or hit its optional per-slot ``batch["max_new"]`` budget), with
+    per-slot done-masking: finished rows stop advancing their cache
+    position and their tokens are pinned to ``pad_id``.
+  * in-scan sampling: ``sample`` selects greedy (default, bit-compatible
+    with PR 3) or ``'temp:<t>'`` / ``'topk:<k>[:<t>]'`` — the PRNG key
+    rides the scan/while carry, one split per step in both variants so
+    the drivers draw identically.
+  * ``kv='int8'`` serves from the block-paged int8 KV cache
+    (core/kvcache.py) instead of the dense fixed-capacity one.
+  * ``make_admit_fn`` / ``make_segment_fn`` / ``init_serve_state`` are the
+    jitted halves of the continuous-batching scheduler (launch/serve.py):
+    admission prefills one request into a free slot of a live batch
+    (carries persist), segments run fixed-size scans of done-masked
+    decode steps and report per-step live-slot occupancy.
+"""
 from __future__ import annotations
 
 import functools
@@ -20,7 +39,8 @@ from repro.optim.adamw import AdamW
 from repro.parallel import ParallelCtx
 
 __all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
-           "make_eval_step", "make_generate_fn", "prepare_serving_params"]
+           "make_eval_step", "make_generate_fn", "prepare_serving_params",
+           "make_admit_fn", "make_segment_fn", "init_serve_state"]
 
 
 def prepare_serving_params(cfg: ArchConfig, params,
@@ -104,50 +124,284 @@ def make_decode_step(cfg: ArchConfig, par: ParallelCtx | None,
     return decode_step
 
 
-@functools.lru_cache(maxsize=8)
+def _make_sampler(sample: str):
+    """Decode-rule factory: 'greedy' -> None (argmax, no RNG);
+    'temp:<t>' -> temperature sampling; 'topk:<k>[:<t>]' -> top-k with
+    optional temperature.  The returned callable draws (key, logits) ->
+    (B,) int32 inside the jitted loop."""
+    if sample == "greedy":
+        return None
+    parts = sample.split(":")
+    if parts[0] == "temp" and len(parts) == 2:
+        k, t = None, float(parts[1])
+    elif parts[0] == "topk" and len(parts) in (2, 3):
+        k = int(parts[1])
+        t = float(parts[2]) if len(parts) == 3 else 1.0
+    else:
+        raise ValueError(f"bad sample spec {sample!r}; want 'greedy', "
+                         "'temp:<t>' or 'topk:<k>[:<t>]'")
+    if t <= 0:
+        raise ValueError(f"temperature must be > 0, got {t}")
+
+    def draw(key, logits):
+        lg = logits.astype(jnp.float32)
+        if k is not None:
+            kth = jax.lax.top_k(lg, k)[0][..., -1:]
+            lg = jnp.where(lg >= kth, lg, -jnp.inf)
+        return jax.random.categorical(key, lg / t, axis=-1).astype(jnp.int32)
+
+    return draw
+
+
+def _next_fn(sampler):
+    """(logits, key) -> (token, key): greedy argmax, or one split + draw
+    per step — the identical split sequence in the fixed-length scan and
+    the EOS while_loop keeps the two drivers' draws bit-identical."""
+    if sampler is None:
+        return lambda logits, key: (
+            jnp.argmax(logits, axis=-1).astype(jnp.int32), key)
+
+    def nxt(logits, key):
+        key, sub = jax.random.split(key)
+        return sampler(sub, logits), key
+
+    return nxt
+
+
+def _check_kv(cfg: ArchConfig, kv: str):
+    if kv not in ("float", "int8"):
+        raise ValueError(f"kv must be 'float' or 'int8', got {kv!r}")
+    if kv == "int8" and cfg.family not in ("dense", "moe"):
+        raise ValueError("the paged int8 KV cache needs an attention-"
+                         f"family model, not {cfg.family!r}")
+
+
+@functools.lru_cache(maxsize=16)
 def make_generate_fn(cfg: ArchConfig, par: ParallelCtx | None = None,
                      n_tokens: int = 16, *, trace_logits: bool = False,
-                     jit: bool = True):
-    """Device-resident greedy generation: prefill + an (n_tokens-1)-step
-    ``lax.scan`` of decode steps inside a single jit.
+                     jit: bool = True, eos_id: int | None = None,
+                     sample: str = "greedy", pad_id: int = 0,
+                     kv: str = "float", page_size: int = 8):
+    """Device-resident generation: prefill + up to (n_tokens-1) decode
+    steps inside a single jit.
 
     The host dispatches exactly once per request; the KV cache lives in the
-    scan carry (XLA reuses its buffers in place — no per-token host round
+    loop carry (XLA reuses its buffers in place — no per-token host round
     trip, no per-token cache copy), and the generated tokens accumulate on
-    device in the scan ys.  ``generate(params, batch)`` with ``batch =
-    {"tokens": (B, S) int32}`` returns ``(tokens (B, n_tokens) int32,
-    logits)`` where ``logits`` is the prefill last-token logits by default —
-    the per-token logit trace is off the hot path and only materialized
-    (stacked, (n_tokens, B, Vp)) under ``trace_logits=True``.
+    device.  ``generate(params, batch)`` with ``batch = {"tokens": (B, S)
+    int32}`` returns ``(tokens (B, n_tokens) int32, logits)`` where
+    ``logits`` is the prefill last-token logits by default — the per-token
+    logit trace is off the hot path and only materialized (stacked,
+    (n_tokens, B, Vp)) under ``trace_logits=True`` (fixed-length scan only).
 
-    Under a mesh (``par`` given) the whole scanned loop runs inside the one
-    jit with the params' committed shardings — prepared DS-CIM weights route
+    ``eos_id``: switch the fixed-length ``lax.scan`` to a ``lax.while_loop``
+    that exits as soon as every slot has emitted ``eos_id`` (and/or reached
+    its optional per-slot ``batch["max_new"]`` (B,) int32 budget, counted
+    including the prefill token).  Finished slots are done-masked: their
+    cache position stops advancing and their remaining tokens are pinned
+    to ``pad_id`` — ragged completion with no dead-token decode work once
+    the whole batch is finished.
+
+    ``sample``: 'greedy' (default, bit-compatible with the PR 3 scan) or
+    'temp:<t>' / 'topk:<k>[:<t>]' — the RNG key (``batch["rng"]``, a
+    PRNGKey) rides the loop carry with one split per step.
+
+    ``kv``: 'float' serves from the dense fixed-capacity cache; 'int8'
+    from the block-paged per-head-quantized KV cache (core/kvcache.py,
+    ~4x fewer resident decode cache bytes, dequant fused into the paged
+    flash attention inner loop).
+
+    Under a mesh (``par`` given) the whole loop runs inside the one jit
+    with the params' committed shardings — prepared DS-CIM weights route
     through the model-axis sharded fused MVM (core/dscim_layer.py) with no
     per-token host sync.  The builder is cached, so repeated ``serve_batch``
-    calls with the same (cfg, par, n_tokens) reuse the compiled executable.
+    calls with the same options reuse the compiled executable.
     """
     model = get_model(cfg)
+    nxt = _next_fn(_make_sampler(sample))
+    _check_kv(cfg, kv)
+    if trace_logits and eos_id is not None:
+        raise ValueError("trace_logits is a fixed-length-scan feature; the "
+                         "EOS early-exit variant keeps logits off the path")
+
+    def _prefill(params, batch):
+        B, S = batch["tokens"].shape
+        if kv == "float":
+            return model.prefill(params, cfg, {"tokens": batch["tokens"]},
+                                 par, capacity=S + n_tokens)
+        from repro.core.kvcache import n_pages_for, paged_from_dense
+        logits0, dense = model.prefill(params, cfg,
+                                       {"tokens": batch["tokens"]}, par)
+        mp = n_pages_for(S + n_tokens, page_size)
+        return logits0, paged_from_dense(dense["k"], dense["v"], page_size,
+                                         n_pages=B * mp, max_pages=mp)
 
     def generate(params, batch):
-        capacity = batch["tokens"].shape[1] + n_tokens
-        logits0, cache = model.prefill(params, cfg, batch, par,
-                                       capacity=capacity)
-        tok0 = jnp.argmax(logits0, axis=-1).astype(jnp.int32)
+        B = batch["tokens"].shape[0]
+        logits0, cache = _prefill(params, batch)
+        key = batch.get("rng", jax.random.PRNGKey(0))
+        tok0, key = nxt(logits0, key)
 
-        def step(carry, _):
-            tok, cache = carry
-            logits, cache = model.decode(params, cfg, {"token": tok},
-                                         cache, par)
-            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            return (tok, cache), ((tok, logits) if trace_logits else tok)
+        if eos_id is None:
+            # fixed-length scan (the PR 3 path)
+            def step(carry, _):
+                tok, cache, key = carry
+                logits, cache = model.decode(params, cfg, {"token": tok},
+                                             cache, par)
+                tok, key = nxt(logits, key)
+                return (tok, cache, key), ((tok, logits) if trace_logits
+                                           else tok)
 
-        (_, cache), ys = jax.lax.scan(step, (tok0, cache), None,
-                                      length=n_tokens - 1)
-        toks = ys[0] if trace_logits else ys
-        tokens = jnp.concatenate(
-            [tok0[:, None], jnp.moveaxis(toks, 0, 1)], axis=1)
-        if trace_logits:
-            return tokens, jnp.concatenate([logits0[None], ys[1]], axis=0)
-        return tokens, logits0
+            (_, cache, _), ys = jax.lax.scan(step, (tok0, cache, key), None,
+                                             length=n_tokens - 1)
+            toks = ys[0] if trace_logits else ys
+            tokens = jnp.concatenate(
+                [tok0[:, None], jnp.moveaxis(toks, 0, 1)], axis=1)
+            if trace_logits:
+                return tokens, jnp.concatenate([logits0[None], ys[1]],
+                                               axis=0)
+            return tokens, logits0
+
+        # EOS early-exit while_loop: stop the moment the whole batch is
+        # done; per-slot done-masking gives ragged completion inside it
+        done0 = tok0 == eos_id
+        if "max_new" in batch:
+            done0 = done0 | (batch["max_new"] <= 1)
+        if kv == "float":          # ragged completion needs per-slot pos
+            cache = dict(cache,
+                         pos=jnp.full((B,), cache["pos"], jnp.int32))
+        toks0 = jnp.full((B, n_tokens), pad_id, jnp.int32).at[:, 0].set(tok0)
+
+        def cond(c):
+            i, _, done, _, _, _ = c
+            return (i < n_tokens) & ~jnp.all(done)
+
+        def body(c):
+            i, tok, done, toks, cache, key = c
+            logits, cache = model.decode(
+                params, cfg, {"token": tok, "done": done}, cache, par)
+            new, key = nxt(logits, key)
+            new = jnp.where(done, pad_id, new)
+            ndone = done | (new == eos_id)
+            if "max_new" in batch:
+                ndone = ndone | (i + 1 >= batch["max_new"])
+            toks = jax.lax.dynamic_update_slice(toks, new[:, None], (0, i))
+            return i + 1, new, ndone, toks, cache, key
+
+        _, _, _, toks, _, _ = jax.lax.while_loop(
+            cond, body, (jnp.int32(1), tok0, done0, toks0, cache, key))
+        return toks, logits0
 
     return jax.jit(generate) if jit else generate
+
+
+# ---------------------------------------------------------------------------
+# continuous batching: jitted admit / segment halves of the scheduler
+# ---------------------------------------------------------------------------
+
+def init_serve_state(cfg: ArchConfig, slots: int, capacity: int, *,
+                     kv: str = "float", page_size: int = 8,
+                     n_pages: int | None = None, seed: int = 0):
+    """Idle scheduler state: every slot free (done), empty KV cache of the
+    requested layout, shared PRNG key.  ``capacity`` is the per-slot token
+    budget (prompt + generated); for ``kv='int8'`` the page pool defaults
+    to slots x pages-per-sequence but can be sized independently
+    (``n_pages``) — capacity is a pool knob, not slots x max_len."""
+    _check_kv(cfg, kv)
+    B = slots
+    if kv == "float":
+        cdt = jnp.dtype(cfg.cache_dtype)
+        cache = {"k": jnp.zeros((cfg.n_layers, B, capacity, cfg.n_kv,
+                                 cfg.head_dim), cdt),
+                 "v": jnp.zeros((cfg.n_layers, B, capacity, cfg.n_kv,
+                                 cfg.head_dim), cdt),
+                 "pos": jnp.zeros((B,), jnp.int32)}
+    else:
+        from repro.core.kvcache import init_paged_cache, n_pages_for
+        mp = n_pages_for(capacity, page_size)
+        cache = init_paged_cache(cfg.n_layers, B,
+                                 B * mp if n_pages is None else n_pages,
+                                 page_size, mp, cfg.n_kv, cfg.head_dim)
+    return {"tok": jnp.zeros((B,), jnp.int32),
+            "done": jnp.ones((B,), bool),
+            "n_out": jnp.zeros((B,), jnp.int32),
+            "max_new": jnp.ones((B,), jnp.int32),
+            "cache": cache,
+            "rng": jax.random.PRNGKey(seed)}
+
+
+@functools.lru_cache(maxsize=16)
+def make_admit_fn(cfg: ArchConfig, par: ParallelCtx | None = None, *,
+                  eos_id: int | None = None, sample: str = "greedy",
+                  jit: bool = True):
+    """One jitted request admission: prefill a (1, S) prompt, write its KV
+    into free slot ``slot`` of the live cache (dense row overwrite, or
+    host-allocated physical pages for the paged layout — the cache layout
+    is picked up from the state structure), seed the slot's first token /
+    budget / done flag.  Runs between segments; carries persist."""
+    model = get_model(cfg)
+    nxt = _next_fn(_make_sampler(sample))
+    eos = -1 if eos_id is None else eos_id
+
+    def admit(params, state, prompt, slot, page_ids, max_new):
+        from repro.core import kvcache
+        logits0, dense = model.prefill(params, cfg, {"tokens": prompt}, par)
+        tok0, key = nxt(logits0, state["rng"])
+        tok0 = tok0[0]
+        cache = state["cache"]
+        if "k_pages" in cache:
+            cache = kvcache.admit_request(cache, dense["k"], dense["v"],
+                                          slot, page_ids)
+        else:
+            cache = kvcache.admit_dense(cache, dense["k"], dense["v"], slot)
+        done0 = (tok0 == eos) | (max_new <= 1)
+        return dict(state,
+                    tok=state["tok"].at[slot].set(tok0),
+                    done=state["done"].at[slot].set(done0),
+                    n_out=state["n_out"].at[slot].set(1),
+                    max_new=state["max_new"].at[slot].set(max_new),
+                    cache=cache, rng=key), tok0
+
+    # the state (KV cache included) is donated: admissions between
+    # segments update the pool in place instead of copying it
+    return jax.jit(admit, donate_argnums=(1,)) if jit else admit
+
+
+@functools.lru_cache(maxsize=16)
+def make_segment_fn(cfg: ArchConfig, par: ParallelCtx | None = None,
+                    seg_len: int = 4, *, eos_id: int | None = None,
+                    sample: str = "greedy", pad_id: int = 0,
+                    jit: bool = True):
+    """One jitted continuous-batching segment: a fixed-size ``lax.scan`` of
+    ``seg_len`` done-masked decode steps over the whole slot batch.  Slots
+    finish on EOS or their per-slot budget and stop advancing their cache
+    position; the scheduler admits new requests into freed slots *between*
+    segments.  Returns (state', toks (seg_len, B) int32, live (seg_len, B)
+    bool) where ``live[s, b]`` marks that slot b did useful work at step s
+    — the occupancy/live-tok-s accounting the serve report uses."""
+    model = get_model(cfg)
+    nxt = _next_fn(_make_sampler(sample))
+    eos = -1 if eos_id is None else eos_id
+
+    def segment(params, state):
+        def step(carry, _):
+            tok, done, n_out, max_new, cache, key = carry
+            live = ~done
+            logits, cache = model.decode(
+                params, cfg, {"token": tok, "done": done}, cache, par)
+            new, key = nxt(logits, key)
+            new = jnp.where(done, pad_id, new)
+            n_out = n_out + jnp.where(done, 0, 1)
+            ndone = done | (new == eos) | (n_out >= max_new)
+            return (new, ndone, n_out, max_new, cache, key), (new, live)
+
+        carry = (state["tok"], state["done"], state["n_out"],
+                 state["max_new"], state["cache"], state["rng"])
+        (tok, done, n_out, max_new, cache, key), (toks, lives) = \
+            jax.lax.scan(step, carry, None, length=seg_len)
+        return dict(state, tok=tok, done=done, n_out=n_out, max_new=max_new,
+                    cache=cache, rng=key), toks, lives
+
+    # donate the carried state so each segment reuses the KV cache
+    # buffers in place (the host loop's donate_argnums=(2,) analogue)
+    return jax.jit(segment, donate_argnums=(1,)) if jit else segment

@@ -24,7 +24,8 @@ from repro.core.qweights import QuantizedLinearWeight
 from .norms import qk_norm
 from .rope import apply_rope, rope_angles
 
-__all__ = ["init_attention", "attention", "decode_attention", "AttnParams"]
+__all__ = ["init_attention", "attention", "decode_attention",
+           "decode_attention_paged", "AttnParams"]
 
 NEG_INF = -1e30
 
@@ -208,31 +209,149 @@ def decode_attention(params, x, cache_k, cache_v, pos, cfg,
     """Single-token decode against a fixed-capacity KV cache.
 
     x (B,1,D); cache_k/v (B, T, n_kv, head_dim) with valid prefix length
-    ``pos`` (same for all batch rows — production servers use paged layouts;
-    contiguous-prefix is enough for the dry-run envelope).  Returns
-    (out (B,1,D), new_k, new_v).
+    ``pos``: a scalar (all rows in lockstep — the PR 3 fixed-length path,
+    bit-compatible) or a per-slot (B,) vector for ragged completion /
+    continuous batching (each row writes and masks at its own position;
+    a finished row whose pos stops advancing benignly rewrites its own
+    head entry — it is dead until re-admission overwrites the whole row).
+    Returns (out (B,1,D), new_k, new_v).
     """
     B, _, _ = x.shape
     T = cache_k.shape[1]
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    ragged = getattr(pos, "ndim", 0) == 1
+    positions = (pos[:, None].astype(jnp.int32) if ragged
+                 else jnp.full((B, 1), pos, jnp.int32))
     q, k, v = _qkv(params, x, cfg.n_heads, cfg.n_kv, cfg.head_dim,
                    positions, cfg.rope_theta, cfg.qk_norm, linear, salt)
-    new_k = jax.lax.dynamic_update_slice_in_dim(
-        cache_k, k.astype(cache_k.dtype), pos, axis=1)
-    new_v = jax.lax.dynamic_update_slice_in_dim(
-        cache_v, v.astype(cache_v.dtype), pos, axis=1)
+    if ragged:
+        def upd(c, kk, p):
+            return jax.lax.dynamic_update_slice_in_dim(c, kk, p, axis=0)
+        new_k = jax.vmap(upd)(cache_k, k.astype(cache_k.dtype), pos)
+        new_v = jax.vmap(upd)(cache_v, v.astype(cache_v.dtype), pos)
+        mask = jnp.arange(T)[None, None, None, :] <= pos[:, None, None, None]
+    else:
+        new_k = jax.lax.dynamic_update_slice_in_dim(
+            cache_k, k.astype(cache_k.dtype), pos, axis=1)
+        new_v = jax.lax.dynamic_update_slice_in_dim(
+            cache_v, v.astype(cache_v.dtype), pos, axis=1)
+        mask = jnp.arange(T)[None, None, None, :] <= pos
     n_rep = q.shape[2] // cfg.n_kv
     kr = jnp.repeat(new_k, n_rep, axis=2)            # (B,T,H,D)
     vr = jnp.repeat(new_v, n_rep, axis=2)
     s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
                    kr.astype(jnp.float32)) * cfg.head_dim ** -0.5
-    mask = jnp.arange(T)[None, None, None, :] <= pos
     s = jnp.where(mask, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhqk,bkhd->bqhd", p, vr.astype(jnp.float32))
     out = _mm(out.reshape(B, 1, -1).astype(x.dtype), params["wo"], linear,
               None if salt is None else salt + 7)
     return out, new_k, new_v
+
+
+def decode_attention_paged(params, x, view, cfg, linear=None, salt=None,
+                           done=None):
+    """Single-token decode against one layer of the int8 paged KV cache
+    (core/kvcache.py): flash-style online softmax over logical pages with
+    the int8->f32 dequant fused into the inner loop — the full-precision
+    cache is never materialized.
+
+    ``view`` (one layer's slice of the paged cache dict):
+      k_pages/v_pages (P, ps, KV, HD) int8, k_scale/v_scale (P, KV) f32,
+      k_tail/v_tail (B, ps, KV, HD), page_table (B, MP) int32, pos (B,).
+    ``done`` (B,) bool: finished slots neither advance nor flush — a dead
+    slot must not scatter into pool pages its allocator may already have
+    re-granted to a live request.
+
+    Returns (out (B,1,D), (k_pages, v_pages, k_scale, v_scale, k_tail,
+    v_tail)) — pos advances at the model level, shared by all layers.
+    """
+    from repro.core.kvcache import quantize_page
+
+    B = x.shape[0]
+    pos = view["pos"]
+    page_table = view["page_table"]
+    k_pages, v_pages = view["k_pages"], view["v_pages"]
+    k_scale, v_scale = view["k_scale"], view["v_scale"]
+    n_pages, ps, KV, HD = k_pages.shape
+    MP = page_table.shape[1]
+    positions = pos[:, None].astype(jnp.int32)
+    q, k, v = _qkv(params, x, cfg.n_heads, cfg.n_kv, cfg.head_dim,
+                   positions, cfg.rope_theta, cfg.qk_norm, linear, salt)
+
+    # 1. the new token lands in the slot's tail page at offset pos % ps
+    #    (bf16 — recent tokens attend at full precision until the page
+    #    fills and is quantized exactly once)
+    off = pos % ps
+
+    def _tail_write(tail, val):
+        def upd(t, vv, o):
+            return jax.lax.dynamic_update_slice_in_dim(t, vv[None], o, 0)
+        new = jax.vmap(upd)(tail, val[:, 0].astype(tail.dtype), off)
+        if done is None:
+            return new
+        return jnp.where(done[:, None, None, None], tail, new)
+
+    k_tail = _tail_write(view["k_tail"], k)
+    v_tail = _tail_write(view["v_tail"], v)
+
+    # 2. flash over logical pages: gather the physical int8 page, dequant
+    #    with its per-head scale inside the loop, overlay the tail page in
+    #    full precision, online-softmax accumulate
+    n_rep = q.shape[2] // KV
+    # _qkv lays heads out kv-major: head h = (g, r) with g = h // n_rep,
+    # matching jnp.repeat(k, n_rep, axis=2) on the dense path
+    qf = q[:, 0].astype(jnp.float32).reshape(B, KV, n_rep, HD)
+    scale_qk = HD ** -0.5
+    tail_page = pos // ps
+
+    def page_step(carry, j):
+        m, l, acc = carry
+        phys = page_table[:, j]                           # (B,)
+        kj = k_pages[phys].astype(jnp.float32) \
+            * k_scale[phys][:, None, :, None]             # (B,ps,KV,HD)
+        vj = v_pages[phys].astype(jnp.float32) \
+            * v_scale[phys][:, None, :, None]
+        is_tail = (j == tail_page)[:, None, None, None]
+        kj = jnp.where(is_tail, k_tail.astype(jnp.float32), kj)
+        vj = jnp.where(is_tail, v_tail.astype(jnp.float32), vj)
+        tj = j * ps + jnp.arange(ps, dtype=jnp.int32)     # token indices
+        valid = tj[None, :] <= pos[:, None]               # (B,ps)
+        s = jnp.einsum("bgrd,bpgd->bgrp", qf, kj) * scale_qk
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bgrp,bpgd->bgrd", p, vj)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, KV, n_rep), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, n_rep), jnp.float32)
+    acc0 = jnp.zeros((B, KV, n_rep, HD), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(page_step, (m0, l0, acc0),
+                                  jnp.arange(MP, dtype=jnp.int32))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]          # (B,KV,R,HD)
+    out = out.reshape(B, 1, -1).astype(x.dtype)
+
+    # 3. flush: a tail page that just filled is quantized (fresh per-head
+    #    absmax scales) and scattered to its physical page; slots that are
+    #    not flushing (or are done) scatter to an out-of-bounds sentinel
+    #    which mode="drop" discards — no read-modify-write, no collisions
+    full = (pos + 1) % ps == 0
+    if done is not None:
+        full = full & ~done
+    phys_t = jnp.take_along_axis(page_table, tail_page[:, None], 1)[:, 0]
+    idx = jnp.where(full, phys_t, n_pages)
+    qk_, sk_ = quantize_page(k_tail)
+    qv_, sv_ = quantize_page(v_tail)
+    k_pages = k_pages.at[idx].set(qk_, mode="drop")
+    v_pages = v_pages.at[idx].set(qv_, mode="drop")
+    k_scale = k_scale.at[idx].set(sk_, mode="drop")
+    v_scale = v_scale.at[idx].set(sv_, mode="drop")
+
+    out = _mm(out, params["wo"], linear,
+              None if salt is None else salt + 7)
+    return out, (k_pages, v_pages, k_scale, v_scale, k_tail, v_tail)
 
 
 AttnParams = dict

@@ -21,7 +21,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import ArchConfig
 from repro.core.qweights import QuantizedLinearWeight
 from repro.layers.attention import (attention, decode_attention,
-                                    init_attention)
+                                    decode_attention_paged, init_attention)
 from repro.layers.mlp import init_mlp, mlp
 from repro.layers.moe import init_moe, moe, moe_local
 from repro.layers.norms import init_rmsnorm, layernorm, rmsnorm
@@ -328,15 +328,49 @@ def prefill(params, cfg: ArchConfig, batch, par: ParallelCtx | None = None,
     return logits, {"k": ks, "v": vs, "pos": jnp.int32(S)}
 
 
+def _decode_embed(params, cfg: ArchConfig, batch, dt):
+    if cfg.stub_frontend:
+        return batch["embed"].astype(dt)              # (B,1,D)
+    return params["embed"].astype(dt)[batch["token"]][:, None]
+
+
+def _advance(pos, done):
+    """Per-slot position advance: finished rows stop moving (ragged
+    completion).  Scalar pos (lockstep PR 3 path) stays scalar."""
+    if done is None:
+        return pos + 1
+    return pos + jnp.where(done, 0, 1).astype(jnp.int32)
+
+
+def _decode_ff(cfg: ArchConfig, par, lp, x, h_attn, salt):
+    """Post-attention half of one decode layer (residual + FF/MoE) —
+    shared by the dense and paged decode bodies so the two cache layouts
+    can't drift apart."""
+    x = x + h_attn
+    hn = _norm(cfg, x, lp["ln2"])
+    if cfg.family == "moe":
+        h_ff, _ = _moe_apply(lp["moe"], hn, cfg, par, salt=salt)
+    else:
+        h_ff = mlp(lp["mlp"], hn, cfg.mlp_kind,
+                   linear=_linear_for(cfg.dscim, par), salt=salt)
+    return x + h_ff
+
+
 def decode(params, cfg: ArchConfig, batch, cache,
            par: ParallelCtx | None = None):
-    """One-token decode against the cache. Returns (logits (B,Vp), cache)."""
+    """One-token decode against the cache. Returns (logits (B,Vp), cache).
+
+    ``cache["pos"]`` may be a scalar (all rows in lockstep) or per-slot
+    (B,) for ragged completion; ``batch["done"]`` (optional, (B,) bool)
+    marks finished slots, which stop advancing their position.  A cache
+    carrying ``k_pages`` is the int8 block-paged layout (core/kvcache.py)
+    and routes through ``decode_attention_paged``."""
+    if "k_pages" in cache:
+        return _decode_paged(params, cfg, batch, cache, par)
     dt = jnp.dtype(cfg.compute_dtype)
-    if cfg.stub_frontend:
-        x = batch["embed"].astype(dt)                 # (B,1,D)
-    else:
-        x = params["embed"].astype(dt)[batch["token"]][:, None]
+    x = _decode_embed(params, cfg, batch, dt)
     pos = cache["pos"]
+    done = batch.get("done")
 
     def body(x, xs):
         lp, ck, cv, li = xs
@@ -346,21 +380,49 @@ def decode(params, cfg: ArchConfig, batch, cache,
                                      ck, cv, pos, cfg,
                                      linear=_attn_linear_for(cfg.dscim, par),
                                      salt=salt)
-        x = x + h
-        hn = _norm(cfg, x, lp["ln2"])
-        if cfg.family == "moe":
-            h_ff, _ = _moe_apply(lp["moe"], hn, cfg, par, salt=salt)
-        else:
-            h_ff = mlp(lp["mlp"], hn, cfg.mlp_kind,
-                       linear=_linear_for(cfg.dscim, par), salt=salt)
-        return x + h_ff, (nk, nv)
+        return _decode_ff(cfg, par, lp, x, h, salt), (nk, nv)
 
     x, (nk, nv) = jax.lax.scan(
         body, x, (params["layers"], cache["k"], cache["v"],
                   jnp.arange(cfg.n_layers, dtype=jnp.int32)))
     x = _norm(cfg, x, params["final_norm"])
     logits = _head(params, cfg, x)[:, 0]
-    return logits, {"k": nk, "v": nv, "pos": pos + 1}
+    return logits, {"k": nk, "v": nv, "pos": _advance(pos, done)}
+
+
+def _decode_paged(params, cfg: ArchConfig, batch, cache,
+                  par: ParallelCtx | None = None):
+    """One-token decode against the int8 block-paged KV cache: per-layer
+    page pools ride the layer scan as xs (like the dense k/v planes); the
+    page table and per-slot positions are layer-shared carry state."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = _decode_embed(params, cfg, batch, dt)
+    pos = cache["pos"]
+    page_table = cache["page_table"]
+    done = batch.get("done")
+
+    def body(x, xs):
+        lp, kp, vp, ks, vs, kt, vt, li = xs
+        lp = _cast(lp, dt)
+        salt = li * 8
+        view = {"k_pages": kp, "v_pages": vp, "k_scale": ks, "v_scale": vs,
+                "k_tail": kt, "v_tail": vt, "page_table": page_table,
+                "pos": pos}
+        h, planes = decode_attention_paged(
+            lp["attn"], _norm(cfg, x, lp["ln1"]), view, cfg,
+            linear=_attn_linear_for(cfg.dscim, par), salt=salt, done=done)
+        return _decode_ff(cfg, par, lp, x, h, salt), planes
+
+    x, (kp, vp, ks, vs, kt, vt) = jax.lax.scan(
+        body, x, (params["layers"], cache["k_pages"], cache["v_pages"],
+                  cache["k_scale"], cache["v_scale"],
+                  cache["k_tail"], cache["v_tail"],
+                  jnp.arange(cfg.n_layers, dtype=jnp.int32)))
+    x = _norm(cfg, x, params["final_norm"])
+    logits = _head(params, cfg, x)[:, 0]
+    return logits, {"k_pages": kp, "v_pages": vp, "k_scale": ks,
+                    "v_scale": vs, "k_tail": kt, "v_tail": vt,
+                    "page_table": page_table, "pos": _advance(pos, done)}
 
 
 def cache_specs(cfg: ArchConfig, batch: int, seq: int):

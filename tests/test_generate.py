@@ -138,3 +138,124 @@ def test_generate_fn_builder_is_cached():
     cfg, _, _ = _setup()
     assert make_generate_fn(cfg, None, 7) is make_generate_fn(cfg, None, 7)
     assert make_generate_fn(cfg, None, 7) is not make_generate_fn(cfg, None, 8)
+    assert make_generate_fn(cfg, None, 7) is not \
+        make_generate_fn(cfg, None, 7, eos_id=3)
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 4: EOS early-exit while_loop, in-scan sampling, int8 paged KV
+# ---------------------------------------------------------------------------
+
+def _assert_prefix_parity(t_full, t_ee, eos, pad=0):
+    """Early-exit rows must replay the fixed scan bit for bit up to and
+    including each row's first EOS, and pin everything after to pad."""
+    n = t_full.shape[1]
+    for b in range(t_full.shape[0]):
+        hits = np.nonzero(t_full[b] == eos)[0]
+        end = hits[0] + 1 if len(hits) else n
+        np.testing.assert_array_equal(t_ee[b, :end], t_full[b, :end])
+        assert (t_ee[b, end:] == pad).all(), (b, t_ee[b], t_full[b])
+
+
+@pytest.mark.parametrize("dscim", MODES)
+def test_early_exit_matches_fixed_scan(dscim):
+    """The lax.while_loop variant (per-slot done-masked ragged completion)
+    produces bit-identical tokens up to each sequence's EOS vs the fixed-
+    length scan, for every DS-CIM backend incl. kernel and '+attn'."""
+    cfg, params, prompts = _setup(dscim)
+    n = 5
+    t_full, _ = serve_batch(cfg, params, prompts, n)
+    # an EOS that row 0 emits early and the other row may never emit
+    eos = int(t_full[0, 1])
+    t_ee, _ = serve_batch(cfg, params, prompts, n, eos_id=eos)
+    _assert_prefix_parity(t_full, t_ee, eos)
+
+
+def test_early_exit_per_slot_budgets():
+    """batch['max_new'] budgets finish slots raggedly (counted including
+    the prefill-sampled token); the surviving prefix replays the fixed
+    scan; an unreachable EOS alone runs the full length."""
+    cfg, params, prompts = _setup("exact:dscim2:64")
+    n = 6
+    t_full, _ = serve_batch(cfg, params, prompts, n)
+    t_b, _ = serve_batch(cfg, params, prompts, n, eos_id=-1, max_new=[2, 4])
+    np.testing.assert_array_equal(t_b[0, :2], t_full[0, :2])
+    np.testing.assert_array_equal(t_b[1, :4], t_full[1, :4])
+    assert (t_b[0, 2:] == 0).all() and (t_b[1, 4:] == 0).all()
+    t_noeos, _ = serve_batch(cfg, params, prompts, n, eos_id=-1)
+    np.testing.assert_array_equal(t_noeos, t_full)
+
+
+def test_sampling_in_scan():
+    """temp/top-k decode rules draw inside the jitted loop: reproducible
+    per seed, seed-sensitive, top-1 == greedy, and the while_loop variant
+    draws the identical sequence (one key split per step)."""
+    cfg, params, prompts = _setup()
+    n = 6
+    tg, _ = serve_batch(cfg, params, prompts, n)
+    t1, _ = serve_batch(cfg, params, prompts, n, sample="topk:1")
+    np.testing.assert_array_equal(t1, tg)     # top-1 == greedy argmax
+    a, _ = serve_batch(cfg, params, prompts, n, sample="temp:0.8",
+                       rng_seed=3)
+    b, _ = serve_batch(cfg, params, prompts, n, sample="temp:0.8",
+                       rng_seed=3)
+    np.testing.assert_array_equal(a, b)       # deterministic per seed
+    c, _ = serve_batch(cfg, params, prompts, n, sample="temp:0.8",
+                       rng_seed=4)
+    assert (a != c).any()                     # and seed-sensitive
+    d, _ = serve_batch(cfg, params, prompts, n, sample="topk:8:0.8",
+                       rng_seed=3)
+    eos = int(d[0, 1])
+    d_ee, _ = serve_batch(cfg, params, prompts, n, sample="topk:8:0.8",
+                          rng_seed=3, eos_id=eos)
+    _assert_prefix_parity(d, d_ee, eos)
+
+
+def test_bad_sample_spec_rejected():
+    cfg, params, prompts = _setup()
+    for spec in ("nucleus:0.9", "temp:0", "topk:4:0:1"):
+        with pytest.raises(ValueError):
+            serve_batch(cfg, params, prompts, 4, sample=spec)
+
+
+@pytest.mark.parametrize("dscim", ["off", "kernel:dscim2:64"])
+def test_paged_int8_kv_close_to_float_kv(dscim):
+    """int8 paged KV serves within tolerance of the dense float cache:
+    logit drift on the teacher-matched prefix (steps before the first
+    token divergence per row — beyond it the drivers feed different
+    tokens back and the comparison stops measuring quantization) stays
+    under 1e-2 RMSE on the float compute path (the ISSUE 4 acceptance
+    metric; 3e-2 through the lowest-accuracy DS-CIM2/L64 macro, whose
+    approximate MVMs amplify the cache perturbation), and the early-exit
+    variant composes with paging."""
+    tol = 1e-2 if dscim == "off" else 3e-2
+    cfg, params, prompts = _setup(dscim)
+    n = 8
+    tf, lf = serve_batch(cfg, params, prompts, n, trace_logits=True)
+    tq, lq = serve_batch(cfg, params, prompts, n, trace_logits=True,
+                         kv="int8", page_size=4)
+    # tokens come off the same prefill, so column 0 always agrees and the
+    # matched prefix holds at least one same-input decode step per row
+    np.testing.assert_array_equal(tf[:, 0], tq[:, 0])
+    from repro.launch.serve import logit_drift_rmse
+    rmse = logit_drift_rmse(tf, tq, lf, lq)
+    assert rmse <= tol, rmse
+    # prefill logits identical (paging only changes the decode path)
+    np.testing.assert_array_equal(np.asarray(lf[0]), np.asarray(lq[0]))
+    # early-exit + paged: pads pinned after the paged run's own EOS
+    t_full, _ = serve_batch(cfg, params, prompts, n, kv="int8", page_size=4)
+    eos = int(t_full[0, 1])
+    t_ee, _ = serve_batch(cfg, params, prompts, n, kv="int8", page_size=4,
+                          eos_id=eos)
+    _assert_prefix_parity(t_full, t_ee, eos)
+
+
+def test_host_loop_rejects_live_work_options():
+    cfg, params, prompts = _setup()
+    for kw in ({"eos_id": 3}, {"sample": "temp:0.7"}, {"kv": "int8"}):
+        with pytest.raises(ValueError):
+            serve_batch(cfg, params, prompts, 4, scan=False, **kw)
+    with pytest.raises(ValueError):   # budgets need the early-exit variant
+        serve_batch(cfg, params, prompts, 4, max_new=[2, 2])
+    with pytest.raises(ValueError):   # trace rides the fixed scan only
+        serve_batch(cfg, params, prompts, 4, eos_id=3, trace_logits=True)

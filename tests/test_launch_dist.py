@@ -322,6 +322,53 @@ def test_moe_prepared_shared_expert_under_mesh():
     assert "OK" in r.stdout, r.stderr[-3000:]
 
 
+def test_paged_kv_serve_under_mesh():
+    """ISSUE 4: the int8 block-paged KV cache serves under a mesh — the
+    page pool / scales / tails / page table get DP-aligned specs from
+    cache_partition (the pool shards over the DP axes like the request
+    batch; slot-major allocation keeps a slot's pages on its own shard),
+    and serve_batch(kv='int8') under model=4 and data=2,model=4 meshes
+    reproduces single-device paged serving token for token (prefill
+    logits to float tolerance, as in the dense mesh parity test)."""
+    r = _run("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.configs import get_arch
+        from repro.core.kvcache import paged_cache_specs
+        from repro.launch.mesh import parallel_ctx_from_spec
+        from repro.launch.serve import serve_batch
+        from repro.launch.sharding import cache_partition
+        from repro.models import get_model
+        cfg = dataclasses.replace(get_arch("qwen3-0.6b").reduced(),
+                                  dscim="kernel:dscim1:256")
+        par2 = parallel_ctx_from_spec("data=2,model=4")
+        cs = paged_cache_specs(cfg, 4, 32, 4)
+        cp = cache_partition(cfg, par2, cs)
+        assert cp["k_pages"][1] == ("data",) and \\
+            cp["k_pages"][2:] == (None, None, None), cp
+        assert cp["k_scale"][1] == ("data",), cp
+        assert cp["v_tail"][1] == ("data",), cp
+        assert cp["page_table"][0] == ("data",), cp
+        assert cp["pos"][0] == ("data",), cp
+        model = get_model(cfg)
+        params = model.init_params(cfg, jax.random.PRNGKey(0))
+        prompts = np.random.default_rng(0).integers(
+            0, cfg.vocab, (4, 8), dtype=np.int32)
+        ref_t, ref_l = serve_batch(cfg, params, prompts, 6, kv="int8",
+                                   page_size=4)
+        for spec in ("model=4", "data=2,model=4"):
+            par = parallel_ctx_from_spec(spec)
+            got_t, got_l = serve_batch(cfg, params, prompts, 6, kv="int8",
+                                       page_size=4, par=par)
+            np.testing.assert_array_equal(ref_t, got_t)
+            np.testing.assert_allclose(np.asarray(ref_l[0]),
+                                       np.asarray(got_l[0]), atol=1e-5)
+        print("OK")
+    """)
+    assert "OK" in r.stdout, r.stderr[-3000:]
+
+
 def test_elastic_mesh_from_env():
     r = _run("""
         import os
