@@ -6,12 +6,17 @@ decode matmuls of the reduced serve configs (M=1, request batch riding the
 batch grid axis: MLP gate/up/down, LM head, and the '+attn' projections)
 plus the decode-shape microbench GEMVs (M in {1, 8, 16}) — for the two
 calibrated macro variants the serve/bench paths use (DS-CIM1/L256,
-DS-CIM2/L64).  With the cache checked in, cold-start serving with
-``--tune`` (or ``REPRO_DSCIM_TUNE=1``) is a dictionary lookup, never a
-re-tune; unlisted shapes still sweep once and land in the
-``REPRO_AUTOTUNE_CACHE``-pointed file if set.
+DS-CIM2/L64) — and, since ISSUE 5, the **paged-attention decode cells**
+(kernels/paged_attention.py ``(gh, qp)`` winners: GQA head grouping x
+padded q rows) for the serving KV geometry at page_size in {4, 8, 16}.
+With the cache checked in, cold-start serving with ``--tune`` (or
+``REPRO_DSCIM_TUNE=1``) is a dictionary lookup, never a re-tune; unlisted
+shapes still sweep once and land in the ``REPRO_AUTOTUNE_CACHE``-pointed
+file if set.
 
 Run from the repo root:  PYTHONPATH=src python -m benchmarks.autotune_serving
+Only re-time the paged-attention keys (fused winners kept):
+                 PYTHONPATH=src python -m benchmarks.autotune_serving --paged-only
 """
 from __future__ import annotations
 
@@ -36,6 +41,13 @@ SERVE_BATCHES = (1, 4, 8)          # request batch = the batch grid axis, M=1
 BENCH_SHAPES = ((1, 1, 512, 128), (1, 8, 512, 128), (1, 16, 512, 128))
 GROUP_K = 128                      # DSCIMLinear serving default granularity
 
+# paged-attention decode cells: (B, KV, n_rep, HD) of the reduced serve
+# config (qwen3-0.6b: 2 kv heads x 2-way GQA x hd 16) at the request
+# batches serving/CI hit (incl. the DP-sharded locals B/dp) x the
+# supported page sizes
+PAGED_QSHAPES = tuple((b, 2, 2, 16) for b in (1, 2, 3, 4, 8))
+PAGED_PAGE_SIZES = (4, 8, 16)
+
 
 def serve_kn() -> list:
     """Full-N pairs plus their model-sharded local-N variants (deduped)."""
@@ -47,9 +59,45 @@ def serve_kn() -> list:
     return sorted(kn)
 
 
-def main():
+def tune_paged(autotune) -> int:
+    """Time the paged-attention cell candidates for the serving shapes."""
+    n = 0
+    for (B, KV, R, HD) in PAGED_QSHAPES:
+        for ps in PAGED_PAGE_SIZES:
+            t0 = time.time()
+            win = autotune.paged_attn_tiles((B, KV, R, HD), ps,
+                                            interpret=True)
+            print(f"paged_attn B{B} kv{KV}r{R}hd{HD} ps{ps} -> gh,qp={win} "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+            n += 1
+    return n
+
+
+def _drop_paged_keys(path: str) -> None:
+    """--paged-only re-times the paged winners without touching the fused
+    ones: strip just the paged_attn/* keys so ``best`` re-sweeps them
+    (DEFAULT_CACHE is the very file being written)."""
+    import json
+    if not os.path.exists(path):
+        return
+    with open(path) as f:
+        data = json.load(f)
+    data = {k: v for k, v in data.items() if not k.startswith("paged_attn/")}
+    with open(path, "w") as f:
+        json.dump(data, f, indent=0, sort_keys=True)
+
+
+def main(argv=None):
     from repro.core.seed_search import calibrated_config
     from repro.kernels import autotune
+
+    argv = sys.argv[1:] if argv is None else argv
+    if "--paged-only" in argv:
+        _drop_paged_keys(autotune.DEFAULT_CACHE)
+        autotune.clear()
+        n = tune_paged(autotune)
+        print(f"# {n} paged keys -> {os.environ['REPRO_AUTOTUNE_CACHE']}")
+        return 0
 
     # a *re*generation must re-time: drop the existing packaged winners
     # first, or autotune.best would read them back (DEFAULT_CACHE is the
@@ -73,7 +121,8 @@ def main():
                          time.time() - t0))
             print(f"{variant}/L{length} B{B} {M}x{K}x{N} -> bm,bn,bk={win} "
                   f"({rows[-1][-1]:.1f}s)", flush=True)
-    print(f"# {len(rows)} keys -> {os.environ['REPRO_AUTOTUNE_CACHE']}")
+    nrows = len(rows) + tune_paged(autotune)
+    print(f"# {nrows} keys -> {os.environ['REPRO_AUTOTUNE_CACHE']}")
     return 0
 
 

@@ -18,6 +18,11 @@ page table, core/kvcache.py) and the logit drift measured on the
 teacher-matched prefix — per row, decode steps up to the first token
 divergence — so feedback of a flipped argmax doesn't masquerade as
 quantization error.  Compile time is excluded everywhere (warmed runs).
+
+ISSUE 5 adds the paged *read-path* A/B on the same int8 cache: the fused
+Pallas paged-attention kernel (kernels/paged_attention.py) vs the jnp
+gather reference, with the per-step HBM bytes the kernel stops staging
+(gathered int8 pages + their f32 dequant copies) in the derived fields.
 """
 from __future__ import annotations
 
@@ -168,6 +173,71 @@ def _queue_rows(cfg, params, smoke):
     return rows
 
 
+def _paged_kernel_rows(cfg_float, params, smoke):
+    """ISSUE 5 rows: the fused Pallas paged-attention read path vs the jnp
+    gather reference on the same int8 paged cache.  The derived fields
+    carry the HBM traffic the kernel removes *per decode step*: the jnp
+    path stages the gathered int8 k+v pages and their dequantized f32
+    copies in HBM before the QK contraction (gather -> dequant -> einsum
+    are separate XLA ops), while the kernel streams the int8 pages
+    HBM->VMEM once and dequantizes in VMEM — on TPU that staged traffic is
+    the bandwidth term the int8 cache was supposed to save.  Logit drift
+    between the two paths is the tools/bench_regression.py CI metric
+    (matched-prefix RMSE, threshold tools/ci_thresholds.json)."""
+    from repro.core.kvcache import n_pages_for
+    from repro.launch.serve import logit_drift_rmse, serve_batch
+    from repro.launch.steps import make_generate_fn
+    B, prompt_len = 4, 16
+    n_tokens = 16 if smoke else 112
+    page_size = 4
+    reps = 1 if smoke else 3
+    capacity = prompt_len + n_tokens
+    MP = n_pages_for(capacity, page_size)
+    L, KV, HD = cfg_float.n_layers, cfg_float.n_kv, cfg_float.head_dim
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg_float.vocab, (B, prompt_len),
+                           dtype=np.int32)
+    batch = {"tokens": jnp.asarray(prompts)}
+
+    def timed_path(path):
+        # the read-path pin keys the builder cache — no env state, no
+        # stale-executable hazard between the two timed paths
+        gen = make_generate_fn(cfg_float, None, n_tokens, kv="int8",
+                               page_size=page_size, paged_attn=path)
+        us = timed(lambda: gen(params, batch)[0], n=reps)
+        toks, trace = serve_batch(cfg_float, params, prompts, n_tokens,
+                                  trace_logits=True, prepare=False,
+                                  kv="int8", page_size=page_size,
+                                  paged_attn=path)
+        return us, toks, trace
+
+    us_k, tk, lk = timed_path("kernel")
+    us_j, tj, lj = timed_path("jnp")
+    drift = logit_drift_rmse(tj, tk, lj, lk)
+    # per decode step, per layer: gathered int8 k+v pages (2x) + their f32
+    # dequantized copies (8x) staged in HBM by the jnp path — all removed
+    # by the kernel (pages go HBM->VMEM once, dequant stays in VMEM)
+    page_elems = B * MP * page_size * KV * HD
+    staged = L * page_elems * (2 * 1 + 2 * 4)
+    shared = (f"page_size={page_size};capacity={capacity};"
+              f"hbm_staged_bytes_per_step_gather={staged};"
+              f"hbm_staged_bytes_per_step_kernel=0;"
+              f"hbm_bytes_removed_per_step={staged};"
+              f"logit_drift_rmse={drift:.3e};"
+              f"token_agreement={float((tk == tj).mean()):.3f}")
+    tag = f"float/B{B}x{prompt_len}+{n_tokens}"
+    return [{
+        "name": f"serve/paged_read_gather/{tag}",
+        "us": us_j,
+        "derived": f"tok_s={B * n_tokens / us_j * 1e6:.1f};{shared}",
+    }, {
+        "name": f"serve/paged_read_kernel/{tag}",
+        "us": us_k,
+        "derived": (f"tok_s={B * n_tokens / us_k * 1e6:.1f};"
+                    f"speedup_vs_gather={us_j / us_k:.2f}x;{shared}"),
+    }]
+
+
 def _paged_kv_rows(cfg_float, params, smoke):
     """Int8 block-paged KV cache vs the dense float cache: tok/s, resident
     decode-cache bytes, and teacher-matched-prefix logit drift."""
@@ -235,10 +305,9 @@ def run(smoke: bool = False):
     rows = _dispatch_rows(cfg, params, smoke)
     rows += _queue_rows(cfg, params, smoke)
     cfg_float = dataclasses.replace(cfg, dscim="off")
-    rows += _paged_kv_rows(cfg_float,
-                           model.init_params(cfg_float,
-                                             jax.random.PRNGKey(0)),
-                           smoke)
+    params_float = model.init_params(cfg_float, jax.random.PRNGKey(0))
+    rows += _paged_kv_rows(cfg_float, params_float, smoke)
+    rows += _paged_kernel_rows(cfg_float, params_float, smoke)
     return rows
 
 

@@ -33,11 +33,15 @@ Only-live-work serving (ISSUE 4):
                   lax.while_loop that stops once every row has emitted
                   EOS; finished rows are done-masked (cache position
                   frozen, tokens pinned to pad)
-  --temp/--top-k  sampling inside the scan (greedy stays the default;
-                  the PRNG key rides the loop carry)
+  --temp/--top-k/--top-p  sampling inside the scan (greedy stays the
+                  default; the PRNG key rides the loop carry; --top-p is
+                  nucleus sampling, ISSUE 5)
   --kv int8       block-paged int8 KV cache (core/kvcache.py): per-page
                   per-kv-head scales, ~4x fewer resident decode cache
-                  bytes, dequant fused into the paged flash inner loop
+                  bytes, dequant fused into the paged flash inner loop —
+                  since ISSUE 5 read by the single-launch Pallas
+                  paged-attention kernel for 'kernel' dscim modes
+                  (kernels/paged_attention.py)
 For continuous batching (admission into freed slots between scan
 segments) use the serving driver:  python -m repro.launch.serve
 --continuous --eos 7 --kv int8 --dscim kernel:dscim1:256
@@ -77,8 +81,15 @@ def main():
                     help="temperature sampling inside the scan")
     ap.add_argument("--top-k", type=int, default=None,
                     help="top-k sampling inside the scan")
+    ap.add_argument("--top-p", type=float, default=None,
+                    help="top-p (nucleus) sampling inside the scan "
+                         "(exclusive with --top-k)")
     ap.add_argument("--kv", choices=("float", "int8"), default="float",
-                    help="dense float KV cache or the block-paged int8 one")
+                    help="dense float KV cache or the block-paged int8 one "
+                         "(read through the fused Pallas paged-attention "
+                         "kernel for 'kernel' dscim modes; "
+                         "REPRO_PAGED_ATTN=jnp forces the gather "
+                         "reference)")
     args = ap.parse_args()
     from repro.launch.serve import _sample_spec
     sample = _sample_spec(args)

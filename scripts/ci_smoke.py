@@ -1,0 +1,82 @@
+"""CI serve-smoke driver (ISSUE 5 satellite): one named entry per smoke
+instead of four copy-pasted arg soups in .github/workflows/ci.yml.
+
+Each smoke is a named argv preset for ``repro.launch.serve.main`` — the
+same entry point operators use — run in-process so one CI step can chain
+several smokes while reusing the warmed jax runtime.  The workflow legs
+shrink to ``python -m scripts.ci_smoke <name> [<name> ...]`` and adding a
+smoke is a one-line dict edit, not a YAML block.
+
+Smokes (all interpret-mode, reduced configs):
+  continuous         staggered admission, EOS early-exit, int8 paged KV
+  paged-kernel       --kv int8 through the fused Pallas paged-attention
+                     read path (--paged-attn kernel)
+  paged-jnp          the same serve through the jnp gather reference
+                     (--paged-attn jnp) — the A/B leg
+  mesh               scanned generate under --mesh model=4
+  mesh-paged         int8 paged KV under --mesh model=4 through the jnp
+                     gather reference (--paged-attn jnp — GSPMD
+                     partitioning of the reference path)
+  mesh-paged-kernel  the Pallas read path under --mesh model=4 (the
+                     shard_map placement smoke; multidevice job only)
+
+Usage:  PYTHONPATH=src python -m scripts.ci_smoke continuous paged-kernel
+        PYTHONPATH=src python -m scripts.ci_smoke --list
+"""
+from __future__ import annotations
+
+import sys
+
+_DSCIM = "kernel:dscim1:256"
+_PAGED = ["--kv", "int8", "--page-size", "4", "--eos", "7"]
+
+SMOKES: dict = {
+    "continuous": ["--continuous", "--requests", "6", "--batch", "2",
+                   "--segment-len", "2", "--tokens", "6",
+                   "--dscim", _DSCIM, *_PAGED],
+    "paged-kernel": ["--tokens", "8", "--batch", "4", "--dscim", _DSCIM,
+                     *_PAGED, "--paged-attn", "kernel"],
+    "paged-jnp": ["--tokens", "8", "--batch", "4", "--dscim", _DSCIM,
+                  *_PAGED, "--paged-attn", "jnp"],
+    "mesh": ["--tokens", "8", "--batch", "4", "--dscim", _DSCIM,
+             "--mesh", "model=4"],
+    "mesh-paged": ["--tokens", "8", "--batch", "4", "--dscim", _DSCIM,
+                   "--mesh", "model=4", *_PAGED, "--paged-attn", "jnp"],
+    "mesh-paged-kernel": ["--tokens", "8", "--batch", "4",
+                          "--dscim", _DSCIM, "--mesh", "model=4", *_PAGED,
+                          "--paged-attn", "kernel"],
+}
+
+
+def run(names) -> int:
+    from repro.launch import serve
+
+    for name in names:
+        if name not in SMOKES:
+            print(f"unknown smoke {name!r}; have {sorted(SMOKES)}",
+                  file=sys.stderr)
+            return 2
+        argv = SMOKES[name]
+        print(f"# === ci_smoke {name}: serve {' '.join(argv)} ===",
+              flush=True)
+        # --paged-attn is a builder-cache-keyed parameter (not env state),
+        # so chained smokes can A/B read paths without cache hygiene
+        rc = serve.main(argv)
+        if rc:
+            print(f"# ci_smoke {name} FAILED (rc={rc})", file=sys.stderr)
+            return rc
+        print(f"# ci_smoke {name} OK", flush=True)
+    return 0
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if not argv or "--list" in argv:
+        for name, args in SMOKES.items():
+            print(f"{name}: serve {' '.join(args)}")
+        return 0 if "--list" in argv else 2
+    return run(argv)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -24,9 +24,27 @@ Write path: each decoded token lands in its slot's *tail* page at offset
 when the tail fills, it is quantized once (fresh per-page absmax scales)
 and flushed to the physical page given by the page table.  Tokens are
 therefore quantized exactly once — no incremental requantization drift.
-Read path: ``decode_attention_paged`` (layers/attention.py) scans logical
-pages flash-style and dequantizes each int8 page inside the online-softmax
-inner loop; the tail page overlays its logical slot in full precision.
+
+Read paths — ``decode_attention_paged`` (layers/attention.py) walks the
+logical pages flash-style with the int8 dequant fused into the
+online-softmax inner loop and the tail overlaying its logical slot in
+full precision, through one of two implementations (ISSUE 5):
+
+* the **fused Pallas kernel** (kernels/paged_attention.py) — one launch
+  per decode step; the page table is a scalar-prefetch operand, so each
+  physical int8 page streams HBM->VMEM directly and is dequantized
+  in-VMEM inside the softmax update.  Default for 'kernel' dscim serving
+  modes (the TPU bandwidth path); under a mesh it runs inside shard_map
+  (batch over DP, pool gathered per shard).
+* the **jnp gather scan** — a ``lax.scan`` over logical pages gathering
+  ``k_pages[table[:, j]]`` per step.  The reference semantics: default
+  for every non-'kernel' mode, partitions under plain GSPMD, and the
+  baseline the kernel is CI-diffed against (tools/bench_regression.py).
+
+``--paged-attn kernel|jnp`` (a cache-keyed option on the whole serve
+stack) pins either path explicitly; ``REPRO_PAGED_ATTN`` forces the
+'auto' fallback at trace time.  Both walk pages in the same order with
+f32 statistics, agreeing to <=1e-5 logits (tests/test_paged_kernel.py).
 
 Page allocation is host-side (``PageAllocator``): the continuous-batching
 scheduler (launch/serve.py) grants a request its pages at admission and

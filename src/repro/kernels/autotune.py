@@ -24,7 +24,8 @@ import time
 
 import jax
 
-__all__ = ["best", "fused_tiles", "mvm_tiles", "clear", "DEFAULT_CACHE"]
+__all__ = ["best", "fused_tiles", "mvm_tiles", "paged_attn_tiles", "clear",
+           "DEFAULT_CACHE"]
 
 _CACHE: dict[str, tuple] = {}
 _CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
@@ -160,6 +161,53 @@ def fused_tiles(shape, cfg, g: int, *, interpret: bool,
         return lambda: dscim_fused_mvm(
             x, w, cfg, group_k=(g if g != K else None), bm=bm, bn=bn, bk=bk,
             bits=bits, interpret=interpret)
+
+    return best(key, cands, bench)
+
+
+def paged_attn_tiles(shape, page_size: int, *, interpret: bool):
+    """(gh, qp) winner for the paged-attention decode kernel on a
+    (B, KV, n_rep, HD) query against ``page_size``-token int8 pages.
+
+    ``gh`` (kv heads per grid cell — the GQA head-grouping knob: gh > 1
+    amortizes one page DMA across head groups sharing the page bytes) and
+    ``qp`` (q rows per cell: pad-free n_rep, or n_rep rounded up to the
+    8-row sublane tile).  The page count is deliberately NOT part of the
+    key — the winning cell shape is a per-page property, and decode MP
+    grows with capacity; candidates are swept at a fixed representative
+    walk length.  The checked-in cache ships winners for the decode
+    serving shapes at page_size in {4, 8, 16}."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from .paged_attention import paged_attention_decode
+
+    B, KV, R, HD = shape
+    key = f"paged_attn/B{B}/kv{KV}r{R}hd{HD}/ps{page_size}/" \
+          f"{'cpu' if interpret else 'tpu'}"
+    ghs = sorted({g for g in (1, 2, 4, KV) if KV % g == 0})
+    qps = sorted({R, -(-R // 8) * 8})
+    cands = [(gh, qp) for gh in ghs for qp in qps]
+    MP = 4                               # representative decode page walk
+    P = B * MP
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(0, 1, (B, KV, R, HD)), jnp.float32)
+    kp = jnp.asarray(rng.integers(-127, 128, (P, page_size, KV, HD)),
+                     jnp.int8)
+    vp = jnp.asarray(rng.integers(-127, 128, (P, page_size, KV, HD)),
+                     jnp.int8)
+    ks = jnp.asarray(rng.uniform(0.005, 0.02, (P, KV)), jnp.float32)
+    vs = jnp.asarray(rng.uniform(0.005, 0.02, (P, KV)), jnp.float32)
+    kt = jnp.asarray(rng.normal(0, 1, (B, page_size, KV, HD)), jnp.bfloat16)
+    vt = jnp.asarray(rng.normal(0, 1, (B, page_size, KV, HD)), jnp.bfloat16)
+    table = jnp.asarray(rng.permutation(P).reshape(B, MP), jnp.int32)
+    pos = jnp.full((B,), MP * page_size - 2, jnp.int32)
+
+    def bench(cand):
+        gh, qp = cand
+        return lambda: paged_attention_decode(
+            q, kp, vp, ks, vs, kt, vt, table, pos, gh=gh, qp=qp,
+            interpret=interpret)
 
     return best(key, cands, bench)
 

@@ -19,15 +19,20 @@ Only-live-work serving (ISSUE 4):
   are done-masked — their cache position stops advancing, their tokens
   pin to ``pad_id`` — so completion is ragged, and no decode steps run
   past the last live slot.
-* **Sampling in the scan** (``sample=...`` / ``--temp --top-k``): greedy
-  argmax remains the default; 'temp:<t>' and 'topk:<k>[:<t>]' draw inside
-  the jitted loop with the PRNG key riding the carry (one split per step
-  — the while and scan drivers sample identically).
+* **Sampling in the scan** (``sample=...`` / ``--temp --top-k --top-p``):
+  greedy argmax remains the default; 'temp:<t>', 'topk:<k>[:<t>]' and
+  'topp:<p>[:<t>]' (nucleus) draw inside the jitted loop with the PRNG
+  key riding the carry (one split per step — the while and scan drivers
+  sample identically).
 * **Int8 paged KV cache** (``kv='int8'`` / ``--kv int8``): decode reads
   an int8 block-paged cache with per-page per-kv-head scales
   (core/kvcache.py) — ~4x fewer resident decode cache bytes, dequant
   fused into the paged flash attention inner loop, capacity decoupled
-  from request length via the page table.
+  from request length via the page table.  Since ISSUE 5 the read loop
+  is a single-launch Pallas kernel for 'kernel' dscim modes
+  (kernels/paged_attention.py; ``--paged-attn kernel|jnp`` /
+  ``REPRO_PAGED_ATTN`` forces either path — the jnp gather scan stays
+  the reference).
 * **Continuous batching** (``serve_continuous`` / ``--continuous``): a
   scheduler above the scanned loop — requests are admitted into freed
   slots between fixed-size scan segments (launch/steps.py
@@ -88,7 +93,8 @@ def serve_batch(cfg, params, prompts: np.ndarray, n_tokens: int,
                 par=None, prepare: bool = True, scan: bool = True,
                 trace_logits: bool = False, eos_id: int | None = None,
                 sample: str = "greedy", kv: str = "float",
-                page_size: int = 8, max_new=None, rng_seed: int = 0):
+                page_size: int = 8, max_new=None, rng_seed: int = 0,
+                paged_attn: str = "auto"):
     """prompts (B, S) int32 -> generated (B, n_tokens) int32, logits list.
 
     ``par``: ParallelCtx for multi-chip serving — params are placed by the
@@ -106,10 +112,13 @@ def serve_batch(cfg, params, prompts: np.ndarray, n_tokens: int,
     that stops once every row is finished; tokens past a row's EOS are
     pinned to pad.  ``max_new`` ((B,) ints, optional) adds per-slot token
     budgets (counted including the first, prefill-sampled token).
-    ``sample``: 'greedy' | 'temp:<t>' | 'topk:<k>[:<t>]' (``rng_seed``
-    seeds the in-scan PRNG key).
+    ``sample``: 'greedy' | 'temp:<t>' | 'topk:<k>[:<t>]' | 'topp:<p>[:<t>]'
+    (``rng_seed`` seeds the in-scan PRNG key).
     ``kv``: 'float' (dense cache) | 'int8' (block-paged quantized cache,
-    ``page_size`` tokens per page)."""
+    ``page_size`` tokens per page).
+    ``paged_attn``: int8 read path — 'kernel' (fused Pallas paged
+    attention) / 'jnp' (gather reference) pin it (and key the builder
+    cache, so in-process A/Bs are safe); 'auto' follows cfg.dscim."""
     params = _place(cfg, params, par, prepare)
     batch = {"tokens": jnp.asarray(prompts)}
     if max_new is not None:
@@ -123,7 +132,8 @@ def serve_batch(cfg, params, prompts: np.ndarray, n_tokens: int,
         generate = make_generate_fn(cfg, par, n_tokens,
                                     trace_logits=trace_logits,
                                     eos_id=eos_id, sample=sample,
-                                    kv=kv, page_size=page_size)
+                                    kv=kv, page_size=page_size,
+                                    paged_attn=paged_attn)
         tokens, logits = generate(params, batch)
         trace = list(np.asarray(logits)) if trace_logits else [logits]
         return np.asarray(tokens), trace
@@ -158,7 +168,8 @@ def serve_continuous(cfg, params, prompts: np.ndarray, n_tokens: int, *,
                      eos_id: int | None = None, sample: str = "greedy",
                      kv: str = "float", page_size: int = 8,
                      n_pages: int | None = None, par=None,
-                     prepare: bool = True, rng_seed: int = 0):
+                     prepare: bool = True, rng_seed: int = 0,
+                     paged_attn: str = "auto"):
     """Continuous-batching scheduler: serve a queue of R requests through
     ``slots`` persistent decode slots.
 
@@ -194,7 +205,7 @@ def serve_continuous(cfg, params, prompts: np.ndarray, n_tokens: int, *,
         if kv == "int8" else None
     admit = make_admit_fn(cfg, par, eos_id=eos_id, sample=sample)
     segment = make_segment_fn(cfg, par, seg_len, eos_id=eos_id,
-                              sample=sample)
+                              sample=sample, paged_attn=paged_attn)
     no_pages = jnp.zeros((mp,), jnp.int32)
 
     slot_req = [-1] * slots           # slot -> request id (-1 = free)
@@ -272,8 +283,13 @@ def serve_continuous(cfg, params, prompts: np.ndarray, n_tokens: int, *,
 def _sample_spec(args) -> str:
     # `is not None` so --temp 0 reaches the sampler's t > 0 validation
     # instead of silently degrading to greedy / t=1
+    if args.top_k is not None and args.top_p is not None:
+        raise SystemExit("--top-k and --top-p are mutually exclusive")
     if args.top_k is not None:
         return f"topk:{args.top_k}:" \
+               f"{args.temp if args.temp is not None else 1.0}"
+    if args.top_p is not None:
+        return f"topp:{args.top_p}:" \
                f"{args.temp if args.temp is not None else 1.0}"
     if args.temp is not None:
         return f"temp:{args.temp}"
@@ -357,6 +373,15 @@ def main(argv=None):
     ap.add_argument("--top-k", type=int, default=None,
                     help="top-k sampling inside the scan (combines with "
                          "--temp)")
+    ap.add_argument("--top-p", type=float, default=None,
+                    help="top-p (nucleus) sampling inside the scan: keep "
+                         "the smallest probability mass >= p (combines "
+                         "with --temp; exclusive with --top-k)")
+    ap.add_argument("--paged-attn", choices=("auto", "kernel", "jnp"),
+                    default="auto",
+                    help="--kv int8 read path: the fused Pallas paged-"
+                         "attention kernel or the jnp gather reference "
+                         "(auto = kernel for 'kernel' dscim modes)")
     ap.add_argument("--kv", choices=("float", "int8"), default="float",
                     help="KV cache layout: dense float (default) or the "
                          "block-paged int8 cache (core/kvcache.py)")
@@ -408,7 +433,8 @@ def main(argv=None):
                 seg_len=args.segment_len, max_new=budgets,
                 eos_id=args.eos if args.eos is not None else -1,
                 sample=sample, kv=args.kv, page_size=args.page_size,
-                par=par, prepare=not args.no_prepare)
+                par=par, prepare=not args.no_prepare,
+                paged_attn=args.paged_attn)
             print(f"[serve-cb] {tag}: {stats['tok_s']:.1f} tok/s over "
                   f"{stats['useful_tokens']} useful tokens, occupancy "
                   f"{stats['occupancy']:.2f} "
@@ -424,7 +450,7 @@ def main(argv=None):
     base_tokens, base_logits = serve_batch(
         cfg, params, prompts, args.tokens, par=par, scan=not args.host_loop,
         eos_id=args.eos, sample=sample, kv=args.kv,
-        page_size=args.page_size)
+        page_size=args.page_size, paged_attn=args.paged_attn)
     dt = time.time() - t0
     useful = _useful_tokens(base_tokens, args.eos)
     tps = useful / dt
@@ -440,7 +466,7 @@ def main(argv=None):
             cfg_ds, params, prompts, args.tokens, par=par,
             prepare=not args.no_prepare, scan=not args.host_loop,
             eos_id=args.eos, sample=sample, kv=args.kv,
-            page_size=args.page_size)
+            page_size=args.page_size, paged_attn=args.paged_attn)
         dt = time.time() - t0
         agree = _agreement(ds_tokens, base_tokens, args.eos)
         rmse = float(jnp.sqrt(jnp.mean(

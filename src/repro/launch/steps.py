@@ -14,9 +14,10 @@ ISSUE 4 additions — "only do live work" on the decode hot path:
     per-slot done-masking: finished rows stop advancing their cache
     position and their tokens are pinned to ``pad_id``.
   * in-scan sampling: ``sample`` selects greedy (default, bit-compatible
-    with PR 3) or ``'temp:<t>'`` / ``'topk:<k>[:<t>]'`` — the PRNG key
-    rides the scan/while carry, one split per step in both variants so
-    the drivers draw identically.
+    with PR 3) or ``'temp:<t>'`` / ``'topk:<k>[:<t>]'`` /
+    ``'topp:<p>[:<t>]'`` (nucleus, ISSUE 5) — the PRNG key rides the
+    scan/while carry, one split per step in both variants so the drivers
+    draw identically.
   * ``kv='int8'`` serves from the block-paged int8 KV cache
     (core/kvcache.py) instead of the dense fixed-capacity one.
   * ``make_admit_fn`` / ``make_segment_fn`` / ``init_serve_state`` are the
@@ -127,28 +128,47 @@ def make_decode_step(cfg: ArchConfig, par: ParallelCtx | None,
 def _make_sampler(sample: str):
     """Decode-rule factory: 'greedy' -> None (argmax, no RNG);
     'temp:<t>' -> temperature sampling; 'topk:<k>[:<t>]' -> top-k with
-    optional temperature.  The returned callable draws (key, logits) ->
-    (B,) int32 inside the jitted loop."""
+    optional temperature; 'topp:<p>[:<t>]' -> nucleus sampling (keep the
+    smallest prefix of the temperature-scaled distribution with cumulative
+    probability >= p — 'topp:1.0:<t>' is exactly 'temp:<t>').  The
+    returned callable draws (key, logits) -> (B,) int32 inside the jitted
+    loop."""
     if sample == "greedy":
         return None
     parts = sample.split(":")
+    k = p = None
     if parts[0] == "temp" and len(parts) == 2:
-        k, t = None, float(parts[1])
+        t = float(parts[1])
     elif parts[0] == "topk" and len(parts) in (2, 3):
         k = int(parts[1])
         t = float(parts[2]) if len(parts) == 3 else 1.0
+    elif parts[0] == "topp" and len(parts) in (2, 3):
+        p = float(parts[1])
+        t = float(parts[2]) if len(parts) == 3 else 1.0
+        if not 0.0 < p <= 1.0:
+            raise ValueError(f"top-p must be in (0, 1], got {p}")
     else:
         raise ValueError(f"bad sample spec {sample!r}; want 'greedy', "
-                         "'temp:<t>' or 'topk:<k>[:<t>]'")
+                         "'temp:<t>', 'topk:<k>[:<t>]' or 'topp:<p>[:<t>]'")
     if t <= 0:
         raise ValueError(f"temperature must be > 0, got {t}")
 
     def draw(key, logits):
-        lg = logits.astype(jnp.float32)
+        lg = logits.astype(jnp.float32) / t
         if k is not None:
             kth = jax.lax.top_k(lg, k)[0][..., -1:]
             lg = jnp.where(lg >= kth, lg, -jnp.inf)
-        return jax.random.categorical(key, lg / t, axis=-1).astype(jnp.int32)
+        if p is not None:
+            # nucleus: sort descending, keep tokens whose *exclusive*
+            # cumulative probability is < p (the top token always stays),
+            # i.e. the smallest set with inclusive cumsum >= p
+            srt = -jnp.sort(-lg, axis=-1)
+            probs = jax.nn.softmax(srt, axis=-1)
+            excl = jnp.cumsum(probs, axis=-1) - probs
+            nkeep = jnp.sum(excl < p, axis=-1, keepdims=True)
+            kth = jnp.take_along_axis(srt, nkeep - 1, axis=-1)
+            lg = jnp.where(lg >= kth, lg, -jnp.inf)
+        return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
 
     return draw
 
@@ -176,12 +196,26 @@ def _check_kv(cfg: ArchConfig, kv: str):
                          f"family model, not {cfg.family!r}")
 
 
+def _paged_kernel_flag(paged_attn: str):
+    """'auto' | 'kernel' | 'jnp' -> the static read-path bool the decode
+    batch carries (None = follow cfg.dscim / REPRO_PAGED_ATTN, see
+    layers/attention.py).  An explicit choice is part of every jitted
+    builder's lru_cache key, so A/B-ing the two paths can never hand back
+    a stale executable traced for the other one."""
+    try:
+        return {"auto": None, "kernel": True, "jnp": False}[paged_attn]
+    except KeyError:
+        raise ValueError(f"paged_attn must be 'auto', 'kernel' or 'jnp', "
+                         f"got {paged_attn!r}") from None
+
+
 @functools.lru_cache(maxsize=16)
 def make_generate_fn(cfg: ArchConfig, par: ParallelCtx | None = None,
                      n_tokens: int = 16, *, trace_logits: bool = False,
                      jit: bool = True, eos_id: int | None = None,
                      sample: str = "greedy", pad_id: int = 0,
-                     kv: str = "float", page_size: int = 8):
+                     kv: str = "float", page_size: int = 8,
+                     paged_attn: str = "auto"):
     """Device-resident generation: prefill + up to (n_tokens-1) decode
     steps inside a single jit.
 
@@ -203,13 +237,18 @@ def make_generate_fn(cfg: ArchConfig, par: ParallelCtx | None = None,
     the whole batch is finished.
 
     ``sample``: 'greedy' (default, bit-compatible with the PR 3 scan) or
-    'temp:<t>' / 'topk:<k>[:<t>]' — the RNG key (``batch["rng"]``, a
-    PRNGKey) rides the loop carry with one split per step.
+    'temp:<t>' / 'topk:<k>[:<t>]' / 'topp:<p>[:<t>]' — the RNG key
+    (``batch["rng"]``, a PRNGKey) rides the loop carry with one split per
+    step.
 
     ``kv``: 'float' serves from the dense fixed-capacity cache; 'int8'
     from the block-paged per-head-quantized KV cache (core/kvcache.py,
     ~4x fewer resident decode cache bytes, dequant fused into the paged
-    flash attention inner loop).
+    flash attention inner loop).  ``paged_attn``: the int8 read path —
+    'kernel' (fused Pallas paged attention) or 'jnp' (gather reference)
+    pin it and key this builder's cache; 'auto' (default) follows
+    cfg.dscim ('kernel' modes -> kernel) with the trace-time
+    ``REPRO_PAGED_ATTN`` env override.
 
     Under a mesh (``par`` given) the whole loop runs inside the one jit
     with the params' committed shardings — prepared DS-CIM weights route
@@ -220,6 +259,11 @@ def make_generate_fn(cfg: ArchConfig, par: ParallelCtx | None = None,
     model = get_model(cfg)
     nxt = _next_fn(_make_sampler(sample))
     _check_kv(cfg, kv)
+    pk = _paged_kernel_flag(paged_attn)
+    # static read-path pin, merged into the decode batches built inside
+    # the jitted loop (absent under 'auto' — plain python values in a
+    # dict literal constructed during tracing, never traced operands)
+    pin = {} if pk is None else {"paged_kernel": pk}
     if trace_logits and eos_id is not None:
         raise ValueError("trace_logits is a fixed-length-scan feature; the "
                          "EOS early-exit variant keeps logits off the path")
@@ -246,7 +290,8 @@ def make_generate_fn(cfg: ArchConfig, par: ParallelCtx | None = None,
             # fixed-length scan (the PR 3 path)
             def step(carry, _):
                 tok, cache, key = carry
-                logits, cache = model.decode(params, cfg, {"token": tok},
+                logits, cache = model.decode(params, cfg,
+                                             {"token": tok, **pin},
                                              cache, par)
                 tok, key = nxt(logits, key)
                 return (tok, cache, key), ((tok, logits) if trace_logits
@@ -279,7 +324,8 @@ def make_generate_fn(cfg: ArchConfig, par: ParallelCtx | None = None,
         def body(c):
             i, tok, done, toks, cache, key = c
             logits, cache = model.decode(
-                params, cfg, {"token": tok, "done": done}, cache, par)
+                params, cfg, {"token": tok, "done": done, **pin}, cache,
+                par)
             new, key = nxt(logits, key)
             new = jnp.where(done, pad_id, new)
             ndone = done | (new == eos_id)
@@ -371,7 +417,7 @@ def make_admit_fn(cfg: ArchConfig, par: ParallelCtx | None = None, *,
 def make_segment_fn(cfg: ArchConfig, par: ParallelCtx | None = None,
                     seg_len: int = 4, *, eos_id: int | None = None,
                     sample: str = "greedy", pad_id: int = 0,
-                    jit: bool = True):
+                    jit: bool = True, paged_attn: str = "auto"):
     """One jitted continuous-batching segment: a fixed-size ``lax.scan`` of
     ``seg_len`` done-masked decode steps over the whole slot batch.  Slots
     finish on EOS or their per-slot budget and stop advancing their cache
@@ -382,13 +428,16 @@ def make_segment_fn(cfg: ArchConfig, par: ParallelCtx | None = None,
     model = get_model(cfg)
     nxt = _next_fn(_make_sampler(sample))
     eos = -1 if eos_id is None else eos_id
+    pin = {} if _paged_kernel_flag(paged_attn) is None \
+        else {"paged_kernel": _paged_kernel_flag(paged_attn)}
 
     def segment(params, state):
         def step(carry, _):
             tok, done, n_out, max_new, cache, key = carry
             live = ~done
             logits, cache = model.decode(
-                params, cfg, {"token": tok, "done": done}, cache, par)
+                params, cfg, {"token": tok, "done": done, **pin}, cache,
+                par)
             new, key = nxt(logits, key)
             new = jnp.where(done, pad_id, new)
             n_out = n_out + jnp.where(done, 0, 1)

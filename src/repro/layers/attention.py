@@ -248,59 +248,21 @@ def decode_attention(params, x, cache_k, cache_v, pos, cfg,
     return out, new_k, new_v
 
 
-def decode_attention_paged(params, x, view, cfg, linear=None, salt=None,
-                           done=None):
-    """Single-token decode against one layer of the int8 paged KV cache
-    (core/kvcache.py): flash-style online softmax over logical pages with
-    the int8->f32 dequant fused into the inner loop — the full-precision
-    cache is never materialized.
-
-    ``view`` (one layer's slice of the paged cache dict):
-      k_pages/v_pages (P, ps, KV, HD) int8, k_scale/v_scale (P, KV) f32,
-      k_tail/v_tail (B, ps, KV, HD), page_table (B, MP) int32, pos (B,).
-    ``done`` (B,) bool: finished slots neither advance nor flush — a dead
-    slot must not scatter into pool pages its allocator may already have
-    re-granted to a live request.
-
-    Returns (out (B,1,D), (k_pages, v_pages, k_scale, v_scale, k_tail,
-    v_tail)) — pos advances at the model level, shared by all layers.
+def _paged_read_jnp(qf, view, k_tail, v_tail):
+    """The jnp reference read path: flash-style online softmax over logical
+    pages as a ``lax.scan``, gathering each physical int8 page and fusing
+    its per-kv-head dequant into the inner loop — the full-precision cache
+    is never materialized (though on TPU the gathered page and its f32
+    copy still stage through HBM, which is what the Pallas kernel path
+    removes).  qf (B, KV, n_rep, HD) f32; returns (B, KV, n_rep, HD) f32.
     """
-    from repro.core.kvcache import quantize_page
-
-    B = x.shape[0]
+    B, KV, n_rep, HD = qf.shape
     pos = view["pos"]
     page_table = view["page_table"]
     k_pages, v_pages = view["k_pages"], view["v_pages"]
     k_scale, v_scale = view["k_scale"], view["v_scale"]
-    n_pages, ps, KV, HD = k_pages.shape
+    ps = k_pages.shape[1]
     MP = page_table.shape[1]
-    positions = pos[:, None].astype(jnp.int32)
-    q, k, v = _qkv(params, x, cfg.n_heads, cfg.n_kv, cfg.head_dim,
-                   positions, cfg.rope_theta, cfg.qk_norm, linear, salt)
-
-    # 1. the new token lands in the slot's tail page at offset pos % ps
-    #    (bf16 — recent tokens attend at full precision until the page
-    #    fills and is quantized exactly once)
-    off = pos % ps
-
-    def _tail_write(tail, val):
-        def upd(t, vv, o):
-            return jax.lax.dynamic_update_slice_in_dim(t, vv[None], o, 0)
-        new = jax.vmap(upd)(tail, val[:, 0].astype(tail.dtype), off)
-        if done is None:
-            return new
-        return jnp.where(done[:, None, None, None], tail, new)
-
-    k_tail = _tail_write(view["k_tail"], k)
-    v_tail = _tail_write(view["v_tail"], v)
-
-    # 2. flash over logical pages: gather the physical int8 page, dequant
-    #    with its per-head scale inside the loop, overlay the tail page in
-    #    full precision, online-softmax accumulate
-    n_rep = q.shape[2] // KV
-    # _qkv lays heads out kv-major: head h = (g, r) with g = h // n_rep,
-    # matching jnp.repeat(k, n_rep, axis=2) on the dense path
-    qf = q[:, 0].astype(jnp.float32).reshape(B, KV, n_rep, HD)
     scale_qk = HD ** -0.5
     tail_page = pos // ps
 
@@ -330,7 +292,103 @@ def decode_attention_paged(params, x, view, cfg, linear=None, salt=None,
     acc0 = jnp.zeros((B, KV, n_rep, HD), jnp.float32)
     (m, l, acc), _ = jax.lax.scan(page_step, (m0, l0, acc0),
                                   jnp.arange(MP, dtype=jnp.int32))
-    out = acc / jnp.maximum(l, 1e-30)[..., None]          # (B,KV,R,HD)
+    return acc / jnp.maximum(l, 1e-30)[..., None]         # (B,KV,R,HD)
+
+
+def _paged_read_kernel(qf, view, k_tail, v_tail, par):
+    """The fused Pallas read path (kernels/paged_attention.py): one launch
+    walking the page table per (slot, kv-head-group) grid cell, int8 pages
+    streamed into VMEM by scalar-prefetch index maps, dequant + bf16 tail
+    overlay fused into the in-VMEM online softmax.  Under a mesh the call
+    wraps in shard_map (batch over DP, pool gathered — Pallas cannot be
+    GSPMD-partitioned).  Tile knobs come from the autotune cache under
+    ``REPRO_DSCIM_TUNE`` (checked-in winners for the serving shapes)."""
+    import os
+
+    from repro.kernels.paged_attention import (paged_attention_decode,
+                                               paged_attention_decode_sharded)
+    tune = os.environ.get("REPRO_DSCIM_TUNE", "") not in ("", "0")
+    args = (qf, view["k_pages"], view["v_pages"], view["k_scale"],
+            view["v_scale"], k_tail, v_tail, view["page_table"], view["pos"])
+    if par is not None:
+        return paged_attention_decode_sharded(
+            *args, mesh=par.mesh, dp_axes=par.dp_axes, tune=tune)
+    return paged_attention_decode(*args, tune=tune)
+
+
+def decode_attention_paged(params, x, view, cfg, linear=None, salt=None,
+                           done=None, par=None, use_kernel=None):
+    """Single-token decode against one layer of the int8 paged KV cache
+    (core/kvcache.py): flash-style online softmax over logical pages with
+    the int8->f32 dequant fused into the inner loop — the full-precision
+    cache is never materialized.
+
+    Two read paths compute the page walk: the fused Pallas kernel and the
+    jnp gather scan (the reference).  ``use_kernel`` selects explicitly
+    (the serve stack threads it from ``paged_attn='kernel'|'jnp'``, which
+    keys the jitted-builder caches); ``None`` falls back to
+    ``kernels.paged_attention.use_paged_kernel(cfg.dscim)`` — kernel for
+    the 'kernel' serving mode, jnp everywhere else, with the
+    ``REPRO_PAGED_ATTN`` env knob (read at trace time) forcing either.
+    Both walk pages in the same order with f32 statistics, so they agree
+    to float-accumulation tolerance (~1e-8 end-to-end logit RMSE in
+    interpret mode — tests/test_paged_kernel.py asserts <=1e-5).
+
+    ``view`` (one layer's slice of the paged cache dict):
+      k_pages/v_pages (P, ps, KV, HD) int8, k_scale/v_scale (P, KV) f32,
+      k_tail/v_tail (B, ps, KV, HD), page_table (B, MP) int32, pos (B,).
+    ``done`` (B,) bool: finished slots neither advance nor flush — a dead
+    slot must not scatter into pool pages its allocator may already have
+    re-granted to a live request.  (The read needs no done mask of its
+    own: a finished slot's ``pos`` is frozen, so the in-loop ragged mask
+    already covers it.)
+    ``par``: ParallelCtx when serving under a mesh — the kernel path must
+    run inside shard_map there; the jnp path partitions under GSPMD and
+    ignores it.
+
+    Returns (out (B,1,D), (k_pages, v_pages, k_scale, v_scale, k_tail,
+    v_tail)) — pos advances at the model level, shared by all layers.
+    """
+    from repro.core.kvcache import quantize_page
+    from repro.kernels.paged_attention import use_paged_kernel
+
+    B = x.shape[0]
+    pos = view["pos"]
+    page_table = view["page_table"]
+    k_pages, v_pages = view["k_pages"], view["v_pages"]
+    k_scale, v_scale = view["k_scale"], view["v_scale"]
+    n_pages, ps, KV, HD = k_pages.shape
+    positions = pos[:, None].astype(jnp.int32)
+    q, k, v = _qkv(params, x, cfg.n_heads, cfg.n_kv, cfg.head_dim,
+                   positions, cfg.rope_theta, cfg.qk_norm, linear, salt)
+
+    # 1. the new token lands in the slot's tail page at offset pos % ps
+    #    (bf16 — recent tokens attend at full precision until the page
+    #    fills and is quantized exactly once)
+    off = pos % ps
+
+    def _tail_write(tail, val):
+        def upd(t, vv, o):
+            return jax.lax.dynamic_update_slice_in_dim(t, vv[None], o, 0)
+        new = jax.vmap(upd)(tail, val[:, 0].astype(tail.dtype), off)
+        if done is None:
+            return new
+        return jnp.where(done[:, None, None, None], tail, new)
+
+    k_tail = _tail_write(view["k_tail"], k)
+    v_tail = _tail_write(view["v_tail"], v)
+
+    # 2. the page walk: online softmax with in-loop dequant + tail overlay
+    n_rep = q.shape[2] // KV
+    # _qkv lays heads out kv-major: head h = (g, r) with g = h // n_rep,
+    # matching jnp.repeat(k, n_rep, axis=2) on the dense path
+    qf = q[:, 0].astype(jnp.float32).reshape(B, KV, n_rep, HD)
+    if use_kernel is None:
+        use_kernel = use_paged_kernel(getattr(cfg, "dscim", "off"))
+    if use_kernel:
+        out = _paged_read_kernel(qf, view, k_tail, v_tail, par)
+    else:
+        out = _paged_read_jnp(qf, view, k_tail, v_tail)
     out = out.reshape(B, 1, -1).astype(x.dtype)
 
     # 3. flush: a tail page that just filled is quantized (fresh per-head
@@ -340,6 +398,7 @@ def decode_attention_paged(params, x, view, cfg, linear=None, salt=None,
     full = (pos + 1) % ps == 0
     if done is not None:
         full = full & ~done
+    tail_page = pos // ps
     phys_t = jnp.take_along_axis(page_table, tail_page[:, None], 1)[:, 0]
     idx = jnp.where(full, phys_t, n_pages)
     qk_, sk_ = quantize_page(k_tail)

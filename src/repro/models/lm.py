@@ -394,12 +394,18 @@ def _decode_paged(params, cfg: ArchConfig, batch, cache,
                   par: ParallelCtx | None = None):
     """One-token decode against the int8 block-paged KV cache: per-layer
     page pools ride the layer scan as xs (like the dense k/v planes); the
-    page table and per-slot positions are layer-shared carry state."""
+    page table and per-slot positions are layer-shared carry state.
+
+    ``batch["paged_kernel"]`` (a static Python bool, set by the serving
+    loop builders from their ``paged_attn`` option) pins the read path —
+    Pallas kernel vs jnp gather; absent, the path follows cfg.dscim (see
+    layers/attention.py ``decode_attention_paged``)."""
     dt = jnp.dtype(cfg.compute_dtype)
     x = _decode_embed(params, cfg, batch, dt)
     pos = cache["pos"]
     page_table = cache["page_table"]
     done = batch.get("done")
+    use_kernel = batch.get("paged_kernel")
 
     def body(x, xs):
         lp, kp, vp, ks, vs, kt, vt, li = xs
@@ -410,7 +416,8 @@ def _decode_paged(params, cfg: ArchConfig, batch, cache,
                 "pos": pos}
         h, planes = decode_attention_paged(
             lp["attn"], _norm(cfg, x, lp["ln1"]), view, cfg,
-            linear=_attn_linear_for(cfg.dscim, par), salt=salt, done=done)
+            linear=_attn_linear_for(cfg.dscim, par), salt=salt, done=done,
+            par=par, use_kernel=use_kernel)
         return _decode_ff(cfg, par, lp, x, h, salt), planes
 
     x, (kp, vp, ks, vs, kt, vt) = jax.lax.scan(

@@ -211,9 +211,38 @@ def test_sampling_in_scan():
     _assert_prefix_parity(d, d_ee, eos)
 
 
+def test_topp_sampling_in_scan():
+    """ISSUE 5: nucleus sampling inside the scan — drawn from the same
+    carried PRNG key as temp/top-k, so 'topp:1.0:<t>' (nothing truncated)
+    reproduces 'temp:<t>' draw for draw; a vanishing p keeps only the top
+    token (== greedy); deterministic per seed and identical in the EOS
+    while_loop variant (one key split per step in both drivers)."""
+    cfg, params, prompts = _setup()
+    n = 6
+    t_temp, _ = serve_batch(cfg, params, prompts, n, sample="temp:0.8",
+                            rng_seed=3)
+    t_p1, _ = serve_batch(cfg, params, prompts, n, sample="topp:1.0:0.8",
+                          rng_seed=3)
+    np.testing.assert_array_equal(t_p1, t_temp)   # p=1.0 == pure temp
+    tg, _ = serve_batch(cfg, params, prompts, n)
+    t_tiny, _ = serve_batch(cfg, params, prompts, n, sample="topp:1e-9:0.7",
+                            rng_seed=3)
+    np.testing.assert_array_equal(t_tiny, tg)     # nucleus of 1 == greedy
+    a, _ = serve_batch(cfg, params, prompts, n, sample="topp:0.9:0.8",
+                       rng_seed=3)
+    b, _ = serve_batch(cfg, params, prompts, n, sample="topp:0.9:0.8",
+                       rng_seed=3)
+    np.testing.assert_array_equal(a, b)           # deterministic per seed
+    eos = int(a[0, 1])
+    a_ee, _ = serve_batch(cfg, params, prompts, n, sample="topp:0.9:0.8",
+                          rng_seed=3, eos_id=eos)
+    _assert_prefix_parity(a, a_ee, eos)
+
+
 def test_bad_sample_spec_rejected():
     cfg, params, prompts = _setup()
-    for spec in ("nucleus:0.9", "temp:0", "topk:4:0:1"):
+    for spec in ("nucleus:0.9", "temp:0", "topk:4:0:1", "topp:0",
+                 "topp:1.5", "topp:0.9:0"):
         with pytest.raises(ValueError):
             serve_batch(cfg, params, prompts, 4, sample=spec)
 

@@ -152,6 +152,82 @@ def test_continuous_eos_completion():
             assert len(o) == n                # or runs out its budget
 
 
+def test_page_allocator_exhaustion_backpressure_reuse():
+    """ISSUE 5 edge cases: exhaustion refuses without leaking, repeated
+    refusals are stable (backpressure can poll), and an admit after a
+    recycle hands out exactly the freed pages — ids cross slots freely."""
+    a = PageAllocator(6)
+    g1, g2 = a.alloc(2), a.alloc(4)
+    assert a.free_pages == 0
+    for _ in range(3):                       # polling while full is safe
+        assert a.alloc(1) is None
+    assert a.free_pages == 0
+    a.free(g2)
+    g3 = a.alloc(4)                          # admit-after-recycle
+    assert set(g3) == set(g2)                # reuses exactly the freed ids
+    a.free(g1)
+    a.free(g3)
+    assert a.free_pages == 6
+    assert set(a.alloc(6)) == set(range(6))  # nothing leaked or duplicated
+    assert a.alloc(1) is None
+
+
+@pytest.mark.parametrize("path", ["jnp", "kernel"])
+def test_done_slot_flush_never_writes_recycled_page(path, monkeypatch):
+    """A done slot at a would-flush position (pos+1 page boundary) must not
+    scatter its stale tail into a pool page — the allocator may already
+    have granted that physical page to a newly admitted request.  Checked
+    on both read paths (the flush is shared jnp code, but the regression
+    would corrupt whichever path serves next)."""
+    import jax.numpy as jnp
+
+    from repro.layers.attention import decode_attention_paged, init_attention
+
+    monkeypatch.setenv("REPRO_PAGED_ATTN", path)
+    cfg = get_arch("qwen3-0.6b").reduced()
+    B, ps, MP = 2, 4, 2
+    KV, HD = cfg.n_kv, cfg.head_dim
+    rng = np.random.default_rng(0)
+    P = B * MP
+    view = {
+        "k_pages": jnp.asarray(rng.integers(-127, 128, (P, ps, KV, HD)),
+                               jnp.int8),
+        "v_pages": jnp.asarray(rng.integers(-127, 128, (P, ps, KV, HD)),
+                               jnp.int8),
+        "k_scale": jnp.ones((P, KV), jnp.float32),
+        "v_scale": jnp.ones((P, KV), jnp.float32),
+        "k_tail": jnp.asarray(rng.normal(0, 1, (B, ps, KV, HD)),
+                              jnp.bfloat16),
+        "v_tail": jnp.asarray(rng.normal(0, 1, (B, ps, KV, HD)),
+                              jnp.bfloat16),
+        # slot 0 (done) still *references* page 1; the scheduler has
+        # recycled it to slot 1, which maps it as its own second page
+        "page_table": jnp.asarray([[0, 1], [2, 1]], jnp.int32),
+        "pos": jnp.asarray([2 * ps - 1, ps + 1], jnp.int32),
+    }
+    params = init_attention(jax.random.PRNGKey(0), cfg.d_model, cfg.n_heads,
+                            KV, HD, cfg.qk_norm)
+    x = jnp.asarray(rng.normal(0, 1, (B, 1, cfg.d_model)), jnp.float32)
+    done = jnp.asarray([True, False])
+    _, planes = decode_attention_paged(params, x, view, cfg, done=done,
+                                       par=None)
+    k_pages_new = planes[0]
+    # slot 0 sits at pos 2*ps-1: live, it would flush its tail into
+    # physical page 1 this step — done, it must not touch it
+    np.testing.assert_array_equal(np.asarray(k_pages_new[1]),
+                                  np.asarray(view["k_pages"][1]))
+    # the live slot's state is untouched by the dead slot's masking: its
+    # pages did not flush either (pos ps+1 is mid-page)
+    np.testing.assert_array_equal(np.asarray(k_pages_new),
+                                  np.asarray(view["k_pages"]))
+    # control: the same state with slot 0 live *does* flush page 1
+    _, planes_live = decode_attention_paged(params, x, view, cfg,
+                                            done=jnp.asarray([False, False]),
+                                            par=None)
+    assert (np.asarray(planes_live[0][1])
+            != np.asarray(view["k_pages"][1])).any()
+
+
 def test_continuous_small_page_pool_backpressure():
     """An undersized page pool delays admission instead of corrupting
     state: with pages for only ~2 concurrent sequences, 4 requests still

@@ -1,0 +1,95 @@
+"""CI bench-regression smoke: paged-attention kernel vs jnp gather
+(ISSUE 5 satellite).
+
+Runs the serve-bench paged-KV smoke serving configuration twice — once
+with the fused Pallas paged-attention read path
+(kernels/paged_attention.py), once with the jnp gather reference — and
+asserts the matched-prefix logit RMSE between the two paths stays below
+the checked-in threshold (tools/ci_thresholds.json), plus full token
+agreement.  Kernel drift (a masking bug, a softmax-order change, a tile
+regression) is caught here, in CI, instead of surfacing later as a
+mysteriously-degraded BENCH row.
+
+The comparison metric is launch/serve.py ``logit_drift_rmse`` — the same
+teacher-matched-prefix RMSE serve_bench and the acceptance tests use, so
+the threshold means the same thing everywhere.  Both paths run the same
+f32 page walk in the same order, so the healthy RMSE is float-epsilon
+noise (~1e-8 — XLA's einsum layout vs the kernel's dot_general round
+differently); the 1e-5 threshold is the acceptance-criterion bound, two
+decades above it.
+
+The two paths are selected via ``serve_batch(paged_attn=...)`` — the
+read-path pin is part of the jitted builder's cache key, so each run
+traces its own executable.
+
+Usage:  PYTHONPATH=src python -m tools.bench_regression [--smoke]
+(--smoke shortens the trace; CI passes it.)  Exit 0 on pass, 1 on drift.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+THRESHOLDS = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "ci_thresholds.json")
+
+
+def _serve_both_paths(smoke: bool):
+    """(tokens, trace) for the kernel and gather read paths on the
+    serve-bench paged-KV smoke shape (float model — the read path is the
+    only thing under test)."""
+    import jax
+    import numpy as np
+
+    from repro.configs import get_arch
+    from repro.launch.serve import serve_batch
+    from repro.models import get_model
+
+    cfg = get_arch("qwen3-0.6b").reduced()
+    model = get_model(cfg)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    B, prompt_len = 4, 16
+    n_tokens = 16 if smoke else 48
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, (B, prompt_len), dtype=np.int32)
+
+    return {path: serve_batch(cfg, params, prompts, n_tokens,
+                              trace_logits=True, prepare=False,
+                              kv="int8", page_size=4, paged_attn=path)
+            for path in ("kernel", "jnp")}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short trace (the CI leg)")
+    args = ap.parse_args(argv)
+
+    import numpy as np
+
+    from repro.launch.serve import _agreement, logit_drift_rmse
+
+    with open(THRESHOLDS) as f:
+        th = json.load(f)
+    out = _serve_both_paths(args.smoke)
+    tk, lk = out["kernel"]
+    tj, lj = out["jnp"]
+    rmse = logit_drift_rmse(tj, tk, lj, lk)
+    agree = _agreement(np.asarray(tk), np.asarray(tj), None)
+    bound = th["paged_kernel_vs_gather_logit_rmse"]
+    min_agree = th["paged_kernel_vs_gather_token_agreement"]
+    print(f"paged kernel vs jnp gather: matched-prefix logit RMSE "
+          f"{rmse:.3e} (threshold {bound:.0e}), token agreement "
+          f"{agree:.4f} (threshold {min_agree})")
+    ok = rmse <= bound and agree >= min_agree
+    if not ok:
+        print("BENCH REGRESSION: paged-attention kernel drifted from the "
+              "jnp gather reference", file=sys.stderr)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,137 @@
+"""CI artifact gate: schema-validate the checked-in benchmark trajectory
+and autotune cache (ISSUE 5 satellite).
+
+Every PR appends to ``BENCH_kernels.json`` (benchmarks/run.py) and may
+regenerate ``src/repro/kernels/autotune_cache.json``
+(benchmarks/autotune_serving.py).  Both are load-bearing: serving reads
+the autotune cache at cold start, and the bench trajectory is the perf
+baseline future PRs diff against — a malformed append (truncated JSON,
+a row missing its ``us`` field, a cache value with the wrong arity) would
+poison them silently.  This gate fails the build instead.
+
+Checks (no third-party deps — stdlib json only):
+
+* BENCH_kernels.json: top-level ``{"runs": [...]}``; every run carries a
+  well-formed git rev (short/long hex or the documented 'unknown'
+  fallback), an ISO-ish timestamp, and a non-empty ``rows`` list whose
+  rows each have a non-empty ``name`` (str), a finite positive ``us``
+  (number) and a ``derived`` (str).
+* autotune_cache.json: a flat ``{key: [ints]}`` dict; keys must parse as
+  a known kernel kind (``fused/`` / ``mvm/`` / ``paged_attn/``) ending in
+  a cpu|tpu backend segment, and values must be positive-int tuples of
+  that kind's arity (fused (bm, bn, bk) = 3, mvm (bm, bn, bk, bl) = 4,
+  paged_attn (gh, qp) = 2).
+
+Usage:  python tools/check_artifacts.py [--bench PATH] [--cache PATH]
+Exit 0 on pass; exit 1 with one line per violation on failure.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_DEFAULT = os.path.join(REPO, "BENCH_kernels.json")
+CACHE_DEFAULT = os.path.join(REPO, "src", "repro", "kernels",
+                             "autotune_cache.json")
+
+_REV_RE = re.compile(r"^([0-9a-f]{7,40}|unknown)$")
+_TS_RE = re.compile(r"^\d{4}-\d{2}-\d{2}T\d{2}:\d{2}:\d{2}$")
+_ARITY = {"fused": 3, "mvm": 4, "paged_attn": 2}
+
+
+def _load(path: str, errs: list) -> object | None:
+    if not os.path.exists(path):
+        errs.append(f"{path}: missing")
+        return None
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except ValueError as e:
+        errs.append(f"{path}: not valid JSON ({e})")
+        return None
+
+
+def check_bench(path: str) -> list:
+    errs: list = []
+    data = _load(path, errs)
+    if data is None:
+        return errs
+    if not isinstance(data, dict) or not isinstance(data.get("runs"), list):
+        return [f"{path}: top level must be {{'runs': [...]}}"]
+    for i, run in enumerate(data["runs"]):
+        tag = f"{path}: runs[{i}]"
+        if not isinstance(run, dict):
+            errs.append(f"{tag}: not an object")
+            continue
+        rev = run.get("rev")
+        if not (isinstance(rev, str) and _REV_RE.match(rev)):
+            errs.append(f"{tag}: bad rev {rev!r}")
+        ts = run.get("ts")
+        if not (isinstance(ts, str) and _TS_RE.match(ts)):
+            errs.append(f"{tag}: bad ts {ts!r}")
+        rows = run.get("rows")
+        if not (isinstance(rows, list) and rows):
+            errs.append(f"{tag}: rows must be a non-empty list")
+            continue
+        for j, row in enumerate(rows):
+            rtag = f"{tag}.rows[{j}]"
+            if not isinstance(row, dict):
+                errs.append(f"{rtag}: not an object")
+                continue
+            name = row.get("name")
+            if not (isinstance(name, str) and name.strip()):
+                errs.append(f"{rtag}: bad name {name!r}")
+            us = row.get("us")
+            if not (isinstance(us, (int, float)) and not isinstance(us, bool)
+                    and us > 0 and us == us and us != float("inf")):
+                errs.append(f"{rtag} ({name!r}): bad us {us!r}")
+            if not isinstance(row.get("derived"), str):
+                errs.append(f"{rtag} ({name!r}): bad derived "
+                            f"{row.get('derived')!r}")
+    return errs
+
+
+def check_cache(path: str) -> list:
+    errs: list = []
+    data = _load(path, errs)
+    if data is None:
+        return errs
+    if not isinstance(data, dict):
+        return [f"{path}: top level must be an object"]
+    for key, val in data.items():
+        tag = f"{path}: {key!r}"
+        kind = str(key).split("/", 1)[0]
+        if kind not in _ARITY:
+            errs.append(f"{tag}: unknown kernel kind {kind!r} "
+                        f"(want one of {sorted(_ARITY)})")
+            continue
+        if str(key).rsplit("/", 1)[-1] not in ("cpu", "tpu"):
+            errs.append(f"{tag}: key must end in a cpu|tpu backend segment")
+        if not (isinstance(val, list)
+                and len(val) == _ARITY[kind]
+                and all(isinstance(v, int) and not isinstance(v, bool)
+                        and v > 0 for v in val)):
+            errs.append(f"{tag}: value {val!r} must be {_ARITY[kind]} "
+                        "positive ints")
+    return errs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default=BENCH_DEFAULT)
+    ap.add_argument("--cache", default=CACHE_DEFAULT)
+    args = ap.parse_args(argv)
+    errs = check_bench(args.bench) + check_cache(args.cache)
+    for e in errs:
+        print(f"ARTIFACT ERROR: {e}", file=sys.stderr)
+    if not errs:
+        print(f"artifacts OK: {args.bench}, {args.cache}")
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
