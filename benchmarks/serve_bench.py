@@ -293,6 +293,87 @@ def _paged_kv_rows(cfg_float, params, smoke):
     }]
 
 
+def _chaos_rows(cfg, params, smoke):
+    """ISSUE 6 rows: fault-free monitoring cost of the fault-tolerant
+    serving runtime.  The same continuous queue is served plain and with
+    the full monitoring stack armed (accuracy-watchdog probes every
+    ``probe_every`` segments, a restorable host snapshot every
+    ``snapshot_every`` segments) — no faults injected, so
+    ``overhead_vs_plain`` is pure monitoring cost, the ratio
+    tools/bench_regression.py bounds in CI.  Full mode adds a chaos-drill
+    counters row (runtime/serving.chaos_drill: injected segment failure +
+    page-pool bit flips + deadline expiry + stuck-at macro fault)."""
+    from repro.launch.serve import serve_continuous
+    from repro.runtime.serving import chaos_drill, watchdog_for_spec
+    n_tokens = 4 if smoke else 16
+    slots = 2 if smoke else 4
+    R = 4 if smoke else 8
+    seg_len = 4
+    probe_every, snapshot_every = 8, 8
+    prompt_len = 8
+    reps = 1 if smoke else 3
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, (R, prompt_len), dtype=np.int32)
+    budgets = np.linspace(2, n_tokens, R).round().astype(np.int32)
+    rng.shuffle(budgets)
+    useful = int(budgets.sum())
+    tag = f"{DSCIM}/R{R}s{slots}x{prompt_len}+{n_tokens}"
+    knobs = dict(slots=slots, seg_len=seg_len, max_new=budgets, eos_id=-1,
+                 kv="int8", page_size=4, prepare=False)
+
+    def plain():
+        return serve_continuous(cfg, params, prompts, n_tokens, **knobs)[0]
+
+    mon_stats = {}
+    # threshold calibration (ErrorModel moment sampling) is cold-start
+    # cost, not per-request serving overhead — build the watchdog once
+    monitor = watchdog_for_spec(DSCIM, probe_every=probe_every)
+
+    def monitored():
+        # per-run counters (the watchdog object is reused across reps)
+        monitor.n_probes = monitor.n_trips = 0
+        monitor.history = []
+        outs, st = serve_continuous(
+            cfg, params, prompts, n_tokens, **knobs, monitor=monitor,
+            snapshot_every=snapshot_every)
+        mon_stats.update(st)
+        return outs
+
+    us_plain = timed(plain, n=reps)
+    us_mon = timed(monitored, n=reps)
+    shared = (f"useful_tokens={useful};probe_every={probe_every};"
+              f"snapshot_every={snapshot_every}")
+    rows = [{
+        "name": f"serve/chaos_plain/{tag}",
+        "us": us_plain,
+        "derived": f"tok_s={useful / us_plain * 1e6:.1f};{shared}",
+    }, {
+        "name": f"serve/chaos_monitored/{tag}",
+        "us": us_mon,
+        "derived": (f"tok_s={useful / us_mon * 1e6:.1f};"
+                    f"overhead_vs_plain={us_mon / us_plain:.3f};"
+                    f"probes={mon_stats['probes']};"
+                    f"probe_trips={mon_stats['probe_trips']};"
+                    f"replays={mon_stats['replays']};{shared}"),
+    }]
+    if not smoke:
+        import time
+        t0 = time.perf_counter()
+        rep = chaos_drill(log=lambda *a, **k: None)
+        us_drill = (time.perf_counter() - t0) * 1e6
+        rows.append({
+            "name": "serve/chaos_drill/kernel:dscim2:64/R6s3x8+8",
+            "us": us_drill,
+            "derived": (f"requests={rep['requests']};"
+                        f"clean={len(rep['clean'])};"
+                        f"replays={rep['replays']};"
+                        f"probe_trips={rep['probe_trips']};"
+                        f"escalations={rep['escalations']};"
+                        f"deadline_cancelled={rep['deadline_cancelled']};"
+                        f"corrupted={len(rep['corrupted_requests'])}")})
+    return rows
+
+
 def run(smoke: bool = False):
     from repro.configs import get_arch
     from repro.launch.steps import prepare_serving_params
@@ -304,6 +385,7 @@ def run(smoke: bool = False):
         cfg, model.init_params(cfg, jax.random.PRNGKey(0)))
     rows = _dispatch_rows(cfg, params, smoke)
     rows += _queue_rows(cfg, params, smoke)
+    rows += _chaos_rows(cfg, params, smoke)
     cfg_float = dataclasses.replace(cfg, dscim="off")
     params_float = model.init_params(cfg_float, jax.random.PRNGKey(0))
     rows += _paged_kv_rows(cfg_float, params_float, smoke)

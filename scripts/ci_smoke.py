@@ -19,6 +19,13 @@ Smokes (all interpret-mode, reduced configs):
                      partitioning of the reference path)
   mesh-paged-kernel  the Pallas read path under --mesh model=4 (the
                      shard_map placement smoke; multidevice job only)
+  chaos              the fault-tolerant serving drill (--chaos,
+                     runtime/serving.chaos_drill): injected segment
+                     failure + page-pool bit flips + deadline expiry +
+                     stuck-at macro fault; asserts every request gets a
+                     definite status, unaffected requests stay bitwise
+                     equal to the fault-free run, and the watchdog
+                     escalates dscim2 -> dscim1
 
 Usage:  PYTHONPATH=src python -m scripts.ci_smoke continuous paged-kernel
         PYTHONPATH=src python -m scripts.ci_smoke --list
@@ -45,6 +52,7 @@ SMOKES: dict = {
     "mesh-paged-kernel": ["--tokens", "8", "--batch", "4",
                           "--dscim", _DSCIM, "--mesh", "model=4", *_PAGED,
                           "--paged-attn", "kernel"],
+    "chaos": ["--chaos"],
 }
 
 

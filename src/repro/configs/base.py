@@ -70,6 +70,12 @@ class ArchConfig:
     # DS-CIM serving path: "off" or "<mode>:<variant>:<L>[:<calib>]",
     # e.g. "lut:dscim1:256" (bit-exact) or "paper_inject:dscim2:64:opt".
     dscim: str = "off"
+    # Injected macro hardware fault for chaos testing (runtime/failover.py):
+    # "" (healthy) or "stuck:<stride>:<value>" — every <stride>-th output
+    # column of each DS-CIM linear reads back the constant <value>, the
+    # trace-level model of stuck-at failures in the CIM array's
+    # OR-accumulation columns.  Ignored when dscim is "off".
+    dscim_fault: str = ""
 
     # -- derived -------------------------------------------------------------
     @property

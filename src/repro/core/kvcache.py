@@ -59,7 +59,8 @@ import numpy as np
 __all__ = ["quantize_page", "dequantize_page", "paged_from_dense",
            "init_paged_cache", "admit_request", "admit_dense",
            "paged_cache_specs", "kv_cache_bytes", "dense_cache_bytes",
-           "PageAllocator", "n_pages_for"]
+           "PageAllocator", "n_pages_for", "extract_slot_pages",
+           "insert_slot_pages"]
 
 TAIL_DTYPE = jnp.bfloat16
 
@@ -252,11 +253,17 @@ def dense_cache_bytes(cfg, batch: int, capacity: int) -> int:
 class PageAllocator:
     """Host-side free-list over the physical page pool.  The continuous
     scheduler allocates a request's pages at admission and frees them at
-    completion — capacity is the pool size, not slots x max_len."""
+    completion — capacity is the pool size, not slots x max_len.
+
+    ``free`` validates its ids (ISSUE 6): a double-free or an out-of-range
+    id would silently put the same physical page on the free list twice,
+    and two live slots would later scatter into one page — corruption with
+    no error at the corrupting site.  Raise here instead."""
 
     def __init__(self, n_pages: int):
         self.n_pages = n_pages
         self._free = list(range(n_pages - 1, -1, -1))
+        self._live: set = set()
 
     @property
     def free_pages(self) -> int:
@@ -266,7 +273,85 @@ class PageAllocator:
         """n physical page ids, or None if the pool can't cover them."""
         if n > len(self._free):
             return None
-        return [self._free.pop() for _ in range(n)]
+        ids = [self._free.pop() for _ in range(n)]
+        self._live.update(ids)
+        return ids
 
     def free(self, ids) -> None:
-        self._free.extend(int(i) for i in ids)
+        ids = [int(i) for i in ids]
+        seen: set = set()
+        for i in ids:
+            if not 0 <= i < self.n_pages:
+                raise ValueError(
+                    f"PageAllocator.free: page id {i} out of range for a "
+                    f"{self.n_pages}-page pool")
+            if i in seen or i not in self._live:
+                raise ValueError(
+                    f"PageAllocator.free: double free of page {i} (not "
+                    "currently allocated) — two live slots would share a "
+                    "physical page")
+            seen.add(i)
+        # validate-then-commit: a raise above must leave the pool unchanged
+        self._live.difference_update(seen)
+        self._free.extend(ids)
+
+    # -- snapshot/restore (serve-state failover, runtime/serving.py) --------
+    def snapshot(self) -> dict:
+        """Plain-data copy of the allocator state (host snapshot leaf)."""
+        return {"n_pages": self.n_pages, "free": list(self._free),
+                "live": sorted(self._live)}
+
+    @classmethod
+    def from_snapshot(cls, snap: dict) -> "PageAllocator":
+        a = cls.__new__(cls)
+        a.n_pages = int(snap["n_pages"])
+        a._free = [int(i) for i in snap["free"]]
+        a._live = {int(i) for i in snap["live"]}
+        return a
+
+
+def extract_slot_pages(cache, slot: int, page_ids) -> dict:
+    """Bit-exact host-side snapshot of one slot's share of a paged cache:
+    its granted physical pages (int8 planes + f32 scales), its bf16 tail,
+    and its position.  The preemptive-eviction path (runtime/serving.py)
+    parks this blob host-side so the request's KV never has to be
+    re-prefilled — requantization or a different float reduction order
+    would break bitwise replay parity."""
+    ids = np.asarray([int(i) for i in page_ids], np.int32)
+    g = np.asarray
+    return {"page_count": len(ids),
+            "k_pages": g(cache["k_pages"][:, ids]),
+            "v_pages": g(cache["v_pages"][:, ids]),
+            "k_scale": g(cache["k_scale"][:, ids]),
+            "v_scale": g(cache["v_scale"][:, ids]),
+            "k_tail": g(cache["k_tail"][:, slot]),
+            "v_tail": g(cache["v_tail"][:, slot]),
+            "pos": int(cache["pos"][slot])}
+
+
+def insert_slot_pages(cache, slot: int, page_ids, blob: dict):
+    """Inverse of ``extract_slot_pages`` onto freshly granted physical
+    pages: scatter the parked planes/scales to ``page_ids``, restore the
+    slot's tail and position, and rewrite its page-table row (padded to MP
+    with the last id, exactly like admission).  The restored slot decodes
+    bit-identically to one that was never evicted — only the *physical*
+    page ids differ, and reads go through the page table."""
+    ids = [int(i) for i in page_ids]
+    if len(ids) != blob["page_count"]:
+        raise ValueError(f"insert_slot_pages: {blob['page_count']} pages "
+                         f"parked but {len(ids)} granted")
+    mp = cache["page_table"].shape[1]
+    row = jnp.asarray(ids + [ids[-1]] * (mp - len(ids)), jnp.int32)
+    idx = jnp.asarray(ids, jnp.int32)
+    return dict(
+        cache,
+        k_pages=cache["k_pages"].at[:, idx].set(jnp.asarray(blob["k_pages"])),
+        v_pages=cache["v_pages"].at[:, idx].set(jnp.asarray(blob["v_pages"])),
+        k_scale=cache["k_scale"].at[:, idx].set(jnp.asarray(blob["k_scale"])),
+        v_scale=cache["v_scale"].at[:, idx].set(jnp.asarray(blob["v_scale"])),
+        k_tail=cache["k_tail"].at[:, slot].set(
+            jnp.asarray(blob["k_tail"]).astype(cache["k_tail"].dtype)),
+        v_tail=cache["v_tail"].at[:, slot].set(
+            jnp.asarray(blob["v_tail"]).astype(cache["v_tail"].dtype)),
+        page_table=cache["page_table"].at[slot].set(row),
+        pos=cache["pos"].at[slot].set(blob["pos"]))

@@ -70,10 +70,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch
-from repro.launch.steps import (init_serve_state, make_admit_fn,
-                                make_decode_step, make_generate_fn,
-                                make_prefill_step, make_segment_fn,
-                                prepare_serving_params)
+from repro.launch.steps import (make_decode_step, make_generate_fn,
+                                make_prefill_step, prepare_serving_params)
 from repro.models import get_model
 
 __all__ = ["serve_batch", "serve_continuous", "logit_drift_rmse", "main"]
@@ -169,7 +167,10 @@ def serve_continuous(cfg, params, prompts: np.ndarray, n_tokens: int, *,
                      kv: str = "float", page_size: int = 8,
                      n_pages: int | None = None, par=None,
                      prepare: bool = True, rng_seed: int = 0,
-                     paged_attn: str = "auto"):
+                     paged_attn: str = "auto", deadline_steps=None,
+                     deadline_s=None, priority=None, monitor=None,
+                     injector=None, snapshot_every: int = 0,
+                     max_replays: int = 3, watchdog=None, log=print):
     """Continuous-batching scheduler: serve a queue of R requests through
     ``slots`` persistent decode slots.
 
@@ -187,97 +188,65 @@ def serve_continuous(cfg, params, prompts: np.ndarray, n_tokens: int, *,
     Returns (outputs, stats): ``outputs[r]`` is request r's np.int32 token
     array (<= its budget, ending at EOS if hit); ``stats`` records wall
     time, end-to-end tok/s over *useful* tokens (i.e. credited per live
-    slot-step — dead/padded slot-steps earn nothing), and batch occupancy
-    = live slot-steps / total slot-steps."""
-    from repro.core.kvcache import PageAllocator, n_pages_for
-    params = _place(cfg, params, par, prepare)
-    prompts = np.asarray(prompts)
-    R, S = prompts.shape
-    budgets = np.full((R,), n_tokens, np.int32) if max_new is None \
-        else np.asarray(max_new, np.int32)
-    assert budgets.shape == (R,) and (budgets >= 1).all()
-    capacity = S + int(budgets.max())
-    mp = n_pages_for(capacity, page_size)
-    state = init_serve_state(cfg, slots, capacity, kv=kv,
-                             page_size=page_size, n_pages=n_pages,
-                             seed=rng_seed)
-    alloc = PageAllocator(state["cache"]["k_pages"].shape[1]) \
-        if kv == "int8" else None
-    admit = make_admit_fn(cfg, par, eos_id=eos_id, sample=sample)
-    segment = make_segment_fn(cfg, par, seg_len, eos_id=eos_id,
-                              sample=sample, paged_attn=paged_attn)
-    no_pages = jnp.zeros((mp,), jnp.int32)
+    slot-step — dead/padded slot-steps earn nothing), batch occupancy
+    = live slot-steps / total slot-steps, and the fault-tolerance
+    counters below.
 
-    slot_req = [-1] * slots           # slot -> request id (-1 = free)
-    slot_pages: list = [None] * slots
-    out = [[] for _ in range(R)]
-    next_req = 0
-    live_steps = total_steps = segments = 0
-    t0 = time.perf_counter()
-    while True:
-        done_h = np.asarray(state["done"])
-        for b in range(slots):
-            if slot_req[b] >= 0 and done_h[b]:     # harvest finished slot
-                if alloc is not None:
-                    alloc.free(slot_pages[b])
-                    slot_pages[b] = None
-                slot_req[b] = -1
-            if slot_req[b] < 0 and next_req < R:   # admit a waiting request
-                pages = no_pages
-                if alloc is not None:
-                    # grant only what this request's budget can touch;
-                    # page_ids pads to mp with a self-owned id (never
-                    # read unmasked, never flushed — pos stays under the
-                    # budget's page count)
-                    need = n_pages_for(S + int(budgets[next_req]),
-                                       page_size)
-                    ids = alloc.alloc(need)
-                    if ids is None:                # pool exhausted: wait
-                        continue
-                    slot_pages[b] = ids
-                    pages = jnp.asarray(ids + [ids[-1]] * (mp - need),
-                                        jnp.int32)
-                r, next_req = next_req, next_req + 1
-                state, tok0 = admit(params, state, jnp.asarray(prompts[r:r + 1]),
-                                    jnp.int32(b), pages,
-                                    jnp.int32(budgets[r]))
-                out[r].append(int(tok0))
-                slot_req[b] = r
-                done_h = np.asarray(state["done"])
-        if all(r < 0 for r in slot_req):
-            if next_req >= R:
-                break
-            raise RuntimeError(
-                f"page pool too small for request {next_req} "
-                f"({n_pages_for(S + int(budgets[next_req]), page_size)} "
-                f"pages needed, {alloc.free_pages} free)")
-        if np.asarray(state["done"]).all():
-            continue  # all finished at admission: harvest, don't segment
-        state, toks, lives = segment(params, state)
-        toks, lives = np.asarray(toks), np.asarray(lives)
-        for s in range(seg_len):
-            for b in range(slots):
-                if lives[s, b] and slot_req[b] >= 0:
-                    out[slot_req[b]].append(int(toks[s, b]))
-        live_steps += int(lives.sum())
-        total_steps += seg_len * slots
-        segments += 1
-    dt = time.perf_counter() - t0
-    useful = sum(len(o) for o in out)
-    # tok_s is already the live-credited rate: every live slot-step emits
-    # exactly one useful token (plus one per admission), so dead/padded
-    # slot-steps earn nothing — occupancy shows how many there were
-    stats = {
-        "wall_s": dt,
-        "tok_s": useful / dt,
-        "occupancy": live_steps / max(total_steps, 1),
-        "live_slot_steps": live_steps,
-        "slot_steps": total_steps,
-        "segments": segments,
-        "requests": R,
-        "useful_tokens": useful,
-    }
-    return [np.asarray(o, np.int32) for o in out], stats
+    Failure semantics (ISSUE 6 — runtime/serving.py implements these; with
+    every knob at its default the scheduler behaves exactly like the
+    plain loop):
+
+    * **Statuses.**  ``stats['status'][r]`` is always definite:
+      ``'ok'`` — the request ran to EOS/budget (possibly after a failover
+      replay, an eviction round trip, or a ladder escalation), its tokens
+      are complete and trustworthy; ``'deadline'`` — cancelled at a
+      segment boundary when its budget expired, ``outputs[r]`` holds the
+      partial tokens generated so far (possibly none if it was still
+      queued).  A client should treat ``'deadline'`` as retryable with a
+      larger budget; tokens already returned remain valid prefixes.
+    * **Deadlines.**  ``deadline_steps`` (R,) — global decode-step budget,
+      deterministic and replay-safe (a negative entry = none);
+      ``deadline_s`` (R,) — wall-clock seconds from serve start (<= 0 =
+      none).  Both are checked between segments only: a request can
+      overrun by at most one segment (``seg_len`` steps).
+    * **Eviction / re-admission** (``priority`` (R,), int8 KV only).
+      When the page pool blocks an admission, live requests of *strictly*
+      lower priority are preempted (lowest priority first, youngest on
+      ties): their page contents are snapshotted host-side bit-exactly
+      and the request re-enters mid-stream once pages free — under greedy
+      decoding the round trip is bitwise-invisible in its output.
+      ``stats['evictions']/['readmissions']/['evicted_requests']`` count
+      the traffic.
+    * **Snapshot / restore** (``snapshot_every`` > 0).  Full serve-state
+      checkpoints (device pytree + scheduler bookkeeping + allocator)
+      every N boundaries; recoverable failures (injected device loss,
+      watchdog hangs) restore the latest snapshot and replay bit-
+      identically, up to ``max_replays`` times (``stats['replays']``).
+      ``injector`` (runtime/failover.py ``FailureInjector``) drives chaos
+      tests — device loss, transient page-pool bit flips
+      (``stats['corrupted_requests']``), persistent stuck-at macro faults.
+    * **Accuracy watchdog + degradation ladder** (``monitor``, an
+      ``AccuracyWatchdog``).  NaN/Inf logits are checked every segment;
+      every ``probe_every`` segments an exact-mode decode of the same
+      (token, cache) inputs bounds the serving path's logit drift.  A
+      tripped request is quarantined (poisoned tokens discarded) and
+      re-served from its prompt down the ladder dscim2 -> dscim1 ->
+      exact (``stats['quarantined']/['escalations']``), each level
+      verified against its exact twin before acceptance — so a returned
+      ``'ok'`` is trustworthy even under estimator faults.  ``watchdog``
+      (a runtime/watchdog.py ``Watchdog``) additionally wraps each
+      segment for straggler/hang detection (``stats['stragglers']``).
+    """
+    from repro.runtime.serving import serve_continuous_ft
+    params = _place(cfg, params, par, prepare)
+    return serve_continuous_ft(
+        cfg, params, prompts, n_tokens, slots=slots, seg_len=seg_len,
+        max_new=max_new, eos_id=eos_id, sample=sample, kv=kv,
+        page_size=page_size, n_pages=n_pages, par=par, rng_seed=rng_seed,
+        paged_attn=paged_attn, deadline_steps=deadline_steps,
+        deadline_s=deadline_s, priority=priority, monitor=monitor,
+        injector=injector, snapshot_every=snapshot_every,
+        max_replays=max_replays, watchdog=watchdog, log=log)
 
 
 def _sample_spec(args) -> str:
@@ -395,12 +364,23 @@ def main(argv=None):
                     help="queue length for --continuous")
     ap.add_argument("--segment-len", type=int, default=4,
                     help="decode steps per scan segment for --continuous")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the self-verifying chaos drill "
+                         "(runtime/serving.py chaos_drill): injected "
+                         "device loss + page-pool bit flips + a stuck-at "
+                         "macro fault + a deadline expiry over the fault-"
+                         "tolerant scheduler, asserting the failure-"
+                         "semantics contract end to end")
     ap.add_argument("--tune", action="store_true",
                     help="consult the fused-kernel tile autotuner (the "
                          "checked-in cache makes this a lookup for the "
                          "serving decode shapes)")
     args = ap.parse_args(argv)
 
+    if args.chaos:
+        from repro.runtime.serving import chaos_drill
+        chaos_drill(args.arch)
+        return 0
     if args.tune:
         import os
         os.environ["REPRO_DSCIM_TUNE"] = "1"

@@ -41,7 +41,8 @@ from repro.parallel import ParallelCtx
 
 __all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
            "make_eval_step", "make_generate_fn", "prepare_serving_params",
-           "make_admit_fn", "make_segment_fn", "init_serve_state"]
+           "make_admit_fn", "make_segment_fn", "init_serve_state",
+           "make_probe_fn"]
 
 
 def prepare_serving_params(cfg: ArchConfig, params,
@@ -168,7 +169,20 @@ def _make_sampler(sample: str):
             nkeep = jnp.sum(excl < p, axis=-1, keepdims=True)
             kth = jnp.take_along_axis(srt, nkeep - 1, axis=-1)
             lg = jnp.where(lg >= kth, lg, -jnp.inf)
-        return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
+        # degenerate-row guard (ISSUE 6): a row whose masked logits hold a
+        # NaN, a +inf, or no finite entry at all would make categorical's
+        # gumbel-argmax return an arbitrary (or NaN-poisoned) id; fall
+        # back to greedy argmax over the NaN-cleaned *original* logits for
+        # that row (argmax is scale-invariant, so temperature is moot).
+        # Healthy rows see bit-identical draws: their lg is untouched.
+        bad = jnp.isnan(lg).any(-1) | jnp.isposinf(lg).any(-1) \
+            | ~jnp.isfinite(lg).any(-1)
+        clean = jnp.where(jnp.isnan(logits), -jnp.inf,
+                          logits.astype(jnp.float32))
+        greedy = jnp.argmax(clean, axis=-1).astype(jnp.int32)
+        safe = jnp.where(bad[..., None], 0.0, lg)
+        drawn = jax.random.categorical(key, safe, axis=-1).astype(jnp.int32)
+        return jnp.where(bad, greedy, drawn)
 
     return draw
 
@@ -423,8 +437,18 @@ def make_segment_fn(cfg: ArchConfig, par: ParallelCtx | None = None,
     finish on EOS or their per-slot budget and stop advancing their cache
     position; the scheduler admits new requests into freed slots *between*
     segments.  Returns (state', toks (seg_len, B) int32, live (seg_len, B)
-    bool) where ``live[s, b]`` marks that slot b did useful work at step s
-    — the occupancy/live-tok-s accounting the serve report uses."""
+    bool, aux) where ``live[s, b]`` marks that slot b did useful work at
+    step s — the occupancy/live-tok-s accounting the serve report uses.
+
+    ``aux`` carries the fault-tolerant scheduler's monitoring planes
+    (runtime/serving.py), computed inside the same scan so the hot path
+    gains no extra dispatches: ``aux["bad"]`` (seg_len, B) bool flags
+    steps whose logits went NaN/Inf (corrupted KV pages, a poisoned
+    estimator), and ``aux["logits0"]`` (B, Vp) f32 is the *first* step's
+    logits — the serving side of the accuracy-watchdog probe, which
+    decodes the same (token, cache) inputs through the exact reference
+    (``make_probe_fn``) and compares.  Both stay as unfetched device
+    buffers unless the scheduler is monitoring."""
     model = get_model(cfg)
     nxt = _next_fn(_make_sampler(sample))
     eos = -1 if eos_id is None else eos_id
@@ -433,24 +457,61 @@ def make_segment_fn(cfg: ArchConfig, par: ParallelCtx | None = None,
 
     def segment(params, state):
         def step(carry, _):
-            tok, done, n_out, max_new, cache, key = carry
+            tok, done, n_out, max_new, cache, key, i, lg0 = carry
             live = ~done
             logits, cache = model.decode(
                 params, cfg, {"token": tok, "done": done, **pin}, cache,
                 par)
+            lg0 = jnp.where(i == 0, logits.astype(jnp.float32), lg0)
+            bad = live & ~jnp.isfinite(logits).all(axis=-1)
             new, key = nxt(logits, key)
             new = jnp.where(done, pad_id, new)
             n_out = n_out + jnp.where(done, 0, 1)
             ndone = done | (new == eos) | (n_out >= max_new)
-            return (new, ndone, n_out, max_new, cache, key), (new, live)
+            return (new, ndone, n_out, max_new, cache, key, i + 1, lg0), \
+                (new, live, bad)
 
+        B = state["tok"].shape[0]
+        lg0_init = jnp.zeros((B, cfg.vocab_padded), jnp.float32)
         carry = (state["tok"], state["done"], state["n_out"],
-                 state["max_new"], state["cache"], state["rng"])
-        (tok, done, n_out, max_new, cache, key), (toks, lives) = \
+                 state["max_new"], state["cache"], state["rng"],
+                 jnp.int32(0), lg0_init)
+        (tok, done, n_out, max_new, cache, key, _, lg0), \
+            (toks, lives, bads) = \
             jax.lax.scan(step, carry, None, length=seg_len)
         return dict(state, tok=tok, done=done, n_out=n_out, max_new=max_new,
-                    cache=cache, rng=key), toks, lives
+                    cache=cache, rng=key), toks, lives, \
+            {"bad": bads, "logits0": lg0}
 
     # donate the carried state so each segment reuses the KV cache
     # buffers in place (the host loop's donate_argnums=(2,) analogue)
     return jax.jit(segment, donate_argnums=(1,)) if jit else segment
+
+
+@functools.lru_cache(maxsize=16)
+def make_probe_fn(cfg_ref: ArchConfig, par: ParallelCtx | None = None, *,
+                  jit: bool = True):
+    """The exact-reference half of the accuracy-watchdog probe: one
+    non-donating decode of the serve state's (token, cache) inputs under
+    ``cfg_ref`` — normally the serving spec's exact-mode, fault-free
+    counterpart (``dscim='exact:...'``, ``dscim_fault=''``).
+
+    The exact backend accepts the same prepared ``QuantizedLinearWeight``
+    planes the stochastic serving path uses (core/dscim_layer.py), so the
+    probe needs no second parameter copy and isolates exactly the
+    estimator's contribution: same int8 weights, same int8 KV cache, same
+    token — only the MVM estimator differs.  The scheduler compares the
+    returned (B, Vp) logits against the segment's ``aux["logits0"]``
+    (same inputs, serving estimator) via ``AccuracyWatchdog.check``.
+
+    The decoded cache is discarded (functional decode — the pool pages
+    are never written), so probing does not perturb serving state."""
+    model = get_model(cfg_ref)
+
+    def probe(params, state):
+        logits, _ = model.decode(
+            params, cfg_ref, {"token": state["tok"], "done": state["done"]},
+            state["cache"], par)
+        return logits
+
+    return jax.jit(probe) if jit else probe

@@ -46,8 +46,24 @@ def _parse_dscim(dscim_spec: str):
     return mode, attn_suffix, parts[1], int(parts[2]), calib
 
 
+def _parse_fault(fault: str):
+    """'stuck:<stride>:<value>' -> (stride, value): every <stride>-th
+    output column of a DS-CIM linear reads back the constant <value> —
+    the trace-level model of stuck-at OR-accumulation columns in the CIM
+    array (runtime/failover.py injects it via cfg.dscim_fault)."""
+    parts = fault.split(":")
+    if len(parts) != 3 or parts[0] != "stuck":
+        raise ValueError(f"bad dscim_fault {fault!r}; want "
+                         "'stuck:<stride>:<value>'")
+    stride = int(parts[1])
+    if stride < 1:
+        raise ValueError(f"dscim_fault stride must be >= 1, got {stride}")
+    return stride, float(parts[2])
+
+
 @functools.lru_cache(maxsize=16)
-def _linear_for(dscim_spec: str, par: ParallelCtx | None = None):
+def _linear_for(dscim_spec: str, par: ParallelCtx | None = None,
+                fault: str = ""):
     """DS-CIM linear operator for cfg.dscim (see ``_parse_dscim``).
 
     Applied to the MLP matmuls, the MoE shared expert and the LM head (the
@@ -59,7 +75,14 @@ def _linear_for(dscim_spec: str, par: ParallelCtx | None = None):
     must run inside shard_map on a multi-device mesh; N shards over the TP
     axis, the request batch over the DP axes, and the windows-stay-local
     decomposition is bit-identical to single-device).  The pure-jnp
-    backends partition fine under GSPMD and ignore the mesh."""
+    backends partition fine under GSPMD and ignore the mesh.
+
+    ``fault`` (cfg.dscim_fault): 'stuck:<stride>:<value>' wraps the
+    operator so every <stride>-th output column is stuck at <value> —
+    the chaos-testing model of a hard macro fault.  The params are never
+    touched, so an exact-mode probe on the *same* prepared weights stays a
+    clean reference (runtime/serving.py's accuracy watchdog relies on
+    this)."""
     if dscim_spec == "off":
         return None
     from repro.core.dscim_layer import make_linear
@@ -67,17 +90,29 @@ def _linear_for(dscim_spec: str, par: ParallelCtx | None = None):
     mesh = par.mesh if (par is not None and mode == "kernel") else None
     axis = par.tp_axis if par is not None else "model"
     dp = par.dp_axes if (par is not None and mode == "kernel") else ()
-    return make_linear(variant, length, mode, calib, mesh=mesh,
-                       shard_axis=axis, batch_axes=dp)
+    op = make_linear(variant, length, mode, calib, mesh=mesh,
+                     shard_axis=axis, batch_axes=dp)
+    if not fault:
+        return op
+    stride, value = _parse_fault(fault)
+
+    def faulted(x, w, key=None, *, salt=None):
+        y = op(x, w, key, salt=salt)
+        stuck = (jnp.arange(y.shape[-1]) % stride) == 0
+        return jnp.where(stuck, jnp.asarray(value, y.dtype), y)
+
+    faulted.group_k = op.group_k   # prepare_serving_params reads this
+    return faulted
 
 
 @functools.lru_cache(maxsize=16)
-def _attn_linear_for(dscim_spec: str, par: ParallelCtx | None = None):
+def _attn_linear_for(dscim_spec: str, par: ParallelCtx | None = None,
+                     fault: str = ""):
     """The attention-projection DS-CIM operator — non-None only for
     '<mode>+attn' specs."""
     if dscim_spec == "off" or not _parse_dscim(dscim_spec)[1]:
         return None
-    return _linear_for(dscim_spec, par)
+    return _linear_for(dscim_spec, par, fault)
 
 
 def _norm(cfg: ArchConfig, x, params):
@@ -134,7 +169,9 @@ def _moe_apply(lp_moe, h, cfg: ArchConfig, par: ParallelCtx | None,
         out, aux = moe_local(lp_moe, h, top_k=cfg.moe_topk,
                              capacity_factor=cfg.moe_capacity,
                              has_shared=cfg.moe_shared > 0,
-                             linear=_linear_for(cfg.dscim), salt=salt)
+                             linear=_linear_for(
+                                 cfg.dscim, fault=cfg.dscim_fault),
+                             salt=salt)
         return out, aux
     # Shared expert under the mesh: a prepared (resident int8) shared expert
     # replicates across the mesh (launch/sharding.py keeps its planes
@@ -177,7 +214,7 @@ def _moe_apply(lp_moe, h, cfg: ArchConfig, par: ParallelCtx | None,
         out, aux = moe(lp2, x, top_k=cfg.moe_topk, ep_axis=tp,
                        capacity_factor=cfg.moe_capacity,
                        has_shared=cfg.moe_shared > 0,
-                       linear=_linear_for(cfg.dscim),
+                       linear=_linear_for(cfg.dscim, fault=cfg.dscim_fault),
                        salt=s[0] if s else None)
         return out, jax.lax.pmean(aux, (*dp, tp))
 
@@ -229,7 +266,7 @@ def _embed_in(params, cfg: ArchConfig, batch, dt):
 
 
 def _head(params, cfg: ArchConfig, x, par: ParallelCtx | None = None):
-    lin = _linear_for(cfg.dscim, par)
+    lin = _linear_for(cfg.dscim, par, cfg.dscim_fault)
     head = params.get("lm_head")
     if isinstance(head, QuantizedLinearWeight):
         # prepare-once serve path: the head (incl. the tied-embedding head,
@@ -255,7 +292,9 @@ def _block_apply(cfg: ArchConfig, par, lp, x, positions, collect_kv: bool,
     h_attn, kv = attention(lp["attn"], _norm(cfg, x, lp["ln1"]), cfg,
                            positions, cfg.q_chunk, cfg.kv_chunk,
                            return_kv=collect_kv,
-                           linear=_attn_linear_for(cfg.dscim, par), salt=salt)
+                           linear=_attn_linear_for(cfg.dscim, par,
+                                                   cfg.dscim_fault),
+                           salt=salt)
     x = x + h_attn
     x = _constraint(x, cfg, par)
     hn = _norm(cfg, x, lp["ln2"])
@@ -263,7 +302,9 @@ def _block_apply(cfg: ArchConfig, par, lp, x, positions, collect_kv: bool,
         h_ff, aux = _moe_apply(lp["moe"], hn, cfg, par, salt=salt)
     else:
         h_ff, aux = mlp(lp["mlp"], hn, cfg.mlp_kind,
-                        linear=_linear_for(cfg.dscim, par), salt=salt), 0.0
+                        linear=_linear_for(cfg.dscim, par,
+                                           cfg.dscim_fault),
+                        salt=salt), 0.0
     x = _constraint(x + h_ff, cfg, par)
     return x, aux, kv
 
@@ -352,7 +393,8 @@ def _decode_ff(cfg: ArchConfig, par, lp, x, h_attn, salt):
         h_ff, _ = _moe_apply(lp["moe"], hn, cfg, par, salt=salt)
     else:
         h_ff = mlp(lp["mlp"], hn, cfg.mlp_kind,
-                   linear=_linear_for(cfg.dscim, par), salt=salt)
+                   linear=_linear_for(cfg.dscim, par, cfg.dscim_fault),
+                   salt=salt)
     return x + h_ff
 
 
@@ -378,7 +420,8 @@ def decode(params, cfg: ArchConfig, batch, cache,
         salt = li * 8
         h, nk, nv = decode_attention(lp["attn"], _norm(cfg, x, lp["ln1"]),
                                      ck, cv, pos, cfg,
-                                     linear=_attn_linear_for(cfg.dscim, par),
+                                     linear=_attn_linear_for(
+                                         cfg.dscim, par, cfg.dscim_fault),
                                      salt=salt)
         return _decode_ff(cfg, par, lp, x, h, salt), (nk, nv)
 
@@ -416,7 +459,8 @@ def _decode_paged(params, cfg: ArchConfig, batch, cache,
                 "pos": pos}
         h, planes = decode_attention_paged(
             lp["attn"], _norm(cfg, x, lp["ln1"]), view, cfg,
-            linear=_attn_linear_for(cfg.dscim, par), salt=salt, done=done,
+            linear=_attn_linear_for(cfg.dscim, par, cfg.dscim_fault),
+            salt=salt, done=done,
             par=par, use_kernel=use_kernel)
         return _decode_ff(cfg, par, lp, x, h, salt), planes
 

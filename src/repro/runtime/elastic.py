@@ -3,22 +3,44 @@
 REPRO_MESH=pod2x16x16 | pod16x16 | dxM (debug) controls the mesh a restart
 builds; checkpoints reshard on restore, so scaling the pod count between
 runs (node failures, capacity changes) requires no checkpoint surgery.
+
+Pod specs degrade gracefully (ISSUE 6): a host without the pod's device
+count (every CI runner, every laptop) gets the largest supported debug
+mesh — all visible devices on the 'model' axis — with a warning, instead
+of an unconditional raise.  Explicit debug specs (``dxM``) still raise
+when oversubscribed: the operator asked for that exact shape.
 """
 from __future__ import annotations
 
+import math
 import os
+import warnings
+
+import jax
 
 from repro.launch.mesh import make_mesh
 
 __all__ = ["mesh_from_env"]
 
+_POD_SPECS = {
+    "pod16x16": ((16, 16), ("data", "model")),
+    "pod2x16x16": ((2, 16, 16), ("pod", "data", "model")),
+}
+
 
 def mesh_from_env(default: str = "pod16x16"):
     spec = os.environ.get("REPRO_MESH", default)
-    if spec == "pod16x16":
-        return make_mesh((16, 16), ("data", "model"))
-    if spec == "pod2x16x16":
-        return make_mesh((2, 16, 16), ("pod", "data", "model"))
+    if spec in _POD_SPECS:
+        dims, names = _POD_SPECS[spec]
+        have = jax.device_count()
+        if math.prod(dims) > have:
+            warnings.warn(
+                f"REPRO_MESH={spec} wants {math.prod(dims)} devices but "
+                f"only {have} are visible; degrading to the largest "
+                f"supported debug mesh d1x{have} (data=1, model={have})",
+                RuntimeWarning, stacklevel=2)
+            return make_mesh((1, have), ("data", "model"))
+        return make_mesh(dims, names)
     if spec.startswith("d"):                       # e.g. d2x2 for tests
         dims = tuple(int(x) for x in spec[1:].split("x"))
         names = ("data", "model")[:len(dims)]

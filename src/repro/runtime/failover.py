@@ -5,28 +5,110 @@
 latest checkpoint and continues, up to ``max_restarts``.  On a real cluster
 the restart re-enters through the launcher with a possibly *different* mesh
 (elastic) — covered by checkpointer reshard-on-restore.
+
+ISSUE 6 generalizes ``FailureInjector`` from train steps to serving
+faults, so the fault-tolerant continuous-batching scheduler
+(runtime/serving.py) can be chaos-tested with the same deterministic
+injector the training loop uses:
+
+* ``fail_at`` — segment-level simulated device loss: ``maybe_fail(seg)``
+  raises ``SimulatedHardwareFailure`` at a segment boundary; the serve
+  loop's ``run_with_failover`` wrapper restores the latest serve-state
+  snapshot and replays the segment bit-identically.
+* ``page_flips`` — int8 page-pool bit flips (SEU model): at a given
+  segment, XOR a bit pattern into one element of a slot's share of the
+  paged KV cache (int8 page planes, f32 dequant scales, or the bf16
+  tail).  Flips address *logical* state (slot + plane + element), so the
+  affected request is determinate even though physical page ids depend on
+  allocator history.  Each flip fires once (``fired``) — a transient
+  upset, not a persistent fault — so a post-flip snapshot replay does not
+  re-corrupt.
+* ``macro_fault_at`` — a persistent stuck-at fault in the DS-CIM macro:
+  from that segment on, ``serving_fault(seg)`` returns a non-empty
+  ``cfg.dscim_fault`` spec (models/lm.py ``_parse_fault``) and the serve
+  loop rebuilds its jitted segment/admit functions against the faulted
+  config.  Persistent by construction (re-applied deterministically on
+  replay), unlike the one-shot flips.
 """
 from __future__ import annotations
 
 import dataclasses
 
-__all__ = ["SimulatedHardwareFailure", "FailureInjector", "run_with_failover"]
+__all__ = ["SimulatedHardwareFailure", "FailureInjector",
+           "run_with_failover", "flip_bits"]
 
 
 class SimulatedHardwareFailure(RuntimeError):
     pass
 
 
+def flip_bits(arr, index: tuple, mask: int):
+    """XOR ``mask`` into one element of a jnp array — int dtypes directly,
+    float dtypes through a same-width bitcast (so a flip can hit a f32
+    scale's exponent, the classic NaN/Inf-producing upset)."""
+    import jax
+    import jax.numpy as jnp
+    if jnp.issubdtype(arr.dtype, jnp.floating):
+        bits = {2: jnp.uint16, 4: jnp.uint32}[arr.dtype.itemsize]
+        as_int = jax.lax.bitcast_convert_type(arr, bits)
+        as_int = as_int.at[index].set(as_int[index] ^ mask)
+        return jax.lax.bitcast_convert_type(as_int, arr.dtype)
+    return arr.at[index].set(arr[index] ^ jnp.asarray(mask, arr.dtype))
+
+
 @dataclasses.dataclass
 class FailureInjector:
-    """Deterministically fail at given step numbers (tests/examples)."""
+    """Deterministically inject faults at given step/segment numbers.
+
+    ``page_flips``: {segment: ((slot, plane, index, mask), ...)} — plane
+    is one of 'k_pages'/'v_pages' (index (layer, page_ord, tok, kv, hd)),
+    'k_scale'/'v_scale' (index (layer, page_ord, kv)), or
+    'k_tail'/'v_tail' (index (layer, tok, kv, hd)); ``page_ord`` is the
+    ordinal within the slot's granted pages, translated to a physical id
+    by ``corrupt_cache`` via the scheduler's slot_pages map.
+    ``macro_fault_at``/``macro_fault``: arm ``cfg.dscim_fault`` from that
+    segment on (persistent — see module docstring)."""
     fail_at: tuple = ()
+    page_flips: dict = dataclasses.field(default_factory=dict)
+    macro_fault_at: int | None = None
+    macro_fault: str = "stuck:5:24.0"
     fired: set = dataclasses.field(default_factory=set)
 
     def maybe_fail(self, step: int):
         if step in self.fail_at and step not in self.fired:
             self.fired.add(step)
             raise SimulatedHardwareFailure(f"injected fault at step {step}")
+
+    def serving_fault(self, segment: int) -> str:
+        """cfg.dscim_fault spec in force at this segment ('' = healthy)."""
+        if self.macro_fault_at is not None and segment >= self.macro_fault_at:
+            return self.macro_fault
+        return ""
+
+    def corrupt_cache(self, segment: int, cache, slot_pages):
+        """Apply this segment's due page-pool bit flips to a paged KV
+        cache (once each — transient upsets).  ``slot_pages``: the
+        scheduler's slot -> granted physical page ids map.  Returns
+        (cache', affected slot ids)."""
+        affected = []
+        for flip in self.page_flips.get(segment, ()):
+            key = ("flip", segment, flip)
+            if key in self.fired:
+                continue
+            slot, plane, index, mask = flip
+            if slot_pages[slot] is None:
+                continue            # slot idle this segment: nothing to hit
+            self.fired.add(key)
+            if plane.endswith("_tail"):
+                layer, *rest = index
+                full = (layer, slot, *rest)
+            else:
+                layer, page_ord, *rest = index
+                full = (layer, int(slot_pages[slot][page_ord]), *rest)
+            cache = dict(cache,
+                         **{plane: flip_bits(cache[plane], full, mask)})
+            affected.append(slot)
+        return cache, affected
 
 
 def run_with_failover(train_fn, *, restore_fn, max_restarts: int = 3,

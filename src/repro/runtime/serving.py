@@ -1,0 +1,674 @@
+"""Fault-tolerant continuous-batching scheduler (ISSUE 6 tentpole).
+
+``serve_continuous_ft`` is the robustness layer above the device-resident
+continuous-batching loop (launch/serve.py ``serve_continuous`` delegates
+here): the jitted segment/admit functions and all generation math are
+unchanged, and with every fault-tolerance knob at its default the
+scheduler is behaviourally identical to the PR-4 loop.  The additions are
+host-side policies that act only *between* scan segments:
+
+* **Deadlines** (``deadline_steps`` / ``deadline_s``): per-request decode-
+  step and wall-clock budgets, measured from serve start.  An expired
+  request — live, evicted, or still waiting — is cancelled at the next
+  segment boundary with status ``'deadline'`` and keeps its partial
+  tokens; its slot and physical pages recycle immediately.  Step budgets
+  are deterministic (replay-safe); wall budgets are for production SLOs.
+* **Preemptive eviction + re-admission** (``priority``, int8 KV only):
+  when the page pool cannot satisfy an admission, the scheduler may evict
+  a live slot of *strictly lower* priority (strictness prevents same-
+  priority livelock), lowest priority first, youngest (latest-admitted)
+  on ties.  Eviction snapshots the victim's physical page contents
+  bit-exactly (core/kvcache.py ``extract_slot_pages``) — not its tokens-
+  so-far for a re-prefill, which would break bitwise continuity through
+  float reduction-order changes — and queues it for re-admission
+  (``insert_slot_pages``) as pages free up.  A re-admitted request
+  resumes mid-stream bit-identically under greedy decoding.
+* **Snapshot / restore + failover** (``snapshot_every``, ``injector``):
+  every N segment boundaries the full serve state — device pytree
+  (``jax.device_get``), host scheduler bookkeeping, page-allocator free
+  list — is checkpointed host-side; ``run_with_failover``
+  (runtime/failover.py) wraps the segment loop so a recoverable failure
+  (injected device loss, watchdog ``StepHang``) restores the latest
+  snapshot and replays from that boundary bit-identically.  The
+  generalized ``FailureInjector`` drives chaos tests: segment-level
+  device loss, transient int8 page-pool bit flips, persistent stuck-at
+  DS-CIM macro faults (``cfg.dscim_fault``, models/lm.py).
+* **Accuracy watchdog + degradation ladder** (``monitor``): every
+  ``probe_every`` segments one extra *exact-mode* decode of the same
+  (token, cache) inputs (launch/steps.py ``make_probe_fn``) is compared
+  against the segment's first-step serving logits (``aux['logits0']`` —
+  computed inside the scan, so the serving side costs nothing extra).
+  A slot whose relative logit RMSE exceeds the ``AccuracyWatchdog``
+  threshold — derived from the macro's ``ErrorModel`` moments — or whose
+  logits go NaN/Inf (checked every segment via ``aux['bad']``) is
+  *quarantined*: its poisoned tokens are discarded, its slot and pages
+  recycle, and after the main loop the request is re-served from its
+  prompt down the degradation ladder ``dscim2 -> dscim1 -> exact``
+  (``next_ladder_spec``), each intermediate level verified against its
+  exact-mode twin before acceptance.  Estimator faults are caught
+  persistently; a transient finite KV corruption registers only when the
+  flip lands in a probed segment (NaN corruption is caught regardless) —
+  the documented probe-coverage limit.
+
+Determinism & replay notes: a restored replay re-runs the segment
+boundary loop on identical state, so greedy decoding replays bit-
+identically; sampled decoding replays identically too (the PRNG key
+rides the device carry inside the snapshot).  ``FailureInjector`` faults
+are keyed by segment and fire once, so a replay neither re-raises the
+device loss nor re-applies a transient flip.
+"""
+from __future__ import annotations
+
+import contextlib
+import copy
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kvcache import (PageAllocator, extract_slot_pages,
+                                insert_slot_pages, n_pages_for)
+from repro.launch.steps import (init_serve_state, make_admit_fn,
+                                make_probe_fn, make_segment_fn)
+from repro.runtime.failover import SimulatedHardwareFailure, run_with_failover
+from repro.runtime.watchdog import AccuracyWatchdog, StepHang
+
+__all__ = ["STATUS_OK", "STATUS_DEADLINE", "serve_continuous_ft",
+           "next_ladder_spec", "exact_probe_spec", "watchdog_for_spec",
+           "chaos_drill"]
+
+STATUS_OK = "ok"
+STATUS_DEADLINE = "deadline"
+
+
+# --------------------------------------------------------------------------
+# degradation-ladder spec algebra
+# --------------------------------------------------------------------------
+
+def exact_probe_spec(spec: str) -> str:
+    """The exact-mode twin of a dscim serving spec: same variant/L/calib
+    (so the same prepared int8 planes apply), same '+attn' scope, exact
+    adder-tree MVMs.  'off'/'float' map to themselves."""
+    if spec in ("off", "float"):
+        return spec
+    head, _, rest = spec.partition(":")
+    base, plus, attn = head.partition("+")
+    return "exact" + plus + attn + (":" + rest if rest else "")
+
+
+def next_ladder_spec(spec: str) -> str | None:
+    """One step down the degradation ladder, or None at the bottom.
+
+    dscim2 (L=64, ~3.8% macro RMSE) -> dscim1:256 (~0.7%) -> the exact-
+    mode twin; exact and float specs are terminal.  The mode (kernel/
+    lut/...) and '+attn' scope are preserved on the dscim2 -> dscim1 hop
+    so only the operating point changes."""
+    if spec in ("off", "float"):
+        return None
+    head, _, rest = spec.partition(":")
+    if head.partition("+")[0] == "exact":
+        return None
+    parts = rest.split(":") if rest else []
+    if parts and parts[0] == "dscim2":
+        parts[0] = "dscim1"
+        if len(parts) > 1:
+            parts[1] = "256"
+        return head + ":" + ":".join(parts)
+    return exact_probe_spec(spec)
+
+
+def watchdog_for_spec(spec: str, *, margin: float = 3.0,
+                      probe_every: int = 8) -> AccuracyWatchdog:
+    """AccuracyWatchdog with a drift threshold derived from the serving
+    spec's macro error moments (core/error_model.py
+    ``relative_moment_bound``).  ``margin`` scales the bound into logit
+    space, absorbing layer-to-logit error propagation; the default was
+    pinned empirically (tests/test_serving_ft.py): healthy dscim2:64
+    logit drift sits at ~2x the moment bound, a stuck-at macro fault at
+    ~16x, so margin 3 splits them with headroom both ways."""
+    from repro.core.dscim_layer import calibrated_config
+    from repro.core.error_model import ErrorModel
+    from repro.core.macro import DSCIMMacro
+    from repro.models.lm import _parse_dscim
+    _, _, variant, length, calib = _parse_dscim(spec)
+    em = ErrorModel.from_macro(DSCIMMacro(calibrated_config(variant, length,
+                                                            calib)))
+    return AccuracyWatchdog.from_error_model(em, margin=margin,
+                                             probe_every=probe_every)
+
+
+# --------------------------------------------------------------------------
+# the scheduler
+# --------------------------------------------------------------------------
+
+def _req_array(x, R, dtype, name):
+    if x is None:
+        return None
+    arr = np.asarray(x, dtype)
+    if arr.shape != (R,):
+        raise ValueError(f"{name} must be shape ({R},), got {arr.shape}")
+    return arr
+
+
+def serve_continuous_ft(cfg, params, prompts: np.ndarray, n_tokens: int, *,
+                        slots: int = 4, seg_len: int = 4, max_new=None,
+                        eos_id: int | None = None, sample: str = "greedy",
+                        kv: str = "float", page_size: int = 8,
+                        n_pages: int | None = None, par=None,
+                        rng_seed: int = 0, paged_attn: str = "auto",
+                        deadline_steps=None, deadline_s=None, priority=None,
+                        monitor: AccuracyWatchdog | None = None,
+                        injector=None, snapshot_every: int = 0,
+                        max_replays: int = 3, watchdog=None, log=print):
+    """Fault-tolerant continuous batching over already-placed ``params``
+    (launch/serve.py ``serve_continuous`` is the user-facing wrapper —
+    argument semantics and the failure-mode contract are documented
+    there).  Returns (outputs, stats)."""
+    prompts = np.asarray(prompts)
+    R, S = prompts.shape
+    budgets = np.full((R,), n_tokens, np.int32) if max_new is None \
+        else np.asarray(max_new, np.int32)
+    assert budgets.shape == (R,) and (budgets >= 1).all()
+    dl_steps = _req_array(deadline_steps, R, np.int64, "deadline_steps")
+    dl_secs = _req_array(deadline_s, R, np.float64, "deadline_s")
+    prio = _req_array(priority, R, np.int64, "priority")
+    if prio is not None and kv != "int8":
+        raise ValueError("priority eviction preempts physical pages; it "
+                         "needs the paged cache (kv='int8')")
+    if monitor is not None and monitor.rel_threshold is not None \
+            and cfg.dscim in ("off", "float"):
+        raise ValueError("drift probes compare against the serving spec's "
+                         "exact-mode twin; float serving has no estimator "
+                         "to probe (pass rel_threshold=None for NaN-only "
+                         "monitoring)")
+    eos = -1 if eos_id is None else eos_id
+    capacity = S + int(budgets.max())
+    mp = n_pages_for(capacity, page_size)
+    state0 = init_serve_state(cfg, slots, capacity, kv=kv,
+                              page_size=page_size, n_pages=n_pages,
+                              seed=rng_seed)
+    alloc0 = PageAllocator(state0["cache"]["k_pages"].shape[1]) \
+        if kv == "int8" else None
+    host0 = {
+        "slot_req": [-1] * slots, "slot_pages": [None] * slots,
+        "slot_seq": [0] * slots,
+        "out": [[] for _ in range(R)], "status": [None] * R,
+        "next_req": 0, "seq": 0,
+        "readmit": [], "evicted": {}, "quarantine": [], "corrupted": [],
+        "evicted_ever": [],
+        "counters": {"evictions": 0, "readmissions": 0,
+                     "deadline_cancelled": 0},
+        "segments": 0, "global_step": 0,
+        "live_steps": 0, "total_steps": 0,
+    }
+    probe = None
+    if monitor is not None and monitor.rel_threshold is not None:
+        cfg_probe = dataclasses.replace(
+            cfg, dscim=exact_probe_spec(cfg.dscim), dscim_fault="")
+        probe = make_probe_fn(cfg_probe, par)
+    no_pages = jnp.zeros((mp,), jnp.int32)
+    holder = None
+    t0 = time.perf_counter()
+
+    def _expired(host, r, now):
+        if host["status"][r] is not None:
+            return False
+        if dl_steps is not None and dl_steps[r] >= 0 \
+                and host["global_step"] >= int(dl_steps[r]):
+            return True
+        if dl_secs is not None and dl_secs[r] > 0 \
+                and now - t0 >= float(dl_secs[r]):
+            return True
+        return False
+
+    def _snap(state, host, alloc):
+        return {"state": jax.device_get(state),
+                "host": copy.deepcopy(host),
+                "alloc": alloc.snapshot() if alloc is not None else None}
+
+    def _loop(snap):
+        if snap is None:
+            state, host, alloc = state0, host0, alloc0
+        else:
+            state = jax.device_put(snap["state"])
+            host = copy.deepcopy(snap["host"])
+            alloc = None if snap["alloc"] is None \
+                else PageAllocator.from_snapshot(snap["alloc"])
+        if watchdog is not None:
+            watchdog.reset()
+
+        def free_slot(b):
+            if alloc is not None and host["slot_pages"][b] is not None:
+                alloc.free(host["slot_pages"][b])
+                host["slot_pages"][b] = None
+            host["slot_req"][b] = -1
+
+        def evict(b):
+            nonlocal state
+            r = host["slot_req"][b]
+            blob = extract_slot_pages(state["cache"], b,
+                                      host["slot_pages"][b])
+            blob["tok"] = int(np.asarray(state["tok"])[b])
+            blob["n_out"] = int(np.asarray(state["n_out"])[b])
+            blob["seq"] = host["slot_seq"][b]
+            host["evicted"][r] = blob
+            host["readmit"].append(r)
+            if r not in host["evicted_ever"]:
+                host["evicted_ever"].append(r)
+            free_slot(b)
+            state = dict(state, done=state["done"].at[b].set(True))
+            host["counters"]["evictions"] += 1
+
+        def grant(need, want_prio):
+            """Page grant for an admission, evicting strictly-lower-
+            priority live slots (lowest priority, youngest on ties) if
+            the pool is exhausted and priorities are in force."""
+            ids = alloc.alloc(need)
+            while ids is None and want_prio is not None:
+                cands = [(int(prio[host["slot_req"][b]]),
+                          -host["slot_seq"][b], b)
+                         for b in range(slots) if host["slot_req"][b] >= 0
+                         and int(prio[host["slot_req"][b]]) < want_prio]
+                if not cands:
+                    return None
+                evict(min(cands)[2])
+                ids = alloc.alloc(need)
+            return ids
+
+        def try_readmit(b):
+            nonlocal state
+            for r in list(host["readmit"]):
+                blob = host["evicted"][r]
+                need = blob["page_count"]
+                ids = grant(need,
+                            int(prio[r]) if prio is not None else None)
+                if ids is None:
+                    continue
+                host["readmit"].remove(r)
+                del host["evicted"][r]
+                host["slot_pages"][b] = ids
+                host["slot_req"][b] = r
+                host["slot_seq"][b] = blob["seq"]   # keeps its seniority
+                cache = insert_slot_pages(state["cache"], b, ids, blob)
+                state = dict(
+                    state, cache=cache,
+                    tok=state["tok"].at[b].set(blob["tok"]),
+                    done=state["done"].at[b].set(False),
+                    n_out=state["n_out"].at[b].set(blob["n_out"]),
+                    max_new=state["max_new"].at[b].set(int(budgets[r])))
+                host["counters"]["readmissions"] += 1
+                return True
+            return False
+
+        while True:
+            seg = host["segments"]
+            if holder is not None and snapshot_every > 0 \
+                    and seg % snapshot_every == 0:
+                holder["snap"] = _snap(state, host, alloc)
+            if injector is not None:
+                injector.maybe_fail(seg)
+            fault_now = injector.serving_fault(seg) \
+                if injector is not None else ""
+            cfg_now = cfg if not fault_now else \
+                dataclasses.replace(cfg, dscim_fault=fault_now)
+            admit = make_admit_fn(cfg_now, par, eos_id=eos_id, sample=sample)
+            segment = make_segment_fn(cfg_now, par, seg_len, eos_id=eos_id,
+                                      sample=sample, paged_attn=paged_attn)
+            now = time.perf_counter()
+            done_h = np.asarray(state["done"])
+            for b in range(slots):                 # harvest finished slots
+                r = host["slot_req"][b]
+                if r >= 0 and done_h[b]:
+                    free_slot(b)
+                    host["status"][r] = STATUS_OK
+            if dl_steps is not None or dl_secs is not None:
+                for r in range(R):                 # deadline sweep
+                    if not _expired(host, r, now):
+                        continue
+                    host["status"][r] = STATUS_DEADLINE
+                    host["counters"]["deadline_cancelled"] += 1
+                    if r in host["evicted"]:
+                        del host["evicted"][r]
+                        host["readmit"].remove(r)
+                    for b in range(slots):
+                        if host["slot_req"][b] == r:
+                            free_slot(b)
+                            state = dict(
+                                state,
+                                done=state["done"].at[b].set(True))
+            for b in range(slots):                 # admissions
+                if host["slot_req"][b] >= 0:
+                    continue
+                if host["readmit"] and try_readmit(b):
+                    continue
+                while host["next_req"] < R \
+                        and host["status"][host["next_req"]] is not None:
+                    host["next_req"] += 1          # skip cancelled waiters
+                if host["next_req"] >= R:
+                    continue
+                rq = host["next_req"]
+                pages = no_pages
+                if alloc is not None:
+                    need = n_pages_for(S + int(budgets[rq]), page_size)
+                    ids = grant(need,
+                                int(prio[rq]) if prio is not None else None)
+                    if ids is None:                # pool exhausted: wait
+                        continue
+                    host["slot_pages"][b] = ids
+                    # pad to mp with a self-owned id (never read unmasked,
+                    # never flushed — pos stays under the budget's pages)
+                    pages = jnp.asarray(ids + [ids[-1]] * (mp - need),
+                                        jnp.int32)
+                host["next_req"] = rq + 1
+                state, tok0 = admit(params, state,
+                                    jnp.asarray(prompts[rq:rq + 1]),
+                                    jnp.int32(b), pages,
+                                    jnp.int32(budgets[rq]))
+                host["out"][rq].append(int(tok0))
+                host["slot_req"][b] = rq
+                host["seq"] += 1
+                host["slot_seq"][b] = host["seq"]
+            if all(rr < 0 for rr in host["slot_req"]):
+                waiting = any(host["status"][r] is None
+                              for r in range(host["next_req"], R))
+                if not waiting and not host["readmit"]:
+                    return state, host, alloc
+                nr = host["next_req"]
+                what = (f"request {nr} "
+                        f"({n_pages_for(S + int(budgets[nr]), page_size)} "
+                        "pages needed") if nr < R else \
+                    (f"evicted request {host['readmit'][0]} "
+                     f"({host['evicted'][host['readmit'][0]]['page_count']}"
+                     " pages needed")
+                raise RuntimeError(f"page pool too small for {what}, "
+                                   f"{alloc.free_pages} free)")
+            if np.asarray(state["done"]).all():
+                continue  # all finished at admission: harvest, don't step
+            live0 = np.asarray([rr >= 0 for rr in host["slot_req"]]) \
+                & ~np.asarray(state["done"])
+            lg_exact = None
+            if probe is not None and monitor.should_probe(seg) \
+                    and live0.any():
+                # fetch before the donating segment call consumes state
+                lg_exact = np.asarray(probe(params, state))
+            if injector is not None and alloc is not None:
+                cache2, hit = injector.corrupt_cache(seg, state["cache"],
+                                                     host["slot_pages"])
+                if hit:
+                    state = dict(state, cache=cache2)
+                    for b in hit:
+                        rr = host["slot_req"][b]
+                        if rr >= 0 and rr not in host["corrupted"]:
+                            host["corrupted"].append(rr)
+            ctx = watchdog.step() if watchdog is not None \
+                else contextlib.nullcontext()
+            with ctx:
+                state, toks, lives, aux = segment(params, state)
+                toks_h = np.asarray(toks)
+                lives_h = np.asarray(lives)
+            for s in range(seg_len):               # harvest tokens
+                for b in range(slots):
+                    if lives_h[s, b] and host["slot_req"][b] >= 0:
+                        host["out"][host["slot_req"][b]].append(
+                            int(toks_h[s, b]))
+            if monitor is not None:
+                bad = np.asarray(aux["bad"]).any(axis=0)
+                trip = bad.copy()
+                rels = np.zeros((slots,))
+                reasons = np.where(bad, "nonfinite", "drift")
+                if lg_exact is not None:
+                    t2, rel = monitor.check(np.asarray(aux["logits0"]),
+                                            lg_exact, live0)
+                    rels = rel
+                    trip |= t2
+                for b in np.nonzero(trip)[0]:
+                    rr = host["slot_req"][int(b)]
+                    if rr < 0:
+                        continue
+                    free_slot(int(b))
+                    state = dict(state,
+                                 done=state["done"].at[int(b)].set(True))
+                    host["out"][rr] = []           # discard poisoned tokens
+                    host["quarantine"].append({
+                        "request": rr, "slot": int(b), "segment": seg,
+                        "reason": str(reasons[b]),
+                        "rel": float(rels[b])
+                        if np.isfinite(rels[b]) else float("inf")})
+            host["live_steps"] += int(lives_h.sum())
+            host["total_steps"] += seg_len * slots
+            host["segments"] += 1
+            host["global_step"] += seg_len
+
+    use_ft = injector is not None or snapshot_every > 0 \
+        or watchdog is not None
+    if use_ft:
+        holder = {"snap": _snap(state0, host0, alloc0)}
+        (state, host, alloc), replays = run_with_failover(
+            _loop, restore_fn=lambda: holder["snap"],
+            max_restarts=max_replays,
+            recoverable=(SimulatedHardwareFailure, StepHang), log=log)
+    else:
+        state, host, alloc = _loop(None)
+        replays = 0
+
+    esc_records: list = []
+    if any(host["status"][q["request"]] is None
+           for q in host["quarantine"]):
+        _escalate(cfg, params, prompts, n_tokens, host, budgets,
+                  eos_id=eos_id, sample=sample, kv=kv, page_size=page_size,
+                  par=par, rng_seed=rng_seed, monitor=monitor,
+                  records=esc_records, log=log)
+    for r in range(R):
+        if host["status"][r] is None:
+            host["status"][r] = STATUS_OK
+
+    dt = time.perf_counter() - t0
+    useful = sum(len(o) for o in host["out"])
+    stats = {
+        "wall_s": dt,
+        "tok_s": useful / dt,
+        "occupancy": host["live_steps"] / max(host["total_steps"], 1),
+        "live_slot_steps": host["live_steps"],
+        "slot_steps": host["total_steps"],
+        "segments": host["segments"],
+        "requests": R,
+        "useful_tokens": useful,
+        "status": list(host["status"]),
+        "replays": replays,
+        "evictions": host["counters"]["evictions"],
+        "readmissions": host["counters"]["readmissions"],
+        "evicted_requests": list(host["evicted_ever"]),
+        "deadline_cancelled": host["counters"]["deadline_cancelled"],
+        "quarantined": sorted({q["request"] for q in host["quarantine"]}),
+        "escalations": esc_records,
+        "corrupted_requests": sorted(host["corrupted"]),
+        "probes": monitor.n_probes if monitor is not None else 0,
+        "probe_trips": monitor.n_trips if monitor is not None else 0,
+        "stragglers": watchdog.n_stragglers if watchdog is not None else 0,
+    }
+    return [np.asarray(o, np.int32) for o in host["out"]], stats
+
+
+# --------------------------------------------------------------------------
+# post-loop degradation-ladder escalation
+# --------------------------------------------------------------------------
+
+def _escalate(cfg, params, prompts, n_tokens, host, budgets, *, eos_id,
+              sample, kv, page_size, par, rng_seed, monitor, records, log):
+    """Re-serve quarantined requests from their prompts down the ladder.
+
+    The serving batch is one jitted program — a single slot cannot run a
+    different estimator mid-batch — so escalation restarts the request
+    through ``serve_batch`` on a clean config (``dscim_fault=''``) at the
+    next ladder level, grouped by level to share compilations.  Each
+    intermediate level is verified against its exact-mode twin (prefill
+    logit relative RMSE under the monitor threshold); rows still drifting
+    escalate further.  The bottom (exact / float) level is accepted
+    unconditionally — it *is* the reference."""
+    from repro.launch.serve import serve_batch   # lazy: serve.py imports us
+    thresh = monitor.rel_threshold \
+        if monitor is not None and monitor.rel_threshold is not None \
+        else float("inf")
+    eos = -1 if eos_id is None else eos_id
+    level, reason = {}, {}
+    for q in host["quarantine"]:
+        r = q["request"]
+        if host["status"][r] is not None:      # e.g. deadline'd meanwhile
+            continue
+        level.setdefault(r, cfg.dscim)
+        reason.setdefault(r, q["reason"])
+    pending = sorted(level)
+    while pending:
+        groups: dict = {}
+        for r in pending:
+            nxt = next_ladder_spec(level[r]) or level[r]   # off: restart
+            groups.setdefault(nxt, []).append(r)
+        pending = []
+        for spec, rows in sorted(groups.items()):
+            cfg_lvl = dataclasses.replace(cfg, dscim=spec, dscim_fault="")
+            kw = dict(par=par, prepare=False, eos_id=eos,
+                      max_new=[int(budgets[r]) for r in rows],
+                      sample=sample, kv=kv, page_size=page_size,
+                      rng_seed=rng_seed)
+            toks, lgs = serve_batch(cfg_lvl, params, prompts[rows],
+                                    n_tokens, **kw)
+            terminal = next_ladder_spec(spec) is None
+            ok = np.ones(len(rows), bool)
+            rel = np.zeros(len(rows))
+            if not terminal and np.isfinite(thresh):
+                cfg_ex = dataclasses.replace(
+                    cfg, dscim=exact_probe_spec(spec), dscim_fault="")
+                _, lgs_ex = serve_batch(cfg_ex, params, prompts[rows],
+                                        n_tokens, **kw)
+                s = np.asarray(lgs[0], np.float64).reshape(len(rows), -1)
+                e = np.asarray(lgs_ex[0], np.float64).reshape(len(rows), -1)
+                rms = np.sqrt(np.mean(e * e, axis=-1))
+                rel = np.sqrt(np.mean((s - e) ** 2, axis=-1)) \
+                    / np.maximum(rms, 1e-9)
+                ok = np.isfinite(rel) & (rel <= thresh)
+            for i, r in enumerate(rows):
+                records.append({"request": r, "frm": level[r], "to": spec,
+                                "reason": reason[r],
+                                "accepted": bool(ok[i]),
+                                "rel": float(rel[i])})
+                log(f"[ladder] request {r}: {level[r]} -> {spec} "
+                    f"({reason[r]}; rel {rel[i]:.2e}; "
+                    f"{'accepted' if ok[i] else 'still drifting'})")
+                if ok[i]:
+                    row = np.asarray(toks[i])
+                    n_use = int(budgets[r])
+                    hits = np.nonzero(row[:n_use] == eos)[0]
+                    if len(hits):
+                        n_use = int(hits[0]) + 1
+                    host["out"][r] = row[:n_use].tolist()
+                    host["status"][r] = STATUS_OK
+                else:
+                    level[r] = spec
+                    reason[r] = "drift"
+                    pending.append(r)
+
+
+# --------------------------------------------------------------------------
+# chaos drill: the self-verifying end-to-end robustness exercise
+# --------------------------------------------------------------------------
+
+def chaos_drill(arch: str = "qwen3-0.6b", *, seed: int = 0,
+                log=print) -> dict:
+    """One scripted chaos scenario over the full fault-tolerant stack,
+    asserting the ISSUE 6 acceptance contract end to end:
+
+    under one injected segment-level device loss, page-pool bit flips
+    (an f32 dequant-scale upset and an int8 page upset — both *silent*
+    corruption on this RMSNorm'd model, tracked via
+    ``corrupted_requests``; the NaN detection path is pinned separately
+    in tests/test_serving_ft.py where Inf injection is deterministic), a
+    persistent stuck-at DS-CIM macro fault, and a deadline expiry,
+    ``serve_continuous`` completes every admitted request with a definite
+    status; requests untouched by any fault finish bitwise-identical to
+    the fault-free run; the accuracy watchdog trips on the injected
+    macro fault and visibly escalates dscim2 -> dscim1; and exactly one
+    failover replay absorbs the device loss.
+
+    Deterministic by construction: greedy decoding (the shared PRNG key
+    is never consumed), step-based deadlines, ``snapshot_every=1`` (the
+    restore point is never older than a fired transient flip), eos=-1.
+    Returns a report dict (the chaos bench rows and the CI smoke both
+    consume it)."""
+    from repro.configs import get_arch
+    from repro.launch.serve import serve_continuous
+    from repro.models import get_model
+    from repro.runtime.failover import FailureInjector
+
+    spec = "kernel:dscim2:64"
+    cfg = dataclasses.replace(get_arch(arch).reduced(), dscim=spec)
+    model = get_model(cfg)
+    params = model.init_params(cfg, jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    R, S, n = 6, 8, 8
+    prompts = rng.integers(0, cfg.vocab, (R, S), dtype=np.int32)
+    budgets = np.asarray([8, 6, 8, 5, 8, 6], np.int32)
+    # request 3 gets a 4-decode-step budget: admitted in the first wave,
+    # cancelled at the boundary after segment 2 with partial tokens
+    deadlines = np.asarray([-1, -1, -1, 4, -1, -1], np.int64)
+    knobs = dict(slots=3, seg_len=2, max_new=budgets, eos_id=-1,
+                 kv="int8", page_size=4)
+
+    outs_ref, _ = serve_continuous(cfg, params, prompts, n, **knobs)
+
+    monitor = watchdog_for_spec(spec, probe_every=1)
+    injector = FailureInjector(
+        fail_at=(3,),
+        page_flips={
+            # f32 dequant-scale exponent upset on slot 0 and an int8 page
+            # upset on slot 1: both corrupt outputs silently (RMSNorm
+            # squashes the magnitude excursion back into range) — the
+            # contract is that they land in corrupted_requests, never in
+            # a clean request's tokens
+            1: ((0, "v_scale", (0, 0, 0), 0x7f000000),),
+            2: ((1, "k_pages", (0, 0, 0, 0, 0), 0x41),),
+        },
+        macro_fault_at=6, macro_fault="stuck:3:40.0")
+    outs, stats = serve_continuous(
+        cfg, params, prompts, n, **knobs, deadline_steps=deadlines,
+        monitor=monitor, injector=injector, snapshot_every=1,
+        max_replays=2, log=log)
+
+    # -- the acceptance contract ------------------------------------------
+    assert all(s in (STATUS_OK, STATUS_DEADLINE) for s in stats["status"]), \
+        f"indefinite request status: {stats['status']}"
+    assert stats["replays"] == 1, \
+        f"expected the device loss to cost exactly 1 replay: {stats}"
+    assert stats["status"][3] == STATUS_DEADLINE \
+        and len(outs[3]) < int(budgets[3]), \
+        f"deadline request not cancelled: {stats['status']}"
+    escalated = {e["request"] for e in stats["escalations"]}
+    assert escalated, f"no ladder escalations recorded: {stats}"
+    hops = {(e["frm"], e["to"]) for e in stats["escalations"]}
+    assert any("dscim2" in frm and "dscim1" in to for frm, to in hops), \
+        f"dscim2 -> dscim1 escalation not visible: {sorted(hops)}"
+    assert stats["probe_trips"] >= 1, "watchdog never tripped"
+    affected = (set(stats["corrupted_requests"]) | escalated
+                | set(stats["quarantined"])
+                | {r for r in range(R)
+                   if stats["status"][r] == STATUS_DEADLINE})
+    clean = sorted(set(range(R)) - affected)
+    assert clean, "chaos scenario left no unaffected request to compare"
+    for r in clean:
+        np.testing.assert_array_equal(
+            outs[r], outs_ref[r],
+            err_msg=f"unaffected request {r} diverged from fault-free run")
+    report = {
+        "requests": R, "clean": clean, "affected": sorted(affected),
+        "replays": stats["replays"], "probes": stats["probes"],
+        "probe_trips": stats["probe_trips"],
+        "quarantined": stats["quarantined"],
+        "escalations": len(stats["escalations"]),
+        "deadline_cancelled": stats["deadline_cancelled"],
+        "corrupted_requests": stats["corrupted_requests"],
+        "statuses": stats["status"],
+        "rel_threshold": monitor.rel_threshold,
+    }
+    log(f"[chaos] drill ok: {report}")
+    return report

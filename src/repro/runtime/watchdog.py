@@ -1,4 +1,5 @@
-"""Step watchdog: straggler detection + hang escalation.
+"""Step watchdog: straggler detection + hang escalation — plus the
+serving accuracy watchdog (ISSUE 6).
 
 At 1000+-node scale the common failure modes are (a) a host silently
 slowing down (ECC retries, thermal throttle) and (b) a hung collective.
@@ -8,13 +9,25 @@ The watchdog tracks a robust step-time baseline (EMA + MAD) and
   (production: report host to the scheduler for drain/requeue);
 * raises on *hang*: no step completion within hang_timeout seconds, which
   the failover loop (runtime/failover.py) turns into checkpoint-restart.
+
+``AccuracyWatchdog`` is the estimator-health counterpart for DS-CIM
+serving: every ``probe_every`` segments the fault-tolerant scheduler
+(runtime/serving.py) compares the serving path's logits against an
+exact-mode decode of the same (token, cache) inputs and trips a slot
+whose relative RMSE exceeds a threshold derived from the macro's
+``ErrorModel`` moments (core/error_model.py) — or whose logits go
+NaN/Inf.  A tripped slot is quarantined and its request escalated down
+the degradation ladder (dscim2 -> dscim1 -> exact) instead of poisoning
+the rest of the batch.
 """
 from __future__ import annotations
 
 import threading
 import time
 
-__all__ = ["Watchdog", "StepHang"]
+import numpy as np
+
+__all__ = ["Watchdog", "StepHang", "AccuracyWatchdog"]
 
 
 class StepHang(RuntimeError):
@@ -78,6 +91,73 @@ class Watchdog:
         if self._hang.is_set():
             raise StepHang("no step completed within hang_timeout")
 
+    def reset(self):
+        """Clear a latched hang so a failover replay can re-arm cleanly
+        (without this, the StepHang that triggered the restart would
+        re-raise on the replay's first step)."""
+        self._hang.clear()
+        self._armed.clear()
+        self._last_done = time.monotonic()
+
     def close(self):
         self._stop.set()
         self._thread.join(timeout=1)
+
+
+class AccuracyWatchdog:
+    """Sampled exact-vs-stochastic logit drift monitor for DS-CIM serving.
+
+    ``rel_threshold``: maximum healthy per-slot relative logit RMSE
+    (``rmse(serving - exact) / rms(exact)``), normally derived from the
+    macro's measured error moments via ``from_error_model``; ``None``
+    disables drift probes (NaN/Inf detection stays on — the scheduler
+    checks per-step logit finiteness every segment regardless).
+    ``probe_every``: probe cadence in segments — the monitoring cost is
+    one extra exact-mode decode step per ``probe_every`` segments, which
+    ``tools/bench_regression.py`` bounds on the fault-free path."""
+
+    def __init__(self, rel_threshold: float | None, probe_every: int = 8):
+        if probe_every < 1:
+            raise ValueError(f"probe_every must be >= 1, got {probe_every}")
+        self.rel_threshold = rel_threshold
+        self.probe_every = probe_every
+        self.n_probes = 0
+        self.n_trips = 0
+        self.history: list = []    # (segment, per-slot rel rmse) tuples
+
+    @classmethod
+    def from_error_model(cls, em, margin: float = 3.0,
+                         probe_every: int = 8,
+                         rows: int = 128) -> "AccuracyWatchdog":
+        """Threshold = margin x the macro's moment-derived relative psum
+        error bound (core/error_model.py ``relative_moment_bound``).  The
+        margin absorbs layer-to-logit error propagation (partial
+        cancellation both ways); healthy logit drift sits ~2x the bound,
+        a hard macro fault ~an order of magnitude above it, so margin 3
+        separates cleanly (tests/test_serving_ft.py pins it
+        empirically)."""
+        return cls(margin * em.relative_moment_bound(rows),
+                   probe_every=probe_every)
+
+    def should_probe(self, segment: int) -> bool:
+        return self.rel_threshold is not None \
+            and segment % self.probe_every == 0
+
+    def check(self, serving_logits, exact_logits, live):
+        """Per-slot drift verdicts for one probe.
+
+        serving_logits/exact_logits: (B, V) arrays of the *same* (token,
+        cache) decode inputs; live: (B,) bool mask of slots with an active
+        request.  Returns (trip (B,) bool, rel (B,) float64) — a slot
+        trips when its relative RMSE exceeds the threshold or is not
+        finite (NaN/Inf logits)."""
+        s = np.asarray(serving_logits, np.float64)
+        e = np.asarray(exact_logits, np.float64)
+        live = np.asarray(live, bool)
+        rms = np.sqrt(np.mean(e * e, axis=-1))
+        rel = np.sqrt(np.mean((s - e) ** 2, axis=-1)) / np.maximum(rms, 1e-9)
+        trip = live & (~np.isfinite(rel) | (rel > self.rel_threshold))
+        self.n_probes += 1
+        self.n_trips += int(trip.sum())
+        self.history.append(rel)
+        return trip, rel

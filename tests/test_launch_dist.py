@@ -424,3 +424,38 @@ def test_elastic_mesh_from_env():
         print("OK")
     """)
     assert "OK" in r.stdout, r.stderr[-3000:]
+
+
+def test_elastic_pod_spec_degrades_on_small_host():
+    """REPRO_MESH=pod16x16 on an 8-device CI host must warn and fall back
+    to the largest supported debug mesh instead of raising (ISSUE 6)."""
+    r = _run("""
+        import os, warnings
+        os.environ["REPRO_MESH"] = "pod16x16"
+        from repro.runtime.elastic import mesh_from_env
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            m = mesh_from_env()
+        assert m.shape == {"data": 1, "model": 8}, m.shape
+        msgs = [str(x.message) for x in w
+                if issubclass(x.category, RuntimeWarning)]
+        assert any("pod16x16" in s and "degrading" in s for s in msgs), msgs
+
+        # the pod default (no env var) degrades the same way
+        del os.environ["REPRO_MESH"]
+        with warnings.catch_warnings(record=True) as w2:
+            warnings.simplefilter("always")
+            m2 = mesh_from_env()
+        assert m2.shape == {"data": 1, "model": 8}, m2.shape
+
+        # explicit debug specs still raise when oversubscribed
+        os.environ["REPRO_MESH"] = "d4x4"
+        try:
+            mesh_from_env()
+        except Exception:
+            pass
+        else:
+            raise AssertionError("d4x4 on 8 devices should raise")
+        print("OK")
+    """)
+    assert "OK" in r.stdout, r.stderr[-3000:]

@@ -1,0 +1,72 @@
+"""CI artifact-gate unit tests (ISSUE 6): the serve/chaos_* derived-field
+schema in tools/check_artifacts.py — a chaos row that loses its tok_s /
+overhead ratio / drill counters must fail the gate, not silently blind
+the bench-regression baseline."""
+import importlib.util
+import json
+import os
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _gate():
+    spec = importlib.util.spec_from_file_location(
+        "check_artifacts",
+        os.path.join(REPO, "tools", "check_artifacts.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _bench(tmp_path, rows):
+    p = tmp_path / "bench.json"
+    p.write_text(json.dumps({"runs": [{
+        "rev": "abcdef1", "ts": "2026-08-08T00:00:00", "rows": rows}]}))
+    return str(p)
+
+
+GOOD = [
+    {"name": "serve/chaos_plain/x/R4", "us": 10.0,
+     "derived": "tok_s=96.2;useful_tokens=12"},
+    {"name": "serve/chaos_monitored/x/R4", "us": 11.0,
+     "derived": "tok_s=94.0;overhead_vs_plain=1.023;probes=2"},
+    {"name": "serve/chaos_drill/x/R6", "us": 12.0,
+     "derived": ("requests=6;clean=1;replays=1;probe_trips=2;"
+                 "escalations=2;deadline_cancelled=1;corrupted=2")},
+    # non-chaos rows carry no typed contract
+    {"name": "serve/kv_float/x", "us": 13.0, "derived": "anything"},
+]
+
+
+def test_chaos_rows_pass(tmp_path):
+    assert _gate().check_bench(_bench(tmp_path, GOOD)) == []
+
+
+def test_chaos_plain_requires_tok_s(tmp_path):
+    rows = [dict(GOOD[0], derived="useful_tokens=12")]
+    errs = _gate().check_bench(_bench(tmp_path, rows))
+    assert len(errs) == 1 and "tok_s" in errs[0]
+
+
+def test_chaos_monitored_requires_overhead_ratio(tmp_path):
+    for bad in ("tok_s=94.0",                       # missing
+                "tok_s=94.0;overhead_vs_plain=nan",  # non-finite
+                "tok_s=94.0;overhead_vs_plain=-1"):  # non-positive
+        rows = [dict(GOOD[1], derived=bad)]
+        errs = _gate().check_bench(_bench(tmp_path, rows))
+        assert len(errs) == 1 and "overhead_vs_plain" in errs[0], (bad, errs)
+
+
+def test_chaos_drill_requires_counters(tmp_path):
+    rows = [dict(GOOD[2], derived="requests=6;replays=oops")]
+    errs = _gate().check_bench(_bench(tmp_path, rows))
+    missing = ("replays", "probe_trips", "escalations",
+               "deadline_cancelled")
+    assert len(errs) == len(missing), errs
+    for key in missing:
+        assert any(key in e for e in errs), (key, errs)
+
+
+def test_checked_in_trajectory_passes():
+    mod = _gate()
+    assert mod.check_bench(os.path.join(REPO, "BENCH_kernels.json")) == []

@@ -1,5 +1,6 @@
 """CI bench-regression smoke: paged-attention kernel vs jnp gather
-(ISSUE 5 satellite).
+(ISSUE 5 satellite), plus the fault-free monitoring-overhead bound of
+the fault-tolerant serving runtime (ISSUE 6).
 
 Runs the serve-bench paged-KV smoke serving configuration twice — once
 with the fused Pallas paged-attention read path
@@ -21,6 +22,17 @@ decades above it.
 The two paths are selected via ``serve_batch(paged_attn=...)`` — the
 read-path pin is part of the jitted builder's cache key, so each run
 traces its own executable.
+
+The ISSUE 6 leg serves the same continuous queue plain and with the
+accuracy watchdog + boundary snapshots armed (no faults injected) and
+bounds the wall-time ratio at ``chaos_monitor_overhead_ratio``.  The CI
+bound is deliberately looser than the <=5% the full-size BENCH row
+demonstrates (BENCH_kernels.json ``serve/chaos_monitored``): the CI
+shape is tiny (one probe, a couple of snapshots, ~100 ms of serving),
+so runner timing noise dominates the true monitoring cost — the gate
+exists to catch a monitoring path that suddenly costs a *multiple* of
+serving (an accidental per-segment device sync, a probe that stopped
+respecting its cadence), not to re-measure the 5%.
 
 Usage:  PYTHONPATH=src python -m tools.bench_regression [--smoke]
 (--smoke shortens the trace; CI passes it.)  Exit 0 on pass, 1 on drift.
@@ -62,6 +74,50 @@ def _serve_both_paths(smoke: bool):
             for path in ("kernel", "jnp")}
 
 
+def _chaos_monitor_overhead(smoke: bool) -> float:
+    """Fault-free wall-time ratio monitored/plain for serve_continuous on
+    a small continuous queue (ISSUE 6).  Median of 3 warmed runs per path
+    even in smoke — single-shot timings on a CI runner are too noisy to
+    gate on — and the queue does NOT shrink under --smoke: below ~8
+    decode segments the one probe + one snapshot are a fixed cost with
+    nothing to amortize over and the ratio measures shape, not the
+    monitoring path (measured: 1.35x at 3 segments vs ~1.0x at 8)."""
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from benchmarks.common import timed
+    from repro.configs import get_arch
+    from repro.launch.serve import serve_continuous
+    from repro.models import get_model
+    from repro.runtime.serving import watchdog_for_spec
+
+    spec = "kernel:dscim1:256"
+    cfg = dataclasses.replace(get_arch("qwen3-0.6b").reduced(), dscim=spec)
+    model = get_model(cfg)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    R, prompt_len = 4, 8
+    n_tokens = 8
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, (R, prompt_len), dtype=np.int32)
+    budgets = np.linspace(2, n_tokens, R).round().astype(np.int32)
+    knobs = dict(slots=2, seg_len=4, max_new=budgets, eos_id=-1,
+                 kv="int8", page_size=4)
+    monitor = watchdog_for_spec(spec, probe_every=8)
+
+    def plain():
+        return serve_continuous(cfg, params, prompts, n_tokens, **knobs)[0]
+
+    def monitored():
+        return serve_continuous(cfg, params, prompts, n_tokens, **knobs,
+                                monitor=monitor, snapshot_every=8)[0]
+
+    us_plain = timed(plain, n=3)
+    us_mon = timed(monitored, n=3)
+    return us_mon / us_plain
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -88,6 +144,15 @@ def main(argv=None) -> int:
     if not ok:
         print("BENCH REGRESSION: paged-attention kernel drifted from the "
               "jnp gather reference", file=sys.stderr)
+
+    ratio = _chaos_monitor_overhead(args.smoke)
+    ratio_bound = th["chaos_monitor_overhead_ratio"]
+    print(f"fault-tolerant serving monitoring overhead: "
+          f"{ratio:.3f}x plain (threshold {ratio_bound}x)")
+    if ratio > ratio_bound:
+        print("BENCH REGRESSION: fault-free monitoring overhead of the "
+              "serving runtime exceeded its bound", file=sys.stderr)
+        ok = False
     return 0 if ok else 1
 
 

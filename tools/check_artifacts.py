@@ -21,6 +21,14 @@ Checks (no third-party deps — stdlib json only):
   a cpu|tpu backend segment, and values must be positive-int tuples of
   that kind's arity (fused (bm, bn, bk) = 3, mvm (bm, bn, bk, bl) = 4,
   paged_attn (gh, qp) = 2).
+* serve/chaos_* rows (ISSUE 6): the fault-tolerance bench rows carry a
+  typed derived contract — chaos_plain/chaos_monitored need a finite
+  positive ``tok_s``; chaos_monitored additionally needs a positive
+  ``overhead_vs_plain`` ratio (the CI-bounded fault-free monitoring
+  cost); chaos_drill needs its scenario counters (``requests``,
+  ``replays``, ``probe_trips``, ``escalations``, ``deadline_cancelled``)
+  as non-negative ints.  A chaos row whose derived fields went missing
+  or non-numeric would silently blind the regression gate.
 
 Usage:  python tools/check_artifacts.py [--bench PATH] [--cache PATH]
 Exit 0 on pass; exit 1 with one line per violation on failure.
@@ -41,6 +49,52 @@ CACHE_DEFAULT = os.path.join(REPO, "src", "repro", "kernels",
 _REV_RE = re.compile(r"^([0-9a-f]{7,40}|unknown)$")
 _TS_RE = re.compile(r"^\d{4}-\d{2}-\d{2}T\d{2}:\d{2}:\d{2}$")
 _ARITY = {"fused": 3, "mvm": 4, "paged_attn": 2}
+
+
+def _derived_fields(derived: str) -> dict:
+    """Parse the ``k=v;k=v`` derived string (values stay strings)."""
+    out = {}
+    for part in derived.split(";"):
+        if "=" in part:
+            k, _, v = part.partition("=")
+            out[k] = v
+    return out
+
+
+def _pos_float(v) -> bool:
+    try:
+        x = float(v)
+    except (TypeError, ValueError):
+        return False
+    return x > 0 and x == x and x != float("inf")
+
+
+def _nonneg_int(v) -> bool:
+    try:
+        return int(v) >= 0 and float(v) == int(v)
+    except (TypeError, ValueError):
+        return False
+
+
+def _check_chaos_row(name: str, derived: str, rtag: str, errs: list):
+    """ISSUE 6: typed schema for serve/chaos_* derived fields."""
+    f = _derived_fields(derived)
+    kind = name.split("/", 2)[1]            # chaos_plain | _monitored | _drill
+    if kind in ("chaos_plain", "chaos_monitored"):
+        if not _pos_float(f.get("tok_s")):
+            errs.append(f"{rtag} ({name!r}): chaos row needs a finite "
+                        f"positive tok_s, got {f.get('tok_s')!r}")
+    if kind == "chaos_monitored":
+        if not _pos_float(f.get("overhead_vs_plain")):
+            errs.append(f"{rtag} ({name!r}): chaos_monitored needs a "
+                        f"positive overhead_vs_plain ratio, got "
+                        f"{f.get('overhead_vs_plain')!r}")
+    if kind == "chaos_drill":
+        for key in ("requests", "replays", "probe_trips", "escalations",
+                    "deadline_cancelled"):
+            if not _nonneg_int(f.get(key)):
+                errs.append(f"{rtag} ({name!r}): chaos_drill needs "
+                            f"non-negative int {key}, got {f.get(key)!r}")
 
 
 def _load(path: str, errs: list) -> object | None:
@@ -89,9 +143,11 @@ def check_bench(path: str) -> list:
             if not (isinstance(us, (int, float)) and not isinstance(us, bool)
                     and us > 0 and us == us and us != float("inf")):
                 errs.append(f"{rtag} ({name!r}): bad us {us!r}")
-            if not isinstance(row.get("derived"), str):
-                errs.append(f"{rtag} ({name!r}): bad derived "
-                            f"{row.get('derived')!r}")
+            derived = row.get("derived")
+            if not isinstance(derived, str):
+                errs.append(f"{rtag} ({name!r}): bad derived {derived!r}")
+            elif isinstance(name, str) and name.startswith("serve/chaos_"):
+                _check_chaos_row(name, derived, rtag, errs)
     return errs
 
 
