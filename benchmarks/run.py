@@ -47,8 +47,37 @@ def _git_rev() -> str:
         return "unknown"
 
 
+def _dedupe(data: dict, rows: list, rev: str) -> tuple[list, int]:
+    """Drop rows already recorded for this rev — re-running a bench section
+    before committing must update the rev's rows, not accumulate copies
+    (tools/check_artifacts.py rejects duplicate (name, rev) pairs).  The
+    newest append wins: matching rows are removed from earlier same-rev
+    runs (runs left empty are dropped), and the incoming list keeps only
+    the last row per name."""
+    seen: set = set()
+    fresh = []
+    for row in reversed(rows):
+        if row.get("name") not in seen:
+            seen.add(row.get("name"))
+            fresh.append(row)
+    fresh.reverse()
+    dropped = len(rows) - len(fresh)
+    kept_runs = []
+    for run in data.get("runs", []):
+        if run.get("rev") != rev:
+            kept_runs.append(run)
+            continue
+        kept = [r for r in run.get("rows", []) if r.get("name") not in seen]
+        dropped += len(run.get("rows", [])) - len(kept)
+        if kept:
+            kept_runs.append(dict(run, rows=kept))
+    data["runs"] = kept_runs
+    return fresh, dropped
+
+
 def append_trajectory(rows, path: str = TRAJECTORY) -> None:
-    """Append one benchmark run to the BENCH_kernels.json trajectory."""
+    """Append one benchmark run to the BENCH_kernels.json trajectory,
+    deduplicating by (row name, git rev) — newest run wins."""
     data = {"runs": []}
     if os.path.exists(path):
         try:
@@ -56,14 +85,18 @@ def append_trajectory(rows, path: str = TRAJECTORY) -> None:
                 data = json.load(f)
         except (OSError, ValueError):
             data = {"runs": []}
-    data.setdefault("runs", []).append({
-        "rev": _git_rev(),
+    rev = _git_rev()
+    data.setdefault("runs", [])
+    rows, dropped = _dedupe(data, rows, rev)
+    data["runs"].append({
+        "rev": rev,
         "ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
         "rows": rows,
     })
     with open(path, "w") as f:
         json.dump(data, f, indent=1)
-    print(f"# trajectory: {len(rows)} rows -> {path}", flush=True)
+    extra = f" ({dropped} stale same-rev rows dropped)" if dropped else ""
+    print(f"# trajectory: {len(rows)} rows -> {path}{extra}", flush=True)
 
 
 def main() -> None:

@@ -23,6 +23,12 @@ ISSUE 5 adds the paged *read-path* A/B on the same int8 cache: the fused
 Pallas paged-attention kernel (kernels/paged_attention.py) vs the jnp
 gather reference, with the per-step HBM bytes the kernel stops staging
 (gathered int8 pages + their f32 dequant copies) in the derived fields.
+
+ISSUE 7 adds the self-speculative decoding rows (``serve/spec_*``):
+dscim2-draft -> dscim1-verify vs the plain driver at asserted-bitwise
+greedy outputs, with accepted-tokens-per-verify / acceptance-rate in the
+derived fields, and page-pool occupancy read from ``PageAllocator.stats()``
+on the continuous rows.
 """
 from __future__ import annotations
 
@@ -293,6 +299,88 @@ def _paged_kv_rows(cfg_float, params, smoke):
     }]
 
 
+def _spec_rows(cfg, params, smoke):
+    """ISSUE 7 rows: self-speculative decoding A/B — the dscim2 drafter in
+    front of the dscim1 verifier vs the plain (target-only) driver, greedy,
+    on the int8 paged cache.  Greedy spec is *bitwise* the plain output
+    (asserted here — a spec row whose tokens drifted would be a lie), so
+    ``tok_s`` differences are pure draft-amortization: the useful-tok/s
+    win is ``accepted_tok_per_verify`` cheap-draft tokens per full-model
+    verify forward.  ``acceptance_rate`` = accepted draft tokens / k
+    drafted is the CI-bounded metric (tools/bench_regression.py).
+
+    The continuous leg reports the scheduler's occupancy on the same
+    verifier-position basis the deadline ledger uses, plus the
+    PageAllocator's own ``stats()`` counters (live/high-water/refusals) —
+    the occupancy fields read the allocator, not a recomputation."""
+    from repro.launch.serve import serve_batch, serve_continuous
+    B, prompt_len = 4, 8
+    n_tokens = 8 if smoke else 32
+    k = 4
+    reps = 1 if smoke else 3
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, (B, prompt_len), dtype=np.int32)
+    kw = dict(prepare=False, kv="int8", page_size=4)
+    tag = f"{DSCIM}/B{B}x{prompt_len}+{n_tokens}"
+
+    us_plain = timed(lambda: serve_batch(cfg, params, prompts, n_tokens,
+                                         **kw)[0], n=reps)
+    us_spec = timed(lambda: serve_batch(cfg, params, prompts, n_tokens,
+                                        spec=f"dscim2:{k}", **kw)[0],
+                    n=reps)
+    t_ref, _ = serve_batch(cfg, params, prompts, n_tokens, **kw)
+    t_spec, _, ss = serve_batch(cfg, params, prompts, n_tokens,
+                                spec=f"dscim2:{k}", spec_stats=True, **kw)
+    np.testing.assert_array_equal(
+        np.asarray(t_spec), np.asarray(t_ref),
+        err_msg="greedy self-spec output drifted from the plain driver")
+    windows = int(ss["windows"].sum())
+    accepted = int((ss["emitted"] - 1).sum())  # tok0 isn't a drafted token
+    tpv = accepted / max(windows, 1)
+    useful = B * n_tokens
+    shared = (f"k={k};windows={windows};"
+              f"accepted_tok_per_verify={tpv:.3f};"
+              f"acceptance_rate={tpv / k:.3f};tokens_match=1")
+    rows = [{
+        "name": f"serve/spec_off/{tag}",
+        "us": us_plain,
+        "derived": f"tok_s={useful / us_plain * 1e6:.1f};{shared}",
+    }, {
+        "name": f"serve/spec_dscim2_k{k}/{tag}",
+        "us": us_spec,
+        "derived": (f"tok_s={useful / us_spec * 1e6:.1f};"
+                    f"speedup_vs_plain={us_plain / us_spec:.2f}x;{shared}"),
+    }]
+
+    R, slots, seg_len = (4, 2, 2) if smoke else (8, 4, 2)
+    cprompts = rng.integers(0, cfg.vocab, (R, prompt_len), dtype=np.int32)
+    st = {}
+
+    def continuous():
+        outs, s = serve_continuous(cfg, params, cprompts, n_tokens,
+                                   slots=slots, seg_len=seg_len, eos_id=-1,
+                                   spec=f"dscim2:{k}", prepare=False,
+                                   kv="int8", page_size=4)
+        st.update(s)
+        return outs
+
+    us_cont = timed(continuous, n=reps)
+    pg = st["pages"]
+    rows.append({
+        "name": f"serve/spec_continuous/{DSCIM}/R{R}s{slots}"
+                f"x{prompt_len}+{n_tokens}",
+        "us": us_cont,
+        "derived": (f"tok_s={st['useful_tokens'] / us_cont * 1e6:.1f};"
+                    f"useful_tokens={st['useful_tokens']};"
+                    f"occupancy={st['occupancy']:.2f};"
+                    f"segments={st['segments']};k={k};"
+                    f"pages_live={pg['live_pages']};"
+                    f"pages_high_water={pg['high_water']};"
+                    f"pages_refusals={pg['refusals']};"
+                    f"pages_total={pg['n_pages']}")})
+    return rows
+
+
 def _chaos_rows(cfg, params, smoke):
     """ISSUE 6 rows: fault-free monitoring cost of the fault-tolerant
     serving runtime.  The same continuous queue is served plain and with
@@ -354,7 +442,12 @@ def _chaos_rows(cfg, params, smoke):
                     f"overhead_vs_plain={us_mon / us_plain:.3f};"
                     f"probes={mon_stats['probes']};"
                     f"probe_trips={mon_stats['probe_trips']};"
-                    f"replays={mon_stats['replays']};{shared}"),
+                    f"replays={mon_stats['replays']};"
+                    # page-pool occupancy straight from PageAllocator.stats()
+                    f"pages_live={mon_stats['pages']['live_pages']};"
+                    f"pages_high_water={mon_stats['pages']['high_water']};"
+                    f"pages_refusals={mon_stats['pages']['refusals']};"
+                    f"{shared}"),
     }]
     if not smoke:
         import time
@@ -385,6 +478,7 @@ def run(smoke: bool = False):
         cfg, model.init_params(cfg, jax.random.PRNGKey(0)))
     rows = _dispatch_rows(cfg, params, smoke)
     rows += _queue_rows(cfg, params, smoke)
+    rows += _spec_rows(cfg, params, smoke)
     rows += _chaos_rows(cfg, params, smoke)
     cfg_float = dataclasses.replace(cfg, dscim="off")
     params_float = model.init_params(cfg_float, jax.random.PRNGKey(0))

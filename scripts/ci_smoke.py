@@ -26,6 +26,11 @@ Smokes (all interpret-mode, reduced configs):
                      definite status, unaffected requests stay bitwise
                      equal to the fault-free run, and the watchdog
                      escalates dscim2 -> dscim1
+  spec               self-speculative decoding through the continuous
+                     scheduler (--spec dscim2:4, ISSUE 7): dscim2 drafts,
+                     dscim1 verifies, int8 paged KV — the full
+                     draft/verify/rollback window machinery under
+                     staggered admission and EOS early-exit
 
 Usage:  PYTHONPATH=src python -m scripts.ci_smoke continuous paged-kernel
         PYTHONPATH=src python -m scripts.ci_smoke --list
@@ -53,6 +58,9 @@ SMOKES: dict = {
                           "--dscim", _DSCIM, "--mesh", "model=4", *_PAGED,
                           "--paged-attn", "kernel"],
     "chaos": ["--chaos"],
+    "spec": ["--continuous", "--requests", "6", "--batch", "2",
+             "--segment-len", "2", "--tokens", "6", "--dscim", _DSCIM,
+             *_PAGED, "--spec", "dscim2:4"],
 }
 
 

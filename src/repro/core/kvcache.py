@@ -60,7 +60,7 @@ __all__ = ["quantize_page", "dequantize_page", "paged_from_dense",
            "init_paged_cache", "admit_request", "admit_dense",
            "paged_cache_specs", "kv_cache_bytes", "dense_cache_bytes",
            "PageAllocator", "n_pages_for", "extract_slot_pages",
-           "insert_slot_pages"]
+           "insert_slot_pages", "spec_rollback"]
 
 TAIL_DTYPE = jnp.bfloat16
 
@@ -250,6 +250,56 @@ def dense_cache_bytes(cfg, batch: int, capacity: int) -> int:
         * itemsize
 
 
+def spec_rollback(cache, pos0, new_pos, tails0=None, win_kv=None):
+    """Truncate a speculative draft/verify window back to its committed
+    length (launch/steps.py) — the write-then-rollback discipline.
+
+    ``pos0`` (B,) is the position the window started from, ``new_pos`` (B,)
+    the committed position after accept/reject (pos0 <= new_pos <= pos0+T).
+    Both cache layouts are append-only with read masks on ``pos``, so
+    rejected positions never need erasing:
+
+    * dense: rolled-back indices are masked (``tj <= pos``) until a later
+      decode rewrites them write-before-read — truncating ``pos`` is the
+      whole rollback.
+    * paged: same masking argument for pages and for tail offsets past
+      ``new_pos % ps`` — but if the window crossed a page boundary, the
+      committed tail page's *low* offsets were flushed out of the tail (and
+      the physical page they went to may hold rejected tokens quantized
+      into its scale).  Those pages sit at logical index >= new_pos // ps,
+      so reads never see them before a future flush rewrites them whole;
+      the tail itself is rebuilt here from the window's K/V projections
+      (``win_kv``, the verifier's writes in tail dtype — positions
+      >= pos0) and the pre-window tails (``tails0`` — positions < pos0).
+      Physical pages are never allocated or freed: the slot's grant is
+      sized for prompt + budget + k up front, so the PageAllocator is
+      untouched by speculation.
+
+    Entries past ``new_pos % ps`` in the rebuilt tail are don't-care
+    (rewritten write-before-read, exactly like the dense case); they are
+    filled from the same gather rather than masked.
+    """
+    if "k_pages" not in cache:
+        return dict(cache, pos=new_pos)
+    k_tail0, v_tail0 = tails0
+    win_k, win_v = win_kv
+    ps = cache["k_tail"].shape[2]
+    T = win_k.shape[2]
+    o = jnp.arange(ps, dtype=jnp.int32)
+    i = (new_pos // ps * ps)[:, None] + o[None, :]            # (B, ps) stream
+    t = jnp.clip(i - pos0[:, None], 0, T - 1)                 # window index
+    use_w = (i >= pos0[:, None])[None, :, :, None, None]
+
+    def rebuild(win, tail0):
+        g = jnp.take_along_axis(win, t[None, :, :, None, None], axis=2)
+        return jnp.where(use_w, g, tail0)
+
+    return dict(cache,
+                k_tail=rebuild(win_k, k_tail0),
+                v_tail=rebuild(win_v, v_tail0),
+                pos=new_pos)
+
+
 class PageAllocator:
     """Host-side free-list over the physical page pool.  The continuous
     scheduler allocates a request's pages at admission and frees them at
@@ -264,6 +314,8 @@ class PageAllocator:
         self.n_pages = n_pages
         self._free = list(range(n_pages - 1, -1, -1))
         self._live: set = set()
+        self._high_water = 0
+        self._refusals = 0
 
     @property
     def free_pages(self) -> int:
@@ -272,10 +324,22 @@ class PageAllocator:
     def alloc(self, n: int):
         """n physical page ids, or None if the pool can't cover them."""
         if n > len(self._free):
+            self._refusals += 1
             return None
         ids = [self._free.pop() for _ in range(n)]
         self._live.update(ids)
+        self._high_water = max(self._high_water, len(self._live))
         return ids
+
+    def stats(self) -> dict:
+        """Occupancy counters for serve_bench / the scheduler's stats dict:
+        live pages now, the high-water mark since construction (peak
+        concurrent grant), and how many ``alloc`` calls were refused
+        (admission backpressure events)."""
+        return {"n_pages": self.n_pages,
+                "live_pages": len(self._live),
+                "high_water": self._high_water,
+                "refusals": self._refusals}
 
     def free(self, ids) -> None:
         ids = [int(i) for i in ids]
@@ -299,7 +363,9 @@ class PageAllocator:
     def snapshot(self) -> dict:
         """Plain-data copy of the allocator state (host snapshot leaf)."""
         return {"n_pages": self.n_pages, "free": list(self._free),
-                "live": sorted(self._live)}
+                "live": sorted(self._live),
+                "high_water": self._high_water,
+                "refusals": self._refusals}
 
     @classmethod
     def from_snapshot(cls, snap: dict) -> "PageAllocator":
@@ -307,6 +373,8 @@ class PageAllocator:
         a.n_pages = int(snap["n_pages"])
         a._free = [int(i) for i in snap["free"]]
         a._live = {int(i) for i in snap["live"]}
+        a._high_water = int(snap.get("high_water", len(a._live)))
+        a._refusals = int(snap.get("refusals", 0))
         return a
 
 

@@ -40,6 +40,42 @@ Only-live-work serving (ISSUE 4):
   positions, done mask, RNG) persist across segments, pages are
   allocated at admission and recycled at completion, and throughput is
   reported per *live* slot-step so occupancy is visible.
+* **Self-speculative decoding** (``spec='dscim2:<k>'`` / ``--spec``,
+  ISSUE 7): the *same* prepared weights run twice — k greedy draft
+  tokens through the cheaper stochastic estimator (dscim2/L64 or
+  dscim1/L256; the paper's two operating points), then one batched
+  verify forward over the k+1-token window through the serving
+  estimator, accepting drafts by the standard speculative rule.  The
+  whole draft/verify/accept window lives inside the device-resident
+  loop (``lax.while_loop`` / segment scan carry — never a host
+  round-trip per window), the KV cache (dense float and int8 paged)
+  follows a write-then-rollback discipline for provisional draft
+  positions, and greedy emission is **bitwise-identical** to non-spec
+  greedy serving; sampled emission replays the carried PRNG key chain
+  (replay-deterministic).  Interaction contract (what the flag means
+  next to the ISSUE 6 fault-tolerance knobs):
+
+  - **"step" accounting / deadlines** — one window *attempts* k+1
+    verifier positions, so under ``--spec`` a segment advances the
+    global step ledger by ``seg_len * (k+1)``: drafted-but-rejected
+    positions count toward ``deadline_steps``.  A request therefore
+    never outlives the deadline it would have had without speculation
+    (rejections only spend budget faster); deadline checks stay at
+    segment boundaries.
+  - **eviction / re-admission** — rollback happens inside the window
+    (before the segment returns), so evicted slots park *committed*
+    state only; page grants are sized with +k headroom at admission and
+    pages are never allocated, freed, or leaked mid-window.
+  - **watchdog / quarantine** — the exact-mode probe compares against
+    the segment's first-window *verify* logits at position 0, i.e. it
+    probes the verifier estimator on exactly the (token, cache) inputs
+    it re-decodes; the drafter is never probed (a bad drafter can only
+    cost acceptance rate, never output quality).  A request whose
+    verify path trips the watchdog is quarantined and re-served down
+    the usual ladder (dscim2 -> dscim1 -> exact) **without
+    speculation** — escalation is about trust, so the re-serve takes
+    the plain verified path and the request still ends ``'ok'`` (or
+    ``'quarantined'`` only if even exact re-serving fails its twin).
 
 DS-CIM modes map to DSCIMLinear backends (core/dscim_layer.py):
   exact        — int8 adder-tree baseline (DCIM)
@@ -92,7 +128,8 @@ def serve_batch(cfg, params, prompts: np.ndarray, n_tokens: int,
                 trace_logits: bool = False, eos_id: int | None = None,
                 sample: str = "greedy", kv: str = "float",
                 page_size: int = 8, max_new=None, rng_seed: int = 0,
-                paged_attn: str = "auto"):
+                paged_attn: str = "auto", spec: str | None = None,
+                spec_stats: bool = False):
     """prompts (B, S) int32 -> generated (B, n_tokens) int32, logits list.
 
     ``par``: ParallelCtx for multi-chip serving — params are placed by the
@@ -116,7 +153,16 @@ def serve_batch(cfg, params, prompts: np.ndarray, n_tokens: int,
     ``page_size`` tokens per page).
     ``paged_attn``: int8 read path — 'kernel' (fused Pallas paged
     attention) / 'jnp' (gather reference) pin it (and key the builder
-    cache, so in-process A/Bs are safe); 'auto' follows cfg.dscim."""
+    cache, so in-process A/Bs are safe); 'auto' follows cfg.dscim.
+    ``spec``: '<variant>:<k>' self-speculative decoding (module
+    docstring) — draft k tokens per window with the cheaper estimator,
+    verify in one batched forward; greedy output is bitwise the non-spec
+    output.  ``spec_stats=True`` additionally returns a third element
+    ``{"windows": (B,), "emitted": (B,)}`` np.int32 — per-row verify
+    windows and emitted tokens, whose ratio is accepted-tokens-per-verify
+    (serve_bench's serve/spec_* rows)."""
+    from repro.launch.steps import _parse_spec
+    sp = _parse_spec(spec)
     params = _place(cfg, params, par, prepare)
     batch = {"tokens": jnp.asarray(prompts)}
     if max_new is not None:
@@ -131,15 +177,24 @@ def serve_batch(cfg, params, prompts: np.ndarray, n_tokens: int,
                                     trace_logits=trace_logits,
                                     eos_id=eos_id, sample=sample,
                                     kv=kv, page_size=page_size,
-                                    paged_attn=paged_attn)
-        tokens, logits = generate(params, batch)
+                                    paged_attn=paged_attn, spec=spec)
+        if sp is not None:
+            tokens, logits, sstats = generate(params, batch)
+        else:
+            tokens, logits = generate(params, batch)
+            sstats = None
         trace = list(np.asarray(logits)) if trace_logits else [logits]
+        if spec_stats:
+            sstats = (None if sstats is None else
+                      {k: np.asarray(v) for k, v in sstats.items()})
+            return np.asarray(tokens), trace, sstats
         return np.asarray(tokens), trace
     # legacy host loop (dispatch-overhead A/B baseline)
-    if eos_id is not None or sample != "greedy" or kv != "float":
+    if eos_id is not None or sample != "greedy" or kv != "float" \
+            or sp is not None:
         raise ValueError("the legacy host loop serves the greedy fixed-"
                          "length float-KV path only (scan=True for "
-                         "eos/sampling/paged-KV)")
+                         "eos/sampling/paged-KV/spec)")
     capacity = prompts.shape[1] + n_tokens
     prefill = jax.jit(make_prefill_step(cfg, par, capacity=capacity))
     if trace_logits:
@@ -167,7 +222,8 @@ def serve_continuous(cfg, params, prompts: np.ndarray, n_tokens: int, *,
                      kv: str = "float", page_size: int = 8,
                      n_pages: int | None = None, par=None,
                      prepare: bool = True, rng_seed: int = 0,
-                     paged_attn: str = "auto", deadline_steps=None,
+                     paged_attn: str = "auto", spec: str | None = None,
+                     deadline_steps=None,
                      deadline_s=None, priority=None, monitor=None,
                      injector=None, snapshot_every: int = 0,
                      max_replays: int = 3, watchdog=None, log=print):
@@ -243,7 +299,7 @@ def serve_continuous(cfg, params, prompts: np.ndarray, n_tokens: int, *,
         cfg, params, prompts, n_tokens, slots=slots, seg_len=seg_len,
         max_new=max_new, eos_id=eos_id, sample=sample, kv=kv,
         page_size=page_size, n_pages=n_pages, par=par, rng_seed=rng_seed,
-        paged_attn=paged_attn, deadline_steps=deadline_steps,
+        paged_attn=paged_attn, spec=spec, deadline_steps=deadline_steps,
         deadline_s=deadline_s, priority=priority, monitor=monitor,
         injector=injector, snapshot_every=snapshot_every,
         max_replays=max_replays, watchdog=watchdog, log=log)
@@ -346,6 +402,14 @@ def main(argv=None):
                     help="top-p (nucleus) sampling inside the scan: keep "
                          "the smallest probability mass >= p (combines "
                          "with --temp; exclusive with --top-k)")
+    ap.add_argument("--spec", default=None, metavar="VARIANT:K",
+                    help="self-speculative decoding, e.g. 'dscim2:4': "
+                         "draft K tokens per window with the cheaper "
+                         "estimator on the same prepared weights, verify "
+                         "with one batched forward through --dscim; "
+                         "greedy output is bitwise the non-spec output "
+                         "(module docstring documents the deadline/"
+                         "eviction/watchdog contract)")
     ap.add_argument("--paged-attn", choices=("auto", "kernel", "jnp"),
                     default="auto",
                     help="--kv int8 read path: the fused Pallas paged-"
@@ -414,7 +478,7 @@ def main(argv=None):
                 eos_id=args.eos if args.eos is not None else -1,
                 sample=sample, kv=args.kv, page_size=args.page_size,
                 par=par, prepare=not args.no_prepare,
-                paged_attn=args.paged_attn)
+                paged_attn=args.paged_attn, spec=args.spec)
             print(f"[serve-cb] {tag}: {stats['tok_s']:.1f} tok/s over "
                   f"{stats['useful_tokens']} useful tokens, occupancy "
                   f"{stats['occupancy']:.2f} "
@@ -442,19 +506,30 @@ def main(argv=None):
 
     if args.dscim != "off":
         t0 = time.time()
-        ds_tokens, ds_logits = serve_batch(
+        out = serve_batch(
             cfg_ds, params, prompts, args.tokens, par=par,
             prepare=not args.no_prepare, scan=not args.host_loop,
             eos_id=args.eos, sample=sample, kv=args.kv,
-            page_size=args.page_size, paged_attn=args.paged_attn)
+            page_size=args.page_size, paged_attn=args.paged_attn,
+            spec=args.spec, spec_stats=args.spec is not None)
         dt = time.time() - t0
+        if args.spec is not None:
+            ds_tokens, ds_logits, sstats = out
+        else:
+            ds_tokens, ds_logits = out
+            sstats = None
         agree = _agreement(ds_tokens, base_tokens, args.eos)
         rmse = float(jnp.sqrt(jnp.mean(
             (ds_logits[0] - base_logits[0]) ** 2)))
+        acc = ""
+        if sstats is not None:
+            tpv = (sstats["emitted"] - 1).sum() / max(
+                int(sstats["windows"].sum()), 1)
+            acc = f", {tpv:.2f} accepted tok/verify (--spec {args.spec})"
         print(f"[serve] dscim={args.dscim}: "
               f"{_useful_tokens(ds_tokens, args.eos) / dt:.1f} "
               f"tok/s, token agreement {agree:.3f}, "
-              f"prefill logit RMSE {rmse:.4f}")
+              f"prefill logit RMSE {rmse:.4f}{acc}")
     return 0
 
 

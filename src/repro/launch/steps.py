@@ -202,6 +202,166 @@ def _next_fn(sampler):
     return nxt
 
 
+_SPEC_L = {"dscim1": 256, "dscim2": 64}   # the paper's two operating points
+
+
+def _parse_spec(spec: str | None):
+    """Self-speculative decoding spec: '<variant>:<k>' (e.g. 'dscim2:4')
+    -> (draft_variant, k).  k = 0 (or None/'') disables speculation —
+    the builders fall through to the plain drivers, so 'dscim2:0' is the
+    plain path, not a degenerate window."""
+    if not spec:
+        return None
+    parts = spec.split(":")
+    if len(parts) != 2 or parts[0] not in _SPEC_L:
+        raise ValueError(f"bad spec {spec!r}; want 'dscim1:<k>' or "
+                         "'dscim2:<k>', e.g. 'dscim2:4'")
+    try:
+        k = int(parts[1])
+    except ValueError:
+        raise ValueError(f"bad spec {spec!r}: draft depth {parts[1]!r} is "
+                         "not an int") from None
+    if k < 0:
+        raise ValueError(f"spec draft depth must be >= 0, got {k}")
+    return (parts[0], k) if k else None
+
+
+def _draft_cfg(cfg: ArchConfig, variant: str) -> ArchConfig:
+    """The drafter's config: same weights and architecture, the cheaper
+    stochastic estimator.  Rewrites the serving dscim spec's variant and
+    sample length (dscim2 -> L64, dscim1 -> L256), keeping mode[+attn] and
+    calibration — the prepared ``QuantizedLinearWeight`` planes are shared
+    by every estimator mode, so draft and verify serve the *same* resident
+    weights (that is what makes this self-speculation).  'off'/'float'
+    serving specs draft through themselves (degenerate self-draft: every
+    greedy draft is accepted — useful as a plumbing check)."""
+    import dataclasses
+
+    from repro.core.qweights import split_dscim_mode
+    spec = getattr(cfg, "dscim", "off")
+    if spec == "off" or split_dscim_mode(spec)[0] in ("off", "float"):
+        return cfg
+    parts = spec.split(":")
+    parts[1] = variant
+    parts[2] = str(_SPEC_L[variant])
+    return dataclasses.replace(cfg, dscim=":".join(parts))
+
+
+def _check_spec(model, cfg: ArchConfig):
+    if not hasattr(model, "decode_multi"):
+        raise ValueError("speculative decoding needs a model family with a "
+                         f"batched verify forward, not {cfg.family!r}")
+    if cfg.stub_frontend:
+        raise ValueError("speculative decoding needs token inputs; "
+                         "stub-frontend configs are unsupported")
+
+
+def _make_spec_window(model, cfg: ArchConfig, cfg_draft: ArchConfig, par,
+                      nxt, k: int, eos: int, pad_id: int, pin: dict):
+    """One self-speculative draft/verify window, fully device-resident.
+
+    Drafts ``k`` tokens with the cheap estimator (greedy argmax — drafting
+    consumes no RNG; only emissions draw, keeping the carried key chain
+    aligned with the non-spec drivers), verifies the k+1-token window with
+    one batched forward through the serving estimator
+    (``models.lm.decode_multi``), then folds the standard accept rule over
+    the window inside a ``lax.scan``: position t emits the token the
+    *verifier* decides (argmax, or one RNG draw per emitting position), and
+    the window continues past t only while the draft at t+1 equals the
+    emitted token.  Greedy emission is therefore bitwise what target-only
+    serving would emit; every window emits at least one token per live row
+    (progress is unconditional), and position k's emission is the standard
+    bonus token.
+
+    Draft decodes write provisional KV at the window positions; the verify
+    forward rewinds to the window start and overwrites every one of those
+    writes before reading it, so the verifier sees a cache bitwise equal to
+    non-spec serving — and ``kvcache.spec_rollback`` truncates back to the
+    last accepted position after the fold.  Pages are never allocated or
+    freed in here: callers size every slot's grant with +k headroom.
+
+    Returns ``(tok', done', n_out', cache', key', em (B, k+1) int32,
+    vm (B, k+1) bool, bad (B, k+1) bool, logits0 (B, Vp) f32)`` — ``em``
+    holds the emitted token where ``vm`` is set (pad elsewhere), ``bad``
+    flags emitted-from non-finite verifier logits, ``logits0`` is the
+    verify logits at window position 0 (the accuracy-watchdog probe plane:
+    same (token, cache) inputs the exact-mode probe decodes).
+    """
+    from repro.core import kvcache
+
+    def window(params, tok, done, n_out, budget, cache, key):
+        B = tok.shape[0]
+        pos0 = cache["pos"]
+        paged = "k_pages" in cache
+        tails0 = (cache["k_tail"], cache["v_tail"]) if paged else None
+
+        def dstep(carry, _):
+            dtok, dcache = carry
+            dlogits, dcache = model.decode(
+                params, cfg_draft, {"token": dtok, "done": done, **pin},
+                dcache, par)
+            nd = jnp.argmax(dlogits, axis=-1).astype(jnp.int32)
+            return (nd, dcache), nd
+
+        (_, dcache), drafts = jax.lax.scan(dstep, (tok, cache), None,
+                                           length=k)
+        drafts = jnp.moveaxis(drafts, 0, 1)                    # (B, k)
+
+        window_toks = jnp.concatenate([tok[:, None], drafts], axis=1)
+        # rewind pos: the verify pass overwrites every draft write before
+        # reading it.  Paged caches also restore the pre-window tail: a
+        # draft that crossed a page boundary wrapped the tail buffer and
+        # clobbered committed entries below pos0 % ps, which verify reads
+        # for the window's first page (it only rewrites offsets >= pos0 %
+        # ps); every later page starts at offset 0 and needs no restore.
+        vcache = dict(dcache, pos=pos0)
+        if paged:
+            vcache["k_tail"], vcache["v_tail"] = tails0
+        vlogits, vcache, win_kv = model.decode_multi(
+            params, cfg, {"tokens": window_toks, "done": done, **pin},
+            vcache, par)
+
+        # the draft after each position (what must match to keep going);
+        # -1 after the bonus position — never equal to a real token
+        d_next = jnp.concatenate(
+            [drafts, jnp.full((B, 1), -1, jnp.int32)], axis=1)
+
+        def astep(carry, xs):
+            acc, dn, nout, kkey, last = carry
+            lg, dnx = xs
+            cand, k2 = nxt(lg, kkey)
+            emit = acc
+            # consume the split only if some row emitted at this position
+            # (greedy nxt returns the key untouched, so this is a no-op
+            # there); in the lockstep case this is exactly one split per
+            # emitted token — the non-spec chain
+            any_e = jnp.any(emit)
+            kkey = jax.tree.map(lambda n, o: jnp.where(any_e, n, o),
+                                k2, kkey)
+            tok_t = jnp.where(emit, cand, pad_id)
+            nout2 = nout + jnp.where(emit, 1, 0)
+            stop = (tok_t == eos) | (nout2 >= budget)
+            dn2 = dn | (emit & stop)
+            acc2 = emit & ~stop & (dnx >= 0) & (cand == dnx)
+            last2 = jnp.where(emit, cand, last)
+            return (acc2, dn2, nout2, kkey, last2), (tok_t, emit)
+
+        (_, done2, n_out2, key2, tok2), (em, vm) = jax.lax.scan(
+            astep, (~done, done, n_out, key, tok),
+            (jnp.moveaxis(vlogits, 1, 0), jnp.moveaxis(d_next, 1, 0)))
+        em = jnp.moveaxis(em, 0, 1)                            # (B, k+1)
+        vm = jnp.moveaxis(vm, 0, 1)
+        bad = vm & ~jnp.isfinite(vlogits).all(axis=-1)
+
+        n_emit = jnp.sum(vm, axis=1).astype(jnp.int32)
+        cache2 = kvcache.spec_rollback(vcache, pos0, pos0 + n_emit,
+                                       tails0, win_kv)
+        logits0 = vlogits[:, 0].astype(jnp.float32)
+        return tok2, done2, n_out2, cache2, key2, em, vm, bad, logits0
+
+    return window
+
+
 def _check_kv(cfg: ArchConfig, kv: str):
     if kv not in ("float", "int8"):
         raise ValueError(f"kv must be 'float' or 'int8', got {kv!r}")
@@ -229,7 +389,7 @@ def make_generate_fn(cfg: ArchConfig, par: ParallelCtx | None = None,
                      jit: bool = True, eos_id: int | None = None,
                      sample: str = "greedy", pad_id: int = 0,
                      kv: str = "float", page_size: int = 8,
-                     paged_attn: str = "auto"):
+                     paged_attn: str = "auto", spec: str | None = None):
     """Device-resident generation: prefill + up to (n_tokens-1) decode
     steps inside a single jit.
 
@@ -269,10 +429,27 @@ def make_generate_fn(cfg: ArchConfig, par: ParallelCtx | None = None,
     through the model-axis sharded fused MVM (core/dscim_layer.py) with no
     per-token host sync.  The builder is cached, so repeated ``serve_batch``
     calls with the same options reuse the compiled executable.
+
+    ``spec``: ``'<variant>:<k>'`` (e.g. ``'dscim2:4'``) turns on
+    self-speculative decoding — draft k tokens per window with the cheaper
+    estimator (``_draft_cfg``), verify them in one batched forward through
+    the serving estimator, accept by the standard rule
+    (``_make_spec_window``).  The driver becomes a window-granular
+    ``lax.while_loop`` (accept/reject never round-trips to the host);
+    greedy emission is bitwise-identical to the non-spec drivers, sampled
+    emission replays the carried key chain.  The KV allocation gains +k
+    headroom for in-flight draft positions.  Returns a third element,
+    ``{"windows": (B,), "emitted": (B,)}`` — per-row verify-window
+    participation and emitted-token counts, the
+    accepted-tokens-per-verify numerator/denominator serve_bench reports.
     """
     model = get_model(cfg)
     nxt = _next_fn(_make_sampler(sample))
     _check_kv(cfg, kv)
+    sp = _parse_spec(spec)
+    k_spec = sp[1] if sp else 0
+    if sp:
+        _check_spec(model, cfg)
     pk = _paged_kernel_flag(paged_attn)
     # static read-path pin, merged into the decode batches built inside
     # the jitted loop (absent under 'auto' — plain python values in a
@@ -281,16 +458,19 @@ def make_generate_fn(cfg: ArchConfig, par: ParallelCtx | None = None,
     if trace_logits and eos_id is not None:
         raise ValueError("trace_logits is a fixed-length-scan feature; the "
                          "EOS early-exit variant keeps logits off the path")
+    if trace_logits and sp:
+        raise ValueError("trace_logits is a fixed-length-scan feature; "
+                         "speculative windows keep logits off the path")
 
     def _prefill(params, batch):
         B, S = batch["tokens"].shape
         if kv == "float":
             return model.prefill(params, cfg, {"tokens": batch["tokens"]},
-                                 par, capacity=S + n_tokens)
+                                 par, capacity=S + n_tokens + k_spec)
         from repro.core.kvcache import n_pages_for, paged_from_dense
         logits0, dense = model.prefill(params, cfg,
                                        {"tokens": batch["tokens"]}, par)
-        mp = n_pages_for(S + n_tokens, page_size)
+        mp = n_pages_for(S + n_tokens + k_spec, page_size)
         return logits0, paged_from_dense(dense["k"], dense["v"], page_size,
                                          n_pages=B * mp, max_pages=mp)
 
@@ -299,6 +479,48 @@ def make_generate_fn(cfg: ArchConfig, par: ParallelCtx | None = None,
         logits0, cache = _prefill(params, batch)
         key = batch.get("rng", jax.random.PRNGKey(0))
         tok0, key = nxt(logits0, key)
+
+        if sp is not None:
+            # self-speculative window driver: while_loop over draft/verify
+            # windows, per-row output cursors (rows desync by acceptance)
+            variant, kd = sp
+            window = _make_spec_window(model, cfg, _draft_cfg(cfg, variant),
+                                       par, nxt, kd,
+                                       -1 if eos_id is None else eos_id,
+                                       pad_id, pin)
+            budget = jnp.full((B,), n_tokens, jnp.int32)
+            if "max_new" in batch:
+                budget = jnp.minimum(budget, batch["max_new"])
+            done0 = (tok0 == (-1 if eos_id is None else eos_id)) \
+                | (budget <= 1)
+            if kv == "float":      # per-row positions from the first window
+                cache = dict(cache,
+                             pos=jnp.full((B,), cache["pos"], jnp.int32))
+            toks0 = jnp.full((B, n_tokens), pad_id,
+                             jnp.int32).at[:, 0].set(tok0)
+            cnt0 = jnp.ones((B,), jnp.int32)          # emitted (incl. tok0)
+            wn0 = jnp.zeros((B,), jnp.int32)          # windows participated
+
+            def cond(c):
+                w, _, done = c[0], c[1], c[2]
+                return (w < n_tokens) & ~jnp.all(done)
+
+            def body(c):
+                w, tok, done, toks, cnt, wn, cache, key = c
+                wn = wn + jnp.where(done, 0, 1)
+                tok, ndone, cnt2, cache, key, em, vm, _, _ = window(
+                    params, tok, done, cnt, budget, cache, key)
+                rows = jnp.arange(B)[:, None]
+                idx = cnt[:, None] + jnp.arange(kd + 1,
+                                                dtype=jnp.int32)[None, :]
+                idx = jnp.where(vm, idx, n_tokens)    # drop non-emissions
+                toks = toks.at[rows, idx].set(em, mode="drop")
+                return w + 1, tok, ndone, toks, cnt2, wn, cache, key
+
+            _, _, _, toks, cnt, wn, _, _ = jax.lax.while_loop(
+                cond, body,
+                (jnp.int32(1), tok0, done0, toks0, cnt0, wn0, cache, key))
+            return toks, logits0, {"windows": wn, "emitted": cnt}
 
         if eos_id is None:
             # fixed-length scan (the PR 3 path)
@@ -431,7 +653,8 @@ def make_admit_fn(cfg: ArchConfig, par: ParallelCtx | None = None, *,
 def make_segment_fn(cfg: ArchConfig, par: ParallelCtx | None = None,
                     seg_len: int = 4, *, eos_id: int | None = None,
                     sample: str = "greedy", pad_id: int = 0,
-                    jit: bool = True, paged_attn: str = "auto"):
+                    jit: bool = True, paged_attn: str = "auto",
+                    spec: str | None = None):
     """One jitted continuous-batching segment: a fixed-size ``lax.scan`` of
     ``seg_len`` done-masked decode steps over the whole slot batch.  Slots
     finish on EOS or their per-slot budget and stop advancing their cache
@@ -448,12 +671,58 @@ def make_segment_fn(cfg: ArchConfig, par: ParallelCtx | None = None,
     logits — the serving side of the accuracy-watchdog probe, which
     decodes the same (token, cache) inputs through the exact reference
     (``make_probe_fn``) and compares.  Both stay as unfetched device
-    buffers unless the scheduler is monitoring."""
+    buffers unless the scheduler is monitoring.
+
+    ``spec`` ('<variant>:<k>'): each of the ``seg_len`` scan steps becomes
+    a self-speculative draft/verify *window* (``_make_spec_window``) —
+    still one host dispatch per segment; accept/reject lives in the scan
+    carry.  Outputs stay step-shaped: toks/live/``aux["bad"]`` come back
+    as (seg_len * (k+1), B) with window emissions laid out chronologically
+    and non-emitted positions dead (``live`` False, token ``pad_id``) —
+    the host harvest loop is unchanged, it just sees more rows, and the
+    deadline ledger counts all seg_len * (k+1) attempted verifier
+    positions.  ``aux["logits0"]`` stays the segment's first (token,
+    cache) decode — under spec that is the first window's verify logits
+    at position 0, i.e. still the *verifier* estimator on exactly the
+    inputs the exact-mode probe decodes."""
     model = get_model(cfg)
     nxt = _next_fn(_make_sampler(sample))
     eos = -1 if eos_id is None else eos_id
     pin = {} if _paged_kernel_flag(paged_attn) is None \
         else {"paged_kernel": _paged_kernel_flag(paged_attn)}
+    sp = _parse_spec(spec)
+    if sp:
+        _check_spec(model, cfg)
+        variant, kd = sp
+        window = _make_spec_window(model, cfg, _draft_cfg(cfg, variant),
+                                   par, nxt, kd, eos, pad_id, pin)
+
+        def segment(params, state):
+            def step(carry, _):
+                tok, done, n_out, max_new, cache, key, i, lg0 = carry
+                tok, done, n_out, cache, key, em, vm, bad, l0 = window(
+                    params, tok, done, n_out, max_new, cache, key)
+                lg0 = jnp.where(i == 0, l0, lg0)
+                return (tok, done, n_out, max_new, cache, key, i + 1,
+                        lg0), (em, vm, bad)
+
+            B = state["tok"].shape[0]
+            lg0_init = jnp.zeros((B, cfg.vocab_padded), jnp.float32)
+            carry = (state["tok"], state["done"], state["n_out"],
+                     state["max_new"], state["cache"], state["rng"],
+                     jnp.int32(0), lg0_init)
+            (tok, done, n_out, max_new, cache, key, _, lg0), \
+                (ems, vms, bads) = \
+                jax.lax.scan(step, carry, None, length=seg_len)
+
+            def rows(x):     # (seg_len, B, k+1) -> (seg_len * (k+1), B)
+                return jnp.moveaxis(x, 2, 1).reshape(seg_len * (kd + 1), B)
+
+            return dict(state, tok=tok, done=done, n_out=n_out,
+                        max_new=max_new, cache=cache, rng=key), \
+                rows(ems), rows(vms), {"bad": rows(bads), "logits0": lg0}
+
+        return jax.jit(segment, donate_argnums=(1,)) if jit else segment
 
     def segment(params, state):
         def step(carry, _):

@@ -25,7 +25,8 @@ from .norms import qk_norm
 from .rope import apply_rope, rope_angles
 
 __all__ = ["init_attention", "attention", "decode_attention",
-           "decode_attention_paged", "AttnParams"]
+           "decode_attention_multi", "decode_attention_paged",
+           "decode_attention_paged_multi", "AttnParams"]
 
 NEG_INF = -1e30
 
@@ -248,6 +249,65 @@ def decode_attention(params, x, cache_k, cache_v, pos, cfg,
     return out, new_k, new_v
 
 
+def decode_attention_multi(params, x, cache_k, cache_v, pos, cfg,
+                           linear=None, salt=None, done=None):
+    """Speculative-verify decode: score T consecutive tokens per row in one
+    call against a fixed-capacity KV cache.
+
+    The projections (q/k/v/wo) batch over the window — that is the whole
+    speedup — while the cache write / mask / softmax run as a per-position
+    ``lax.scan`` that replays the exact op sequence of ``decode_attention``
+    (write position t, mask ``tj <= pos + t``, (B,1,..)-shaped einsums), so
+    position t here is bitwise-identical to t successive single-token
+    decodes with the same weights.  (DS-CIM ``statistical``/``paper_inject``
+    estimators draw shape-keyed noise and are excluded from that guarantee;
+    ``exact``/``lut``/``bitmatmul``/``kernel`` and the plain float path
+    batch bitwise-cleanly.)
+
+    x (B, T, D); pos (B,) valid prefix lengths.  ``done`` rows freeze their
+    positions (write/mask at ``pos``, like the single-token ragged path) so
+    a finished slot only benignly rewrites its own head entry.
+    Returns (out (B, T, D), new_k, new_v).
+    """
+    B, T, _ = x.shape
+    Tc = cache_k.shape[1]
+    step = jnp.ones((B,), jnp.int32) if done is None \
+        else jnp.where(done, 0, 1).astype(jnp.int32)
+    offs = jnp.arange(T, dtype=jnp.int32)
+    positions = pos[:, None].astype(jnp.int32) + step[:, None] * offs[None, :]
+    q, k, v = _qkv(params, x, cfg.n_heads, cfg.n_kv, cfg.head_dim,
+                   positions, cfg.rope_theta, cfg.qk_norm, linear, salt)
+    n_rep = q.shape[2] // cfg.n_kv
+
+    def upd(c, kk, p):
+        return jax.lax.dynamic_update_slice_in_dim(c, kk[None], p, axis=0)
+
+    def pstep(carry, xs):
+        ck, cv = carry
+        qt, kt, vt, t = xs                                # (B,H,D)/(B,KV,D)
+        pt = pos + step * t                               # (B,)
+        nk = jax.vmap(upd)(ck, kt.astype(ck.dtype), pt)
+        nv = jax.vmap(upd)(cv, vt.astype(cv.dtype), pt)
+        mask = jnp.arange(Tc)[None, None, None, :] <= pt[:, None, None, None]
+        kr = jnp.repeat(nk, n_rep, axis=2)
+        vr = jnp.repeat(nv, n_rep, axis=2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qt[:, None].astype(jnp.float32),
+                       kr.astype(jnp.float32)) * cfg.head_dim ** -0.5
+        s = jnp.where(mask, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        ot = jnp.einsum("bhqk,bkhd->bqhd", p, vr.astype(jnp.float32))
+        return (nk, nv), ot[:, 0]                         # (B,H,D)
+
+    (new_k, new_v), outs = jax.lax.scan(
+        pstep, (cache_k, cache_v),
+        (jnp.moveaxis(q, 1, 0), jnp.moveaxis(k, 1, 0),
+         jnp.moveaxis(v, 1, 0), offs))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, T, -1).astype(x.dtype)
+    out = _mm(out, params["wo"], linear,
+              None if salt is None else salt + 7)
+    return out, new_k, new_v
+
+
 def _paged_read_jnp(qf, view, k_tail, v_tail):
     """The jnp reference read path: flash-style online softmax over logical
     pages as a ``lax.scan``, gathering each physical int8 page and fusing
@@ -411,6 +471,94 @@ def decode_attention_paged(params, x, view, cfg, linear=None, salt=None,
     out = _mm(out, params["wo"], linear,
               None if salt is None else salt + 7)
     return out, (k_pages, v_pages, k_scale, v_scale, k_tail, v_tail)
+
+
+def decode_attention_paged_multi(params, x, view, cfg, linear=None, salt=None,
+                                 done=None, par=None, use_kernel=None):
+    """Speculative-verify decode against one layer of the int8 paged cache:
+    score T consecutive tokens per row in one call.
+
+    Projections batch over the window; the tail-write / page-walk / flush
+    sequence runs per position inside a ``lax.scan``, replaying
+    ``decode_attention_paged`` exactly (write tail at ``pt % ps``, read with
+    the frozen-``pt`` ragged mask — which is how the kernel's masking covers
+    in-flight draft positions — then quantize-once flush when ``pt`` fills a
+    page), so position t is bitwise-identical to t successive single-token
+    decodes.  ``done`` rows freeze ``pt`` and suppress writes + flushes,
+    exactly like the single-token path.
+
+    Also returns the window's K/V projections in tail dtype — the
+    speculative rollback (core/kvcache.spec_rollback) needs them to rebuild
+    the committed tail when a rejected window crossed a page boundary.
+
+    Returns (out (B, T, D),
+             (k_pages, v_pages, k_scale, v_scale, k_tail, v_tail),
+             (win_k, win_v))  with win_k/win_v (B, T, KV, HD) tail-dtype.
+    """
+    from repro.core.kvcache import quantize_page
+    from repro.kernels.paged_attention import use_paged_kernel
+
+    B, T, _ = x.shape
+    pos = view["pos"]
+    page_table = view["page_table"]
+    n_pages, ps, KV, HD = view["k_pages"].shape
+    step = jnp.ones((B,), jnp.int32) if done is None \
+        else jnp.where(done, 0, 1).astype(jnp.int32)
+    offs = jnp.arange(T, dtype=jnp.int32)
+    positions = pos[:, None].astype(jnp.int32) + step[:, None] * offs[None, :]
+    q, k, v = _qkv(params, x, cfg.n_heads, cfg.n_kv, cfg.head_dim,
+                   positions, cfg.rope_theta, cfg.qk_norm, linear, salt)
+    n_rep = q.shape[2] // KV
+    if use_kernel is None:
+        use_kernel = use_paged_kernel(getattr(cfg, "dscim", "off"))
+    win_k = k.astype(view["k_tail"].dtype)                # (B,T,KV,HD)
+    win_v = v.astype(view["v_tail"].dtype)
+
+    def upd(t, vv, o):
+        return jax.lax.dynamic_update_slice_in_dim(t, vv[None], o, 0)
+
+    def pstep(carry, xs):
+        k_pages, v_pages, k_scale, v_scale, k_tail, v_tail = carry
+        qt, kt, vt, t = xs                                # (B,KV,..,HD)
+        pt = pos + step * t
+        off = pt % ps
+        nkt = jax.vmap(upd)(k_tail, kt, off)
+        nvt = jax.vmap(upd)(v_tail, vt, off)
+        if done is not None:
+            nkt = jnp.where(done[:, None, None, None], k_tail, nkt)
+            nvt = jnp.where(done[:, None, None, None], v_tail, nvt)
+        viewt = {"k_pages": k_pages, "v_pages": v_pages,
+                 "k_scale": k_scale, "v_scale": v_scale,
+                 "page_table": page_table, "pos": pt}
+        qf = qt.astype(jnp.float32).reshape(B, KV, n_rep, HD)
+        if use_kernel:
+            ot = _paged_read_kernel(qf, viewt, nkt, nvt, par)
+        else:
+            ot = _paged_read_jnp(qf, viewt, nkt, nvt)
+        full = (pt + 1) % ps == 0
+        if done is not None:
+            full = full & ~done
+        tail_page = pt // ps
+        phys_t = jnp.take_along_axis(page_table, tail_page[:, None], 1)[:, 0]
+        idx = jnp.where(full, phys_t, n_pages)
+        qk_, sk_ = quantize_page(nkt)
+        qv_, sv_ = quantize_page(nvt)
+        k_pages = k_pages.at[idx].set(qk_, mode="drop")
+        v_pages = v_pages.at[idx].set(qv_, mode="drop")
+        k_scale = k_scale.at[idx].set(sk_, mode="drop")
+        v_scale = v_scale.at[idx].set(sv_, mode="drop")
+        return (k_pages, v_pages, k_scale, v_scale, nkt, nvt), ot
+
+    carry0 = (view["k_pages"], view["v_pages"], view["k_scale"],
+              view["v_scale"], view["k_tail"], view["v_tail"])
+    planes, outs = jax.lax.scan(
+        pstep, carry0,
+        (jnp.moveaxis(q, 1, 0), jnp.moveaxis(win_k, 1, 0),
+         jnp.moveaxis(win_v, 1, 0), offs))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, T, -1).astype(x.dtype)
+    out = _mm(out, params["wo"], linear,
+              None if salt is None else salt + 7)
+    return out, planes, (win_k, win_v)
 
 
 AttnParams = dict

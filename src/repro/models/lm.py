@@ -21,14 +21,17 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import ArchConfig
 from repro.core.qweights import QuantizedLinearWeight
 from repro.layers.attention import (attention, decode_attention,
-                                    decode_attention_paged, init_attention)
+                                    decode_attention_multi,
+                                    decode_attention_paged,
+                                    decode_attention_paged_multi,
+                                    init_attention)
 from repro.layers.mlp import init_mlp, mlp
 from repro.layers.moe import init_moe, moe, moe_local
 from repro.layers.norms import init_rmsnorm, layernorm, rmsnorm
 from repro.parallel import ParallelCtx, shard_map
 
-__all__ = ["init_params", "forward", "prefill", "decode", "cache_specs",
-           "lm_loss"]
+__all__ = ["init_params", "forward", "prefill", "decode", "decode_multi",
+           "cache_specs", "lm_loss"]
 
 
 def _parse_dscim(dscim_spec: str):
@@ -474,6 +477,81 @@ def _decode_paged(params, cfg: ArchConfig, batch, cache,
     return logits, {"k_pages": kp, "v_pages": vp, "k_scale": ks,
                     "v_scale": vs, "k_tail": kt, "v_tail": vt,
                     "page_table": page_table, "pos": _advance(pos, done)}
+
+
+def decode_multi(params, cfg: ArchConfig, batch, cache,
+                 par: ParallelCtx | None = None):
+    """Speculative-verify decode: score T consecutive tokens per row in one
+    forward — the verifier half of self-speculative decoding
+    (launch/steps.py).  ``batch["tokens"]`` (B, T) int32; ``cache["pos"]``
+    per-slot (B,) (a scalar is broadcast).  Position t of the returned
+    logits is bitwise what ``decode`` would produce after feeding tokens
+    0..t-1 (same weights, same salts, same ``_head`` path — see
+    layers/attention.py ``decode_attention_multi`` for the exact-replay
+    argument and the statistical/paper_inject carve-out).
+
+    Returns (logits (B, T, Vp) f32, cache, win_kv) where win_kv is
+    (win_k, win_v) (n_layers, B, T, KV, HD) tail-dtype window projections
+    for the paged layout (``core/kvcache.spec_rollback`` consumes them) and
+    None for the dense layout (dense rollback is position truncation only).
+    """
+    if cfg.stub_frontend:
+        raise ValueError("decode_multi (speculative verify) needs token "
+                         "inputs; stub-frontend configs are unsupported")
+    dt = jnp.dtype(cfg.compute_dtype)
+    B, T = batch["tokens"].shape
+    x = params["embed"].astype(dt)[batch["tokens"]]       # (B,T,D)
+    pos = cache["pos"]
+    if getattr(pos, "ndim", 0) == 0:
+        pos = jnp.full((B,), pos, jnp.int32)
+    done = batch.get("done")
+    adv = T if done is None else jnp.where(done, 0, T).astype(jnp.int32)
+    lin = _attn_linear_for(cfg.dscim, par, cfg.dscim_fault)
+
+    if "k_pages" in cache:
+        page_table = cache["page_table"]
+        use_kernel = batch.get("paged_kernel")
+
+        def pbody(x, xs):
+            lp, kp, vp, ks, vs, kt, vt, li = xs
+            lp = _cast(lp, dt)
+            salt = li * 8
+            view = {"k_pages": kp, "v_pages": vp, "k_scale": ks,
+                    "v_scale": vs, "k_tail": kt, "v_tail": vt,
+                    "page_table": page_table, "pos": pos}
+            h, planes, wkv = decode_attention_paged_multi(
+                lp["attn"], _norm(cfg, x, lp["ln1"]), view, cfg,
+                linear=lin, salt=salt, done=done,
+                par=par, use_kernel=use_kernel)
+            return _decode_ff(cfg, par, lp, x, h, salt), planes + wkv
+
+        x, (kp, vp, ks, vs, kt, vt, wk, wv) = jax.lax.scan(
+            pbody, x, (params["layers"], cache["k_pages"], cache["v_pages"],
+                       cache["k_scale"], cache["v_scale"],
+                       cache["k_tail"], cache["v_tail"],
+                       jnp.arange(cfg.n_layers, dtype=jnp.int32)))
+        new_cache = {"k_pages": kp, "v_pages": vp, "k_scale": ks,
+                     "v_scale": vs, "k_tail": kt, "v_tail": vt,
+                     "page_table": page_table, "pos": pos + adv}
+        win_kv = (wk, wv)
+    else:
+        def body(x, xs):
+            lp, ck, cv, li = xs
+            lp = _cast(lp, dt)
+            salt = li * 8
+            h, nk, nv = decode_attention_multi(
+                lp["attn"], _norm(cfg, x, lp["ln1"]), ck, cv, pos, cfg,
+                linear=lin, salt=salt, done=done)
+            return _decode_ff(cfg, par, lp, x, h, salt), (nk, nv)
+
+        x, (nk, nv) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"],
+                      jnp.arange(cfg.n_layers, dtype=jnp.int32)))
+        new_cache = {"k": nk, "v": nv, "pos": pos + adv}
+        win_kv = None
+    x = _norm(cfg, x, params["final_norm"])
+    logits = _head(params, cfg, x)                        # (B,T,Vp)
+    return logits, new_cache, win_kv
 
 
 def cache_specs(cfg: ArchConfig, batch: int, seq: int):

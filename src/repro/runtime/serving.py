@@ -70,8 +70,9 @@ import numpy as np
 
 from repro.core.kvcache import (PageAllocator, extract_slot_pages,
                                 insert_slot_pages, n_pages_for)
-from repro.launch.steps import (init_serve_state, make_admit_fn,
-                                make_probe_fn, make_segment_fn)
+from repro.launch.steps import (_parse_spec, init_serve_state,
+                                make_admit_fn, make_probe_fn,
+                                make_segment_fn)
 from repro.runtime.failover import SimulatedHardwareFailure, run_with_failover
 from repro.runtime.watchdog import AccuracyWatchdog, StepHang
 
@@ -161,7 +162,8 @@ def serve_continuous_ft(cfg, params, prompts: np.ndarray, n_tokens: int, *,
                         deadline_steps=None, deadline_s=None, priority=None,
                         monitor: AccuracyWatchdog | None = None,
                         injector=None, snapshot_every: int = 0,
-                        max_replays: int = 3, watchdog=None, log=print):
+                        max_replays: int = 3, watchdog=None,
+                        spec: str | None = None, log=print):
     """Fault-tolerant continuous batching over already-placed ``params``
     (launch/serve.py ``serve_continuous`` is the user-facing wrapper —
     argument semantics and the failure-mode contract are documented
@@ -184,7 +186,11 @@ def serve_continuous_ft(cfg, params, prompts: np.ndarray, n_tokens: int, *,
                          "to probe (pass rel_threshold=None for NaN-only "
                          "monitoring)")
     eos = -1 if eos_id is None else eos_id
-    capacity = S + int(budgets.max())
+    # +k_spec headroom: a speculative window may write k draft positions
+    # past the committed pos before rollback, so every slot's cache (and
+    # page grant, below) is sized for budget + k in-flight positions.
+    k_spec = _parse_spec(spec)[1] if _parse_spec(spec) else 0
+    capacity = S + int(budgets.max()) + k_spec
     mp = n_pages_for(capacity, page_size)
     state0 = init_serve_state(cfg, slots, capacity, kv=kv,
                               page_size=page_size, n_pages=n_pages,
@@ -315,7 +321,8 @@ def serve_continuous_ft(cfg, params, prompts: np.ndarray, n_tokens: int, *,
                 dataclasses.replace(cfg, dscim_fault=fault_now)
             admit = make_admit_fn(cfg_now, par, eos_id=eos_id, sample=sample)
             segment = make_segment_fn(cfg_now, par, seg_len, eos_id=eos_id,
-                                      sample=sample, paged_attn=paged_attn)
+                                      sample=sample, paged_attn=paged_attn,
+                                      spec=spec)
             now = time.perf_counter()
             done_h = np.asarray(state["done"])
             for b in range(slots):                 # harvest finished slots
@@ -351,7 +358,8 @@ def serve_continuous_ft(cfg, params, prompts: np.ndarray, n_tokens: int, *,
                 rq = host["next_req"]
                 pages = no_pages
                 if alloc is not None:
-                    need = n_pages_for(S + int(budgets[rq]), page_size)
+                    need = n_pages_for(S + int(budgets[rq]) + k_spec,
+                                       page_size)
                     ids = grant(need,
                                 int(prio[rq]) if prio is not None else None)
                     if ids is None:                # pool exhausted: wait
@@ -377,7 +385,7 @@ def serve_continuous_ft(cfg, params, prompts: np.ndarray, n_tokens: int, *,
                     return state, host, alloc
                 nr = host["next_req"]
                 what = (f"request {nr} "
-                        f"({n_pages_for(S + int(budgets[nr]), page_size)} "
+                        f"({n_pages_for(S + int(budgets[nr]) + k_spec, page_size)} "
                         "pages needed") if nr < R else \
                     (f"evicted request {host['readmit'][0]} "
                      f"({host['evicted'][host['readmit'][0]]['page_count']}"
@@ -408,7 +416,10 @@ def serve_continuous_ft(cfg, params, prompts: np.ndarray, n_tokens: int, *,
                 state, toks, lives, aux = segment(params, state)
                 toks_h = np.asarray(toks)
                 lives_h = np.asarray(lives)
-            for s in range(seg_len):               # harvest tokens
+            # under spec the segment emits seg_len * (k + 1) chronological
+            # rows per slot (accepted drafts + bonus; rejected rows have
+            # lives False) — the harvest is row-count agnostic
+            for s in range(toks_h.shape[0]):       # harvest tokens
                 for b in range(slots):
                     if lives_h[s, b] and host["slot_req"][b] >= 0:
                         host["out"][host["slot_req"][b]].append(
@@ -437,9 +448,12 @@ def serve_continuous_ft(cfg, params, prompts: np.ndarray, n_tokens: int, *,
                         "rel": float(rels[b])
                         if np.isfinite(rels[b]) else float("inf")})
             host["live_steps"] += int(lives_h.sum())
-            host["total_steps"] += seg_len * slots
+            host["total_steps"] += toks_h.shape[0] * slots
             host["segments"] += 1
-            host["global_step"] += seg_len
+            # drafted-but-rejected verifier positions count toward the
+            # deadline ledger: a spec segment attempts seg_len * (k + 1)
+            # positions per slot regardless of the acceptance outcome
+            host["global_step"] += seg_len * (k_spec + 1)
 
     use_ft = injector is not None or snapshot_every > 0 \
         or watchdog is not None
@@ -487,6 +501,7 @@ def serve_continuous_ft(cfg, params, prompts: np.ndarray, n_tokens: int, *,
         "probes": monitor.n_probes if monitor is not None else 0,
         "probe_trips": monitor.n_trips if monitor is not None else 0,
         "stragglers": watchdog.n_stragglers if watchdog is not None else 0,
+        "pages": alloc.stats() if alloc is not None else None,
     }
     return [np.asarray(o, np.int32) for o in host["out"]], stats
 

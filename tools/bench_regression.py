@@ -34,6 +34,19 @@ exists to catch a monitoring path that suddenly costs a *multiple* of
 serving (an accidental per-segment device sync, a probe that stopped
 respecting its cadence), not to re-measure the 5%.
 
+The ISSUE 7 leg serves the self-speculative greedy configuration
+(dscim2:64 drafts, dscim1:256 verify, int8 paged KV) and gates two
+things: the spec output must be *bitwise* the plain-driver output (the
+tentpole acceptance criterion — any drift is an immediate fail, no
+threshold), and the greedy acceptance rate (accepted draft tokens per
+drafted token) must stay above ``spec_greedy_acceptance_rate_min``.
+Both drivers are deterministic on the fixed seed, so the measured rate
+(0.48 at the full CI shape, 0.58 at the smoke shape) is reproducible;
+the 0.40 bound is measured-minus-slack — a drafter regression (wrong
+draft cache, a desynced operating point, an estimator change that
+silently decorrelates dscim2 from dscim1) shows up as a rate collapse
+long before it shows up in tok/s.
+
 Usage:  PYTHONPATH=src python -m tools.bench_regression [--smoke]
 (--smoke shortens the trace; CI passes it.)  Exit 0 on pass, 1 on drift.
 """
@@ -118,6 +131,36 @@ def _chaos_monitor_overhead(smoke: bool) -> float:
     return us_mon / us_plain
 
 
+def _spec_acceptance(smoke: bool):
+    """(bitwise_match, acceptance_rate) for greedy self-speculative
+    decoding on the serve-bench spec shape (ISSUE 7)."""
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_arch
+    from repro.launch.serve import serve_batch
+    from repro.models import get_model
+
+    cfg = dataclasses.replace(get_arch("qwen3-0.6b").reduced(),
+                              dscim="kernel:dscim1:256")
+    model = get_model(cfg)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    B, prompt_len, k = 4, 8, 4
+    n_tokens = 8 if smoke else 16
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, (B, prompt_len), dtype=np.int32)
+    kw = dict(kv="int8", page_size=4)
+    t_ref, _ = serve_batch(cfg, params, prompts, n_tokens, **kw)
+    t_spec, _, ss = serve_batch(cfg, params, prompts, n_tokens,
+                                spec=f"dscim2:{k}", spec_stats=True, **kw)
+    match = bool(np.array_equal(np.asarray(t_spec), np.asarray(t_ref)))
+    accepted = int((ss["emitted"] - 1).sum())
+    rate = accepted / max(int(ss["windows"].sum()), 1) / k
+    return match, rate
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -152,6 +195,20 @@ def main(argv=None) -> int:
     if ratio > ratio_bound:
         print("BENCH REGRESSION: fault-free monitoring overhead of the "
               "serving runtime exceeded its bound", file=sys.stderr)
+        ok = False
+
+    match, rate = _spec_acceptance(args.smoke)
+    rate_min = th["spec_greedy_acceptance_rate_min"]
+    print(f"self-speculative greedy serving: bitwise match {match}, "
+          f"acceptance rate {rate:.3f} (threshold {rate_min})")
+    if not match:
+        print("BENCH REGRESSION: greedy self-speculative output drifted "
+              "from the plain driver (bitwise-parity contract)",
+              file=sys.stderr)
+        ok = False
+    if rate < rate_min:
+        print("BENCH REGRESSION: greedy self-spec acceptance rate "
+              "collapsed below its bound", file=sys.stderr)
         ok = False
     return 0 if ok else 1
 

@@ -25,10 +25,27 @@ Checks (no third-party deps — stdlib json only):
   typed derived contract — chaos_plain/chaos_monitored need a finite
   positive ``tok_s``; chaos_monitored additionally needs a positive
   ``overhead_vs_plain`` ratio (the CI-bounded fault-free monitoring
-  cost); chaos_drill needs its scenario counters (``requests``,
-  ``replays``, ``probe_trips``, ``escalations``, ``deadline_cancelled``)
-  as non-negative ints.  A chaos row whose derived fields went missing
-  or non-numeric would silently blind the regression gate.
+  cost) and the PageAllocator occupancy counters (``pages_live`` — zero
+  at end of serve, a leak otherwise — ``pages_high_water``,
+  ``pages_refusals``; pre-ISSUE-7 rows without any of them are
+  grandfathered, malformed values are not); chaos_drill needs its
+  scenario counters
+  (``requests``, ``replays``, ``probe_trips``, ``escalations``,
+  ``deadline_cancelled``) as non-negative ints.  A chaos row whose
+  derived fields went missing or non-numeric would silently blind the
+  regression gate.
+* serve/spec_* rows (ISSUE 7): the self-speculative decoding rows need a
+  finite positive ``tok_s``; the drafted rows (spec_dscim*) additionally
+  need ``accepted_tok_per_verify`` (positive), ``acceptance_rate`` in
+  (0, 1], and ``tokens_match=1`` — the bitwise-parity assertion baked
+  into the bench; spec_continuous rows carry the allocator counters
+  (``pages_live``/``pages_high_water``/``pages_refusals``) like
+  chaos_monitored.
+* No duplicate rows (ISSUE 7 satellite): a row name may appear at most
+  once per run, and a (name, rev) pair at most once across the whole
+  trajectory — benchmarks/run.py dedupes on append (newest run wins), so
+  a duplicate here means someone bypassed it and the perf diff would
+  silently average two measurements.
 
 Usage:  python tools/check_artifacts.py [--bench PATH] [--cache PATH]
 Exit 0 on pass; exit 1 with one line per violation on failure.
@@ -89,12 +106,55 @@ def _check_chaos_row(name: str, derived: str, rtag: str, errs: list):
             errs.append(f"{rtag} ({name!r}): chaos_monitored needs a "
                         f"positive overhead_vs_plain ratio, got "
                         f"{f.get('overhead_vs_plain')!r}")
+        _check_page_stats(name, f, rtag, errs, required=False)
     if kind == "chaos_drill":
         for key in ("requests", "replays", "probe_trips", "escalations",
                     "deadline_cancelled"):
             if not _nonneg_int(f.get(key)):
                 errs.append(f"{rtag} ({name!r}): chaos_drill needs "
                             f"non-negative int {key}, got {f.get(key)!r}")
+
+
+def _check_page_stats(name: str, f: dict, rtag: str, errs: list,
+                      required: bool = True):
+    """PageAllocator.stats() counters on continuous-serving rows.
+    ``required=False`` grandfathers pre-ISSUE-7 rows that predate the
+    counters: absent is tolerated, present-but-malformed is not."""
+    keys = ("pages_live", "pages_high_water", "pages_refusals")
+    if not required and not any(k in f for k in keys):
+        return
+    for key in keys:
+        if not _nonneg_int(f.get(key)):
+            errs.append(f"{rtag} ({name!r}): needs non-negative int "
+                        f"{key} (PageAllocator.stats()), got "
+                        f"{f.get(key)!r}")
+
+
+def _check_spec_row(name: str, derived: str, rtag: str, errs: list):
+    """ISSUE 7: typed schema for serve/spec_* derived fields."""
+    f = _derived_fields(derived)
+    kind = name.split("/", 2)[1]     # spec_off | spec_dscim2_k<k> | spec_...
+    if not _pos_float(f.get("tok_s")):
+        errs.append(f"{rtag} ({name!r}): spec row needs a finite positive "
+                    f"tok_s, got {f.get('tok_s')!r}")
+    if kind.startswith("spec_dscim"):
+        if not _pos_float(f.get("accepted_tok_per_verify")):
+            errs.append(f"{rtag} ({name!r}): drafted spec row needs a "
+                        f"positive accepted_tok_per_verify, got "
+                        f"{f.get('accepted_tok_per_verify')!r}")
+        try:
+            rate = float(f.get("acceptance_rate"))
+        except (TypeError, ValueError):
+            rate = -1.0
+        if not 0.0 < rate <= 1.0:
+            errs.append(f"{rtag} ({name!r}): acceptance_rate must be in "
+                        f"(0, 1], got {f.get('acceptance_rate')!r}")
+        if f.get("tokens_match") != "1":
+            errs.append(f"{rtag} ({name!r}): drafted spec row must assert "
+                        f"bitwise parity (tokens_match=1), got "
+                        f"{f.get('tokens_match')!r}")
+    if kind == "spec_continuous":
+        _check_page_stats(name, f, rtag, errs)
 
 
 def _load(path: str, errs: list) -> object | None:
@@ -116,6 +176,7 @@ def check_bench(path: str) -> list:
         return errs
     if not isinstance(data, dict) or not isinstance(data.get("runs"), list):
         return [f"{path}: top level must be {{'runs': [...]}}"]
+    seen_rev_name: dict = {}
     for i, run in enumerate(data["runs"]):
         tag = f"{path}: runs[{i}]"
         if not isinstance(run, dict):
@@ -131,6 +192,7 @@ def check_bench(path: str) -> list:
         if not (isinstance(rows, list) and rows):
             errs.append(f"{tag}: rows must be a non-empty list")
             continue
+        in_run: set = set()
         for j, row in enumerate(rows):
             rtag = f"{tag}.rows[{j}]"
             if not isinstance(row, dict):
@@ -139,6 +201,18 @@ def check_bench(path: str) -> list:
             name = row.get("name")
             if not (isinstance(name, str) and name.strip()):
                 errs.append(f"{rtag}: bad name {name!r}")
+            elif name in in_run:
+                errs.append(f"{rtag}: duplicate row {name!r} within the run")
+            else:
+                in_run.add(name)
+                key = (run.get("rev"), name)
+                if key in seen_rev_name:
+                    errs.append(f"{rtag}: duplicate (name, rev) "
+                                f"({name!r}, {run.get('rev')!r}) — already "
+                                f"in {seen_rev_name[key]}; "
+                                "benchmarks/run.py dedupes on append")
+                else:
+                    seen_rev_name[key] = tag
             us = row.get("us")
             if not (isinstance(us, (int, float)) and not isinstance(us, bool)
                     and us > 0 and us == us and us != float("inf")):
@@ -148,6 +222,8 @@ def check_bench(path: str) -> list:
                 errs.append(f"{rtag} ({name!r}): bad derived {derived!r}")
             elif isinstance(name, str) and name.startswith("serve/chaos_"):
                 _check_chaos_row(name, derived, rtag, errs)
+            elif isinstance(name, str) and name.startswith("serve/spec_"):
+                _check_spec_row(name, derived, rtag, errs)
     return errs
 
 
