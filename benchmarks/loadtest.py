@@ -1,0 +1,324 @@
+"""Router load test: heavy-tailed synthetic traffic against the asyncio
+serving frontend (runtime/router.py), with and without injected faults.
+
+The trace is the point: mixed prompt lengths (bucketed one-shot lengths
+plus an odd-length tail that exercises chunked prefill), heavy-tailed
+generation budgets, bursty arrivals (compressed Poisson with geometric
+burst sizes), a sprinkle of deadlines and mid-stream client disconnects.
+Every request must end in a definite terminal status and the page pool
+must drain to zero live pages — with the fault schedule armed
+(``FailureInjector.sampled(chaos_seed)``: device losses + page-pool bit
+flips, replayed through snapshot/restore) as well as without.
+
+Correctness, not just liveness: requests that finish ``ok`` in both legs
+must produce bitwise-identical tokens (greedy serving is schedule- and
+fault-replay-independent), and the plain leg's bucket-length ``ok``
+subset is additionally replayed through ``serve_continuous`` directly and
+compared bitwise (chunked-prefill requests are sequential-decode
+equivalent, not bitwise against the batched prefill — covered by
+tests/test_router.py instead).
+
+Emits ``serve/router_plain`` / ``serve/router_chaos`` BENCH rows
+(p50/p99 end-to-end latency, useful tok/s, refusal rate, slot occupancy,
+page-pool counters) into BENCH_kernels.json via
+``benchmarks.run.append_trajectory``; tools/check_artifacts.py schema-
+gates them and tools/bench_regression.py bounds the p99/p50 ratio and
+the refusal rate.  ``--smoke`` is the CI preset (scripts/ci_smoke.py
+``router``): a mini trace, faults armed, same invariants.
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import time
+
+import numpy as np
+
+
+def make_trace(seed: int, n: int, *, buckets=(4, 8), max_prompt: int = 12,
+               max_new_cap: int = 8, mean_gap_s: float = 0.002):
+    """``n`` request descriptors with arrival offsets.  ~80% of prompts
+    hit a one-shot bucket length, the rest land on odd lengths (chunked
+    prefill); budgets are geometric (heavy tail, clipped to the cap);
+    arrivals are bursty — geometric burst sizes at exponential gaps.  A
+    few requests carry deadlines; a few are marked for mid-stream client
+    disconnect."""
+    rng = np.random.default_rng(seed)
+    buckets = tuple(buckets)
+    odd = [s for s in range(2, max_prompt + 1) if s not in buckets]
+    trace = []
+    t = 0.0
+    i = 0
+    while i < n:
+        burst = min(1 + rng.geometric(0.45), n - i)
+        t += rng.exponential(mean_gap_s) * burst
+        for _ in range(burst):
+            if rng.random() < 0.8 or not odd:
+                S = int(rng.choice(buckets))
+            else:
+                S = int(rng.choice(odd))
+            budget = int(np.clip(rng.geometric(0.35), 1, max_new_cap))
+            req = {"t": t, "prompt": rng.integers(1, 1000, S,
+                                                  dtype=np.int32),
+                   "max_new": budget, "priority": int(rng.random() < 0.1),
+                   "deadline_s": None, "deadline_steps": None,
+                   "disconnect_after": None}
+            u = rng.random()
+            if u < 0.05:
+                req["deadline_steps"] = int(rng.integers(1, 6))
+            elif u < 0.07:
+                req["deadline_s"] = float(rng.uniform(0.2, 2.0))
+            if rng.random() < 0.02 and budget > 2:
+                req["disconnect_after"] = int(rng.integers(1, budget))
+            trace.append(req)
+            i += 1
+    return trace
+
+
+async def _client(router, spec, t0, rec):
+    from repro.runtime.router import Refused
+    await asyncio.sleep(max(0.0, t0 + spec["t"] - time.perf_counter()))
+    rec["t_submit"] = time.perf_counter()
+    try:
+        handle = router.submit(spec["prompt"], spec["max_new"],
+                               deadline_s=spec["deadline_s"],
+                               deadline_steps=spec["deadline_steps"],
+                               priority=spec["priority"])
+    except Refused as e:
+        rec["status"] = "refused"
+        rec["refused_reason"] = e.reason
+        rec["t_end"] = time.perf_counter()
+        return
+    tokens: list = []
+    cut = spec["disconnect_after"]
+    async for kind, val in handle.events():
+        if kind == "token":
+            tokens.append(int(val))
+            if cut is not None and len(tokens) >= cut:
+                handle.cancel()
+        elif kind == "restart":
+            tokens.clear()
+        else:
+            rec["status"] = val
+    rec["tokens"] = tokens
+    rec["t_end"] = time.perf_counter()
+
+
+async def _run_leg(cfg, params, trace, *, injector=None, monitor=None,
+                   snapshot_every=0, slots=4, seg_len=4, page_size=4,
+                   n_pages=None, buckets=(4, 8), chunk_len=4,
+                   max_prompt=12, max_new_cap=8, max_queue=64):
+    from repro.runtime.router import Router
+    router = Router(cfg, params, slots=slots, seg_len=seg_len, kv="int8",
+                    page_size=page_size, n_pages=n_pages, buckets=buckets,
+                    chunk_len=chunk_len, max_prompt=max_prompt,
+                    max_new_cap=max_new_cap, max_queue=max_queue,
+                    prepare=False, injector=injector, monitor=monitor,
+                    snapshot_every=snapshot_every, log=lambda *a: None)
+    await router.start()
+    t0 = time.perf_counter()
+    recs = [{"status": None, "tokens": []} for _ in trace]
+    await asyncio.gather(*[_client(router, s, t0, r)
+                           for s, r in zip(trace, recs)])
+    await router.close("drain")
+    wall = time.perf_counter() - t0
+    return recs, router.stats(), wall
+
+
+def _metrics(recs, stats, wall):
+    from repro.runtime.router import TERMINAL_STATUSES
+    lat = sorted(r["t_end"] - r["t_submit"] for r in recs
+                 if r["status"] not in (None, "refused"))
+    counts = {s: sum(1 for r in recs if r["status"] == s)
+              for s in TERMINAL_STATUSES}
+    n = len(recs)
+    useful = sum(len(r["tokens"]) for r in recs)
+    pct = (lambda q: lat[min(len(lat) - 1, int(q * (len(lat) - 1)))]) \
+        if lat else (lambda q: 0.0)
+    return {
+        "requests": n,
+        "statuses": counts,
+        "p50_ms": pct(0.50) * 1e3,
+        "p99_ms": pct(0.99) * 1e3,
+        "tok_s": useful / wall,
+        "useful_tokens": useful,
+        "refusal_rate": counts["refused"] / max(n, 1),
+        "occupancy": stats["occupancy"],
+        "replays": stats["replays"],
+        "quarantined": stats["counters"]["quarantined"],
+        "pages": stats["pages"],
+        "wall_s": wall,
+    }
+
+
+def _row(kind, tag, m):
+    pg = m["pages"]
+    st = m["statuses"]
+    return {
+        "name": f"serve/router_{kind}/{tag}",
+        "us": m["wall_s"] * 1e6,
+        "derived": (f"p50_ms={m['p50_ms']:.2f};p99_ms={m['p99_ms']:.2f};"
+                    f"tok_s={m['tok_s']:.2f};"
+                    f"refusal_rate={m['refusal_rate']:.4f};"
+                    f"occupancy={m['occupancy']:.3f};"
+                    f"requests={m['requests']};"
+                    f"ok={st['ok']};deadline={st['deadline']};"
+                    f"refused={st['refused']};cancelled={st['cancelled']};"
+                    f"degraded={st['degraded']};"
+                    f"replays={m['replays']};"
+                    f"quarantined={m['quarantined']};"
+                    f"pages_live={pg['live_pages']};"
+                    f"pages_high_water={pg['high_water']};"
+                    f"pages_refusals={pg['refusals']}"),
+    }
+
+
+def _assert_terminal(recs, stats, leg):
+    bad = [i for i, r in enumerate(recs) if r["status"] is None]
+    assert not bad, f"{leg}: requests without terminal status: {bad[:10]}"
+    assert stats["pages"]["live_pages"] == 0, \
+        f"{leg}: page leak at drain: {stats['pages']}"
+
+
+def _check_bitwise(trace, plain, chaos):
+    """Requests ok in both legs must agree bitwise (greedy serving is
+    schedule- and replay-independent)."""
+    both = [i for i in range(len(trace))
+            if plain[i]["status"] == chaos[i]["status"] == "ok"]
+    for i in both:
+        assert plain[i]["tokens"] == chaos[i]["tokens"], (
+            f"request {i}: plain {plain[i]['tokens']} != "
+            f"chaos {chaos[i]['tokens']}")
+    return len(both)
+
+
+def _check_vs_continuous(cfg, params, trace, plain, *, buckets, seg_len,
+                         page_size):
+    """The plain leg's bucket-length ok subset replayed straight through
+    serve_continuous must match bitwise."""
+    from repro.launch.serve import serve_continuous
+    checked = 0
+    for S in buckets:
+        rows = [i for i, s in enumerate(trace)
+                if len(s["prompt"]) == S and plain[i]["status"] == "ok"]
+        if not rows:
+            continue
+        rows = rows[:16]        # a sample per bucket keeps this cheap
+        prompts = np.stack([trace[i]["prompt"] for i in rows])
+        budgets = [trace[i]["max_new"] for i in rows]
+        outs, _ = serve_continuous(
+            cfg, params, prompts, max(budgets), slots=2, seg_len=seg_len,
+            kv="int8", page_size=page_size, max_new=budgets, eos_id=-1,
+            prepare=False, log=lambda *a: None)
+        for j, i in enumerate(rows):
+            assert plain[i]["tokens"] == outs[j].tolist(), (
+                f"request {i} (S={S}): router {plain[i]['tokens']} != "
+                f"serve_continuous {outs[j].tolist()}")
+            checked += 1
+    return checked
+
+
+def run_loadtest(smoke: bool = True, *, requests: int | None = None,
+                 seed: int = 0, chaos_seed: int = 0, arch: str = "qwen3-0.6b",
+                 log=print):
+    """Both legs + invariants; returns (rows, plain_metrics,
+    chaos_metrics).  ``smoke``: mini trace for CI; full mode runs >= 1000
+    requests and the serve_continuous bitwise replay."""
+    import jax
+
+    from repro.configs import get_arch
+    from repro.launch.serve import _place
+    from repro.models import get_model
+    from repro.runtime.failover import FailureInjector
+    from repro.runtime.watchdog import AccuracyWatchdog
+
+    cfg = get_arch(arch).reduced()
+    model = get_model(cfg)
+    params = _place(cfg, model.init_params(cfg, jax.random.PRNGKey(0)),
+                    None, True)
+    n = requests if requests is not None else (24 if smoke else 1000)
+    slots, seg_len, page_size = (2, 2, 4) if smoke else (4, 4, 4)
+    buckets, chunk_len, max_prompt, max_new_cap = (4, 8), 4, 12, 8
+    kn = dict(slots=slots, seg_len=seg_len, page_size=page_size,
+              buckets=buckets, chunk_len=chunk_len, max_prompt=max_prompt,
+              max_new_cap=max_new_cap,
+              max_queue=max(16, n // 4),
+              # an underprovisioned pool so admission control works for a
+              # living: ~half the slots' worth of full-size grants
+              n_pages=slots * ((max_prompt + max_new_cap + chunk_len)
+                               // page_size + 1))
+    trace = make_trace(seed, n, buckets=buckets, max_prompt=max_prompt,
+                       max_new_cap=max_new_cap,
+                       mean_gap_s=0.001 if smoke else 0.002)
+    tag = f"R{n}s{slots}x{max_prompt}+{max_new_cap}"
+
+    # warm the jit caches (one admit per bucket, the extend/segment
+    # programs) so the timed legs measure serving, not compilation
+    log("[loadtest] warmup: compiling admit/extend/segment programs")
+    rng = np.random.default_rng(seed + 1)
+    warm = [{"t": 0.0, "prompt": rng.integers(1, 1000, S, dtype=np.int32),
+             "max_new": 2, "priority": 0, "deadline_s": None,
+             "deadline_steps": None, "disconnect_after": None}
+            for S in tuple(buckets) + (max_prompt - 1,)]
+    asyncio.run(_run_leg(cfg, params, warm, **kn))
+
+    log(f"[loadtest] plain leg: {n} requests")
+    plain, st_p, wall_p = asyncio.run(_run_leg(cfg, params, trace, **kn))
+    _assert_terminal(plain, st_p, "plain")
+    m_plain = _metrics(plain, st_p, wall_p)
+
+    log(f"[loadtest] chaos leg: fault schedule seed={chaos_seed}")
+    segs = max(16, st_p["segments"])
+    inj = FailureInjector.sampled(
+        chaos_seed, segments=segs, slots=slots, n_layers=cfg.n_layers,
+        page_size=page_size, n_kv=cfg.n_kv, head_dim=cfg.head_dim,
+        device_losses=1 if smoke else 3, flips=2 if smoke else 6)
+    chaos, st_c, wall_c = asyncio.run(_run_leg(
+        cfg, params, trace, injector=inj, monitor=AccuracyWatchdog(None),
+        snapshot_every=4, **kn))
+    _assert_terminal(chaos, st_c, "chaos")
+    m_chaos = _metrics(chaos, st_c, wall_c)
+
+    n_both = _check_bitwise(trace, plain, chaos)
+    log(f"[loadtest] bitwise ok-vs-ok agreement: {n_both} requests")
+    if not smoke:
+        n_direct = _check_vs_continuous(cfg, params, trace, plain,
+                                        buckets=buckets, seg_len=seg_len,
+                                        page_size=page_size)
+        log(f"[loadtest] bitwise vs serve_continuous: {n_direct} requests")
+    rows = [_row("plain", tag, m_plain), _row("chaos", tag, m_chaos)]
+    for kind, m in (("plain", m_plain), ("chaos", m_chaos)):
+        log(f"[loadtest] {kind}: p50 {m['p50_ms']:.1f}ms "
+            f"p99 {m['p99_ms']:.1f}ms {m['tok_s']:.1f} tok/s "
+            f"refusal {m['refusal_rate']:.3f} occupancy "
+            f"{m['occupancy']:.2f} statuses {m['statuses']}")
+    return rows, m_plain, m_chaos
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="mini CI trace (scripts/ci_smoke.py router)")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="trace size (default: 24 smoke / 1000 full)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="trace seed (arrivals, lengths, budgets)")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="FailureInjector.sampled seed — reproduce a CI "
+                         "fault schedule exactly")
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--no-append", action="store_true",
+                    help="skip the BENCH_kernels.json append")
+    args = ap.parse_args(argv)
+    rows, _, _ = run_loadtest(args.smoke, requests=args.requests,
+                              seed=args.seed, chaos_seed=args.chaos_seed,
+                              arch=args.arch)
+    if not args.no_append:
+        from benchmarks.run import append_trajectory
+        append_trajectory(rows)
+    for r in rows:
+        print(f"{r['name']},{r['us']:.0f},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

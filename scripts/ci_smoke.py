@@ -31,6 +31,14 @@ Smokes (all interpret-mode, reduced configs):
                      dscim1 verifies, int8 paged KV — the full
                      draft/verify/rollback window machinery under
                      staggered admission and EOS early-exit
+  router             the asyncio serving router under a mini heavy-tailed
+                     load-test trace with the sampled fault schedule
+                     armed (benchmarks/loadtest.py --smoke, ISSUE 8):
+                     asserts every request reaches a definite terminal
+                     status, zero live pages at drain, and ok-vs-ok
+                     bitwise agreement between the plain and chaos legs
+                     (this one dispatches to ``benchmarks.loadtest.main``
+                     rather than ``serve.main``)
 
 Usage:  PYTHONPATH=src python -m scripts.ci_smoke continuous paged-kernel
         PYTHONPATH=src python -m scripts.ci_smoke --list
@@ -61,7 +69,11 @@ SMOKES: dict = {
     "spec": ["--continuous", "--requests", "6", "--batch", "2",
              "--segment-len", "2", "--tokens", "6", "--dscim", _DSCIM,
              *_PAGED, "--spec", "dscim2:4"],
+    "router": ["--smoke", "--no-append"],
 }
+
+# smokes whose preset drives a different entry point than serve.main
+_ENTRY = {"router": "benchmarks.loadtest"}
 
 
 def run(names) -> int:
@@ -73,11 +85,17 @@ def run(names) -> int:
                   file=sys.stderr)
             return 2
         argv = SMOKES[name]
-        print(f"# === ci_smoke {name}: serve {' '.join(argv)} ===",
+        entry = _ENTRY.get(name, "launch.serve")
+        print(f"# === ci_smoke {name}: {entry} {' '.join(argv)} ===",
               flush=True)
-        # --paged-attn is a builder-cache-keyed parameter (not env state),
-        # so chained smokes can A/B read paths without cache hygiene
-        rc = serve.main(argv)
+        if name in _ENTRY:
+            import importlib
+            rc = importlib.import_module(_ENTRY[name]).main(argv)
+        else:
+            # --paged-attn is a builder-cache-keyed parameter (not env
+            # state), so chained smokes can A/B read paths without cache
+            # hygiene
+            rc = serve.main(argv)
         if rc:
             print(f"# ci_smoke {name} FAILED (rc={rc})", file=sys.stderr)
             return rc

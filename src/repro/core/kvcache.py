@@ -59,8 +59,8 @@ import numpy as np
 __all__ = ["quantize_page", "dequantize_page", "paged_from_dense",
            "init_paged_cache", "admit_request", "admit_dense",
            "paged_cache_specs", "kv_cache_bytes", "dense_cache_bytes",
-           "PageAllocator", "n_pages_for", "extract_slot_pages",
-           "insert_slot_pages", "spec_rollback"]
+           "PageAllocator", "n_pages_for", "admission_pages",
+           "extract_slot_pages", "insert_slot_pages", "spec_rollback"]
 
 TAIL_DTYPE = jnp.bfloat16
 
@@ -86,6 +86,18 @@ def dequantize_page(q, scale):
 def n_pages_for(capacity: int, page_size: int) -> int:
     """Logical pages needed for one sequence of ``capacity`` tokens."""
     return -(-capacity // page_size)
+
+
+def admission_pages(prompt_len: int, budget: int, page_size: int,
+                    headroom: int = 0) -> int:
+    """Physical pages one admission must be granted: prompt + generation
+    budget + in-flight headroom (speculative draft positions, chunked-
+    prefill window padding).  The single accounting rule shared by the
+    continuous scheduler (runtime/serving.py) and the router's per-bucket
+    admission control (runtime/router.py) — if the two computed this
+    independently, a drift would show up as mid-stream pool corruption
+    rather than an admission-time refusal."""
+    return n_pages_for(prompt_len + budget + headroom, page_size)
 
 
 def default_page_table(batch: int, max_pages: int):

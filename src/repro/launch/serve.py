@@ -262,9 +262,12 @@ def serve_continuous(cfg, params, prompts: np.ndarray, n_tokens: int, *,
       larger budget; tokens already returned remain valid prefixes.
     * **Deadlines.**  ``deadline_steps`` (R,) — global decode-step budget,
       deterministic and replay-safe (a negative entry = none);
-      ``deadline_s`` (R,) — wall-clock seconds from serve start (<= 0 =
-      none).  Both are checked between segments only: a request can
-      overrun by at most one segment (``seg_len`` steps).
+      ``deadline_s`` (R,) — wall-clock seconds from the request's
+      *admission* (<= 0 = none): a late admission gets its full budget
+      and a queued request never wall-expires (PR 8 — previously
+      measured from serve start, silently shrinking late admissions').
+      Both are checked between segments only: a request can overrun by
+      at most one segment (``seg_len`` steps).
     * **Eviction / re-admission** (``priority`` (R,), int8 KV only).
       When the page pool blocks an admission, live requests of *strictly*
       lower priority are preempted (lowest priority first, youngest on
@@ -435,6 +438,11 @@ def main(argv=None):
                          "macro fault + a deadline expiry over the fault-"
                          "tolerant scheduler, asserting the failure-"
                          "semantics contract end to end")
+    ap.add_argument("--chaos-seed", type=int, default=0, metavar="SEED",
+                    help="--chaos determinism pin: seeds the drill's "
+                         "params/prompts so a CI chaos failure reproduces "
+                         "exactly from the logged seed (default 0, the CI "
+                         "seed)")
     ap.add_argument("--tune", action="store_true",
                     help="consult the fused-kernel tile autotuner (the "
                          "checked-in cache makes this a lookup for the "
@@ -443,7 +451,7 @@ def main(argv=None):
 
     if args.chaos:
         from repro.runtime.serving import chaos_drill
-        chaos_drill(args.arch)
+        chaos_drill(args.arch, seed=args.chaos_seed)
         return 0
     if args.tune:
         import os

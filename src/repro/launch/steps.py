@@ -41,8 +41,8 @@ from repro.parallel import ParallelCtx
 
 __all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
            "make_eval_step", "make_generate_fn", "prepare_serving_params",
-           "make_admit_fn", "make_segment_fn", "init_serve_state",
-           "make_probe_fn"]
+           "make_admit_fn", "make_segment_fn", "make_extend_fn",
+           "init_serve_state", "make_probe_fn"]
 
 
 def prepare_serving_params(cfg: ArchConfig, params,
@@ -755,6 +755,93 @@ def make_segment_fn(cfg: ArchConfig, par: ParallelCtx | None = None,
     # donate the carried state so each segment reuses the KV cache
     # buffers in place (the host loop's donate_argnums=(2,) analogue)
     return jax.jit(segment, donate_argnums=(1,)) if jit else segment
+
+
+@functools.lru_cache(maxsize=16)
+def make_extend_fn(cfg: ArchConfig, par: ParallelCtx | None = None,
+                   chunk_len: int = 16, *, eos_id: int | None = None,
+                   sample: str = "greedy", paged_attn: str = "auto",
+                   jit: bool = True):
+    """One jitted chunked-prefill step for the serving router
+    (runtime/router.py): feed ``chunk_len`` prompt tokens of ONE slot
+    through the batched verify forward (``models.lm.decode_multi``) while
+    every other slot is done-masked (frozen position, writes suppressed —
+    layers/attention.py), then roll the window back to the chunk's real
+    length with the speculative write-then-rollback discipline
+    (``core/kvcache.spec_rollback``).  A prompt of arbitrary length S is
+    admitted as ceil(S / chunk_len) extend calls against ONE compiled
+    program — between calls the router keeps serving decode segments, so
+    a long admission never stalls live slots.
+
+    Position semantics: the slot's KV at positions ``pos .. pos+n_real-1``
+    after the call is bitwise what ``n_real`` successive single-token
+    teacher-forced ``decode`` steps would have written (the decode_multi
+    exact-replay guarantee) — chunked prefill is *sequential-decode*
+    equivalent, not bitwise-equal to the batched full-prompt prefill
+    (XLA reduces the S-position attention in a different order), which is
+    why the router's bucketed one-shot path exists for common lengths.
+    The final chunk may be padded up to ``chunk_len``: pad positions sit
+    causally after every real one, their KV writes are rolled back, and
+    the page a padded flush may have garbage-quantized sits at logical
+    index >= the committed position, where the tail overlay masks it
+    until a later whole-page flush rewrites it (the spec-window
+    argument).
+
+    ``extend(params, state, toks (1, chunk_len) int32, slot, n_real,
+    emit, max_new) -> (state', tok0)``: writes the chunk's KV for
+    ``slot``; under ``emit`` (the last chunk) also samples the first
+    output token from the final real position's logits — one ``nxt``
+    call against the carried key, exactly like ``make_admit_fn`` — and
+    arms the slot (tok/done/n_out=1/max_new).  Non-emitting calls leave
+    the slot done-masked so interleaved segments skip it.  The state is
+    donated; the slot's page-table row must already hold its granted
+    pages (the router writes it host-side at begin-admit)."""
+    from repro.core import kvcache
+    model = get_model(cfg)
+    _check_spec(model, cfg)
+    nxt = _next_fn(_make_sampler(sample))
+    eos = -1 if eos_id is None else eos_id
+    pk = _paged_kernel_flag(paged_attn)
+    pin = {} if pk is None else {"paged_kernel": pk}
+
+    def extend(params, state, toks, slot, n_real, emit, max_new):
+        cache = state["cache"]
+        B = state["tok"].shape[0]
+        rows = jnp.arange(B, dtype=jnp.int32)
+        is_t = rows == slot
+        tokens = jnp.zeros((B, chunk_len), jnp.int32).at[slot].set(toks[0])
+        pos0 = cache["pos"]
+        paged = "k_pages" in cache
+        tails0 = (cache["k_tail"], cache["v_tail"]) if paged else None
+        logits, vcache, win_kv = model.decode_multi(
+            params, cfg, {"tokens": tokens, "done": ~is_t, **pin},
+            cache, par)
+        new_pos = pos0 + jnp.where(is_t, n_real, 0)
+        cache2 = kvcache.spec_rollback(vcache, pos0, new_pos, tails0,
+                                       win_kv)
+        # emission: sample the first output token from the last *real*
+        # position's logits — the chunked-path analogue of admit's
+        # prefill-logits draw; the key is consumed only when emitting
+        # (and never under greedy), keeping the carried chain aligned
+        lg = jax.lax.dynamic_index_in_dim(logits[slot], n_real - 1,
+                                          keepdims=False)
+        tok0, key2 = nxt(lg[None], state["rng"])
+        tok0 = tok0[0]
+        key = jax.tree.map(lambda n, o: jnp.where(emit, n, o),
+                           key2, state["rng"])
+        done0 = jnp.where(emit, (tok0 == eos) | (max_new <= 1), True)
+        old = state["tok"][slot]
+        return dict(
+            state, cache=cache2,
+            tok=state["tok"].at[slot].set(jnp.where(emit, tok0, old)),
+            done=state["done"].at[slot].set(done0),
+            n_out=state["n_out"].at[slot].set(
+                jnp.where(emit, 1, state["n_out"][slot])),
+            max_new=state["max_new"].at[slot].set(
+                jnp.where(emit, max_new, state["max_new"][slot])),
+            rng=key), tok0
+
+    return jax.jit(extend, donate_argnums=(1,)) if jit else extend
 
 
 @functools.lru_cache(maxsize=16)

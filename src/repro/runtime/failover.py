@@ -74,6 +74,55 @@ class FailureInjector:
     macro_fault: str = "stuck:5:24.0"
     fired: set = dataclasses.field(default_factory=set)
 
+    @classmethod
+    def sampled(cls, seed: int, *, segments: int = 64, slots: int = 4,
+                n_layers: int = 2, page_size: int = 8, n_kv: int = 1,
+                head_dim: int = 8, device_losses: int = 1, flips: int = 2,
+                macro_fault: str | None = None) -> "FailureInjector":
+        """A randomized-but-reproducible fault schedule over ``segments``
+        serve segments: ``device_losses`` segment-level device losses,
+        ``flips`` page-pool bit upsets at random (slot, plane, element)
+        addresses, and optionally a persistent stuck-at macro fault armed
+        mid-run.  Everything derives from ``seed`` via one
+        ``np.random.default_rng`` stream, so a chaos-drill or load-test
+        failure reproduces exactly from the logged seed (the
+        ``--chaos-seed`` contract) — same schedule, same addresses."""
+        import numpy as np
+        rng = np.random.default_rng(seed)
+        hi = max(segments, 2)
+        fail_at = tuple(sorted(rng.choice(
+            np.arange(1, hi), size=min(device_losses, hi - 1),
+            replace=False).tolist()))
+        planes = ("k_pages", "v_pages", "k_scale", "v_scale",
+                  "k_tail", "v_tail")
+        page_flips: dict = {}
+        for _ in range(flips):
+            seg = int(rng.integers(1, hi))
+            slot = int(rng.integers(0, slots))
+            plane = planes[int(rng.integers(0, len(planes)))]
+            layer = int(rng.integers(0, n_layers))
+            if plane.endswith("_scale"):
+                index = (layer, 0, int(rng.integers(0, n_kv)))
+                mask = 1 << int(rng.integers(20, 31))      # f32 high bits
+            elif plane.endswith("_tail"):
+                index = (layer, int(rng.integers(0, page_size)),
+                         int(rng.integers(0, n_kv)),
+                         int(rng.integers(0, head_dim)))
+                mask = 1 << int(rng.integers(8, 15))       # bf16 high bits
+            else:
+                index = (layer, 0, int(rng.integers(0, page_size)),
+                         int(rng.integers(0, n_kv)),
+                         int(rng.integers(0, head_dim)))
+                mask = 1 << int(rng.integers(0, 8))        # int8 any bit
+            page_flips.setdefault(seg, ())
+            page_flips[seg] = page_flips[seg] + ((slot, plane, index, mask),)
+        macro_at = None
+        if macro_fault:
+            macro_at = int(rng.integers(1, hi))
+        return cls(fail_at=fail_at, page_flips=page_flips,
+                   macro_fault_at=macro_at,
+                   macro_fault=macro_fault or "stuck:5:24.0")
+
     def maybe_fail(self, step: int):
         if step in self.fail_at and step not in self.fired:
             self.fired.add(step)

@@ -8,11 +8,17 @@ scheduler is behaviourally identical to the PR-4 loop.  The additions are
 host-side policies that act only *between* scan segments:
 
 * **Deadlines** (``deadline_steps`` / ``deadline_s``): per-request decode-
-  step and wall-clock budgets, measured from serve start.  An expired
-  request — live, evicted, or still waiting — is cancelled at the next
-  segment boundary with status ``'deadline'`` and keeps its partial
-  tokens; its slot and physical pages recycle immediately.  Step budgets
-  are deterministic (replay-safe); wall budgets are for production SLOs.
+  step and wall-clock budgets.  Step budgets count from serve start on
+  the global step ledger (deterministic, replay-safe); wall budgets are
+  anchored at each request's *admission* (PR 8 fix — measuring from
+  serve start silently shrank late admissions' budgets), so a queued
+  request never wall-expires and every admitted request gets its full
+  ``deadline_s`` of service regardless of queue position.  An expired
+  request is cancelled at the next segment boundary with status
+  ``'deadline'`` and keeps its partial tokens; its slot and physical
+  pages recycle immediately.  The admission anchor survives eviction
+  round trips (the budget covers the request's whole lifetime, parked
+  time included) and rides the host snapshot through failover replays.
 * **Preemptive eviction + re-admission** (``priority``, int8 KV only):
   when the page pool cannot satisfy an admission, the scheduler may evict
   a live slot of *strictly lower* priority (strictness prevents same-
@@ -68,8 +74,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.kvcache import (PageAllocator, extract_slot_pages,
-                                insert_slot_pages, n_pages_for)
+from repro.core.kvcache import (PageAllocator, admission_pages,
+                                extract_slot_pages, insert_slot_pages,
+                                n_pages_for)
 from repro.launch.steps import (_parse_spec, init_serve_state,
                                 make_admit_fn, make_probe_fn,
                                 make_segment_fn)
@@ -201,6 +208,7 @@ def serve_continuous_ft(cfg, params, prompts: np.ndarray, n_tokens: int, *,
         "slot_req": [-1] * slots, "slot_pages": [None] * slots,
         "slot_seq": [0] * slots,
         "out": [[] for _ in range(R)], "status": [None] * R,
+        "admit_t": [None] * R,
         "next_req": 0, "seq": 0,
         "readmit": [], "evicted": {}, "quarantine": [], "corrupted": [],
         "evicted_ever": [],
@@ -224,8 +232,12 @@ def serve_continuous_ft(cfg, params, prompts: np.ndarray, n_tokens: int, *,
         if dl_steps is not None and dl_steps[r] >= 0 \
                 and host["global_step"] >= int(dl_steps[r]):
             return True
+        # wall budgets anchor at the request's admission, not serve start:
+        # a late admission gets its full budget, and a still-queued
+        # request (admit_t None) never wall-expires
         if dl_secs is not None and dl_secs[r] > 0 \
-                and now - t0 >= float(dl_secs[r]):
+                and host["admit_t"][r] is not None \
+                and now - host["admit_t"][r] >= float(dl_secs[r]):
             return True
         return False
 
@@ -358,8 +370,8 @@ def serve_continuous_ft(cfg, params, prompts: np.ndarray, n_tokens: int, *,
                 rq = host["next_req"]
                 pages = no_pages
                 if alloc is not None:
-                    need = n_pages_for(S + int(budgets[rq]) + k_spec,
-                                       page_size)
+                    need = admission_pages(S, int(budgets[rq]), page_size,
+                                           k_spec)
                     ids = grant(need,
                                 int(prio[rq]) if prio is not None else None)
                     if ids is None:                # pool exhausted: wait
@@ -370,6 +382,7 @@ def serve_continuous_ft(cfg, params, prompts: np.ndarray, n_tokens: int, *,
                     pages = jnp.asarray(ids + [ids[-1]] * (mp - need),
                                         jnp.int32)
                 host["next_req"] = rq + 1
+                host["admit_t"][rq] = time.perf_counter()
                 state, tok0 = admit(params, state,
                                     jnp.asarray(prompts[rq:rq + 1]),
                                     jnp.int32(b), pages,
@@ -385,7 +398,7 @@ def serve_continuous_ft(cfg, params, prompts: np.ndarray, n_tokens: int, *,
                     return state, host, alloc
                 nr = host["next_req"]
                 what = (f"request {nr} "
-                        f"({n_pages_for(S + int(budgets[nr]) + k_spec, page_size)} "
+                        f"({admission_pages(S, int(budgets[nr]), page_size, k_spec)} "
                         "pages needed") if nr < R else \
                     (f"evicted request {host['readmit'][0]} "
                      f"({host['evicted'][host['readmit'][0]]['page_count']}"
@@ -675,6 +688,7 @@ def chaos_drill(arch: str = "qwen3-0.6b", *, seed: int = 0,
             outs[r], outs_ref[r],
             err_msg=f"unaffected request {r} diverged from fault-free run")
     report = {
+        "seed": seed,
         "requests": R, "clean": clean, "affected": sorted(affected),
         "replays": stats["replays"], "probes": stats["probes"],
         "probe_trips": stats["probe_trips"],

@@ -81,6 +81,53 @@ def test_page_allocator_snapshot_roundtrip():
     assert PageAllocator.from_snapshot(snap2).free_pages == 0
 
 
+def test_page_allocator_random_schedule_properties():
+    """Property-style hammer (ISSUE 8 satellite): random grant / free /
+    snapshot-restore schedules checked against a reference model after
+    every op.  Invariants: a grant never overlaps live pages (the
+    double-grant corruption), free-page accounting is exact, high-water
+    is the monotone peak of concurrent live pages, refusals are counted
+    (not silently retried), a snapshot round-trip is behaviour-preserving
+    mid-schedule, and a full drain leaks nothing — the whole pool
+    re-allocates."""
+    for seed in range(5):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(4, 33))
+        a = PageAllocator(n)
+        grants, live = [], set()      # the reference model
+        peak = refusals = 0
+        for _ in range(300):
+            op = rng.random()
+            if op < 0.5:
+                k = int(rng.integers(1, max(2, n // 2)))
+                ids = a.alloc(k)
+                if k > n - len(live):
+                    assert ids is None
+                    refusals += 1
+                else:
+                    assert ids is not None and len(set(ids)) == k
+                    assert all(0 <= i < n for i in ids)
+                    assert not set(ids) & live, "double grant"
+                    live.update(ids)
+                    grants.append(ids)
+                    peak = max(peak, len(live))
+            elif op < 0.85 and grants:
+                g = grants.pop(int(rng.integers(len(grants))))
+                a.free(g)
+                live.difference_update(g)
+            else:
+                a = PageAllocator.from_snapshot(a.snapshot())
+            assert a.free_pages == n - len(live)
+            st = a.stats()
+            assert st["live_pages"] == len(live)
+            assert st["high_water"] == peak
+            assert st["refusals"] == refusals
+        for g in grants:
+            a.free(g)
+        assert a.free_pages == n and a.stats()["live_pages"] == 0
+        assert sorted(a.alloc(n)) == list(range(n))
+
+
 def test_slot_page_blob_roundtrip():
     """extract_slot_pages -> insert_slot_pages restores a slot's share of
     the pool (pages, scales, tail, page-table row, position) bit-exactly
@@ -331,6 +378,52 @@ def test_deadline_expired_while_waiting():
                                    deadline_steps=dl)
     assert stats["status"][3] == STATUS_DEADLINE and len(outs[3]) == 0
     assert stats["status"][:3] == [STATUS_OK] * 3
+
+
+class _FakeClock:
+    """Deterministic stand-in for the ``time`` module inside
+    runtime/serving.py: every ``perf_counter()`` call advances one fake
+    second, so queue time and service time become countable quantities
+    instead of scheduler-speed noise."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def perf_counter(self) -> float:
+        self.t += 1.0
+        return self.t
+
+
+def test_deadline_s_anchors_at_admission(monkeypatch):
+    """Staggered admission under a wall budget (ISSUE 8 satellite): with
+    one slot, request 1 queues behind request 0's 16-token stream — over
+    8 engine rounds (= 8 fake seconds) of waiting.  Its 6-second wall
+    budget must anchor at *admission*: service itself takes ~3 rounds, so
+    it completes 'ok'.  Anchoring at serve start (the pre-fix behaviour)
+    would have expired it in the queue.  A genuinely tight post-admission
+    budget still expires with partial output."""
+    import repro.runtime.serving as serving
+    cfg, model, params = _setup()
+    prompts = np.random.default_rng(0).integers(0, cfg.vocab, (2, 8),
+                                                dtype=np.int32)
+    budgets = np.array([16, 6], np.int32)
+
+    def run(dl1):
+        monkeypatch.setattr(serving, "time", _FakeClock())
+        dl = np.array([-1.0, dl1], np.float64)
+        return serve_continuous(cfg, params, prompts, 16, slots=1,
+                                seg_len=2, max_new=budgets, eos_id=-1,
+                                kv="int8", page_size=4, deadline_s=dl)
+
+    outs, stats = run(6.0)
+    assert stats["status"] == [STATUS_OK, STATUS_OK], stats["status"]
+    assert stats["deadline_cancelled"] == 0
+    assert [len(o) for o in outs] == budgets.tolist()
+
+    outs, stats = run(0.5)           # < 1 fake second: expires in service
+    assert stats["status"] == [STATUS_OK, STATUS_DEADLINE]
+    assert stats["deadline_cancelled"] == 1
+    assert 0 < len(outs[1]) < int(budgets[1])     # partial tokens kept
 
 
 # --------------------------------------------------------------------------

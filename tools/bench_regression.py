@@ -47,6 +47,18 @@ draft cache, a desynced operating point, an estimator change that
 silently decorrelates dscim2 from dscim1) shows up as a rate collapse
 long before it shows up in tok/s.
 
+The ISSUE 8 leg replays the mini router load test
+(benchmarks/loadtest.py ``run_loadtest(smoke=True)`` — plain + sampled-
+fault legs, every-request-terminates and zero-live-pages asserted inside)
+and bounds two service-shaped regressions: the worst-leg p99/p50 latency
+ratio at ``router_p99_p50_ratio_max`` (a head-of-line collapse — one
+chunked admission or a failover replay stalling the whole decode plane —
+shows up as p99 exploding while p50 stays flat; the bound is generous
+because a single injected device-loss replay legitimately stretches the
+chaos leg's tail at CI shapes) and the refusal rate at
+``router_refusal_rate_max`` (admission control that starts refusing the
+majority of a modest trace is broken backpressure, not load shedding).
+
 Usage:  PYTHONPATH=src python -m tools.bench_regression [--smoke]
 (--smoke shortens the trace; CI passes it.)  Exit 0 on pass, 1 on drift.
 """
@@ -161,6 +173,21 @@ def _spec_acceptance(smoke: bool):
     return match, rate
 
 
+def _router_loadtest(smoke: bool):
+    """(worst-leg p99/p50 ratio, worst-leg refusal rate) from the mini
+    router load test (ISSUE 8).  run_loadtest itself hard-asserts the
+    liveness contract (every request terminal, zero live pages at drain,
+    ok-vs-ok bitwise agreement between legs); this leg adds the bounded
+    service metrics on top."""
+    sys.path.insert(0, REPO)        # benchmarks/ package, as CI runs it
+    from benchmarks.loadtest import run_loadtest
+    _, m_plain, m_chaos = run_loadtest(True, log=lambda *a: None)
+    ratio = max(m["p99_ms"] / max(m["p50_ms"], 1e-9)
+                for m in (m_plain, m_chaos))
+    refusal = max(m["refusal_rate"] for m in (m_plain, m_chaos))
+    return ratio, refusal
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -209,6 +236,23 @@ def main(argv=None) -> int:
     if rate < rate_min:
         print("BENCH REGRESSION: greedy self-spec acceptance rate "
               "collapsed below its bound", file=sys.stderr)
+        ok = False
+
+    tail, refusal = _router_loadtest(args.smoke)
+    tail_max = th["router_p99_p50_ratio_max"]
+    refusal_max = th["router_refusal_rate_max"]
+    print(f"router load test: p99/p50 ratio {tail:.2f} (threshold "
+          f"{tail_max}), refusal rate {refusal:.3f} "
+          f"(threshold {refusal_max})")
+    if tail > tail_max:
+        print("BENCH REGRESSION: router tail latency collapsed — p99/p50 "
+              "exceeded its bound (head-of-line blocking?)",
+              file=sys.stderr)
+        ok = False
+    if refusal > refusal_max:
+        print("BENCH REGRESSION: router refusal rate exceeded its bound — "
+              "admission control is shedding most of a modest trace",
+              file=sys.stderr)
         ok = False
     return 0 if ok else 1
 

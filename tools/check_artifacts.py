@@ -41,6 +41,15 @@ Checks (no third-party deps — stdlib json only):
   into the bench; spec_continuous rows carry the allocator counters
   (``pages_live``/``pages_high_water``/``pages_refusals``) like
   chaos_monitored.
+* serve/router_* rows (ISSUE 8): the async-router load-test rows
+  (benchmarks/loadtest.py) need the latency percentiles
+  (``p50_ms``/``p99_ms``) and ``tok_s`` finite positive,
+  ``refusal_rate`` in [0, 1], the status ledger (``ok``/``deadline``/
+  ``refused``/``cancelled``/``degraded``) as non-negative ints summing
+  to ``requests`` (the every-request-terminates contract, checked at
+  rest), ``replays``/``quarantined`` counters, and the allocator
+  counters with ``pages_live=0`` — router rows are recorded after
+  drain, so any live page is a leak.
 * No duplicate rows (ISSUE 7 satellite): a row name may appear at most
   once per run, and a (name, rev) pair at most once across the whole
   trajectory — benchmarks/run.py dedupes on append (newest run wins), so
@@ -157,6 +166,45 @@ def _check_spec_row(name: str, derived: str, rtag: str, errs: list):
         _check_page_stats(name, f, rtag, errs)
 
 
+def _check_router_row(name: str, derived: str, rtag: str, errs: list):
+    """ISSUE 8: typed schema for serve/router_* load-test rows
+    (benchmarks/loadtest.py).  Every row must carry the latency
+    percentiles, throughput, a refusal rate in [0, 1], the request/status
+    ledger (statuses summing to requests — a request that vanished
+    without a terminal status would break the sum), and drained page-pool
+    counters with pages_live == 0."""
+    f = _derived_fields(derived)
+    for key in ("p50_ms", "p99_ms", "tok_s"):
+        if not _pos_float(f.get(key)):
+            errs.append(f"{rtag} ({name!r}): router row needs a finite "
+                        f"positive {key}, got {f.get(key)!r}")
+    try:
+        rate = float(f.get("refusal_rate"))
+    except (TypeError, ValueError):
+        rate = -1.0
+    if not 0.0 <= rate <= 1.0:
+        errs.append(f"{rtag} ({name!r}): refusal_rate must be in [0, 1], "
+                    f"got {f.get('refusal_rate')!r}")
+    statuses = ("ok", "deadline", "refused", "cancelled", "degraded")
+    for key in ("requests", "replays", "quarantined") + statuses:
+        if not _nonneg_int(f.get(key)):
+            errs.append(f"{rtag} ({name!r}): router row needs non-negative "
+                        f"int {key}, got {f.get(key)!r}")
+    try:
+        if sum(int(f[s]) for s in statuses) != int(f["requests"]):
+            errs.append(f"{rtag} ({name!r}): terminal statuses must sum to "
+                        f"requests (every request ends definitely), got "
+                        + ";".join(f"{s}={f[s]}" for s in statuses)
+                        + f" vs requests={f['requests']}")
+    except (KeyError, TypeError, ValueError):
+        pass                        # already reported above
+    _check_page_stats(name, f, rtag, errs)
+    if f.get("pages_live") not in (None, "0"):
+        errs.append(f"{rtag} ({name!r}): router rows are recorded after "
+                    f"drain — pages_live must be 0, got "
+                    f"{f.get('pages_live')!r} (page leak)")
+
+
 def _load(path: str, errs: list) -> object | None:
     if not os.path.exists(path):
         errs.append(f"{path}: missing")
@@ -224,6 +272,8 @@ def check_bench(path: str) -> list:
                 _check_chaos_row(name, derived, rtag, errs)
             elif isinstance(name, str) and name.startswith("serve/spec_"):
                 _check_spec_row(name, derived, rtag, errs)
+            elif isinstance(name, str) and name.startswith("serve/router_"):
+                _check_router_row(name, derived, rtag, errs)
     return errs
 
 
