@@ -467,6 +467,82 @@ def _chaos_rows(cfg, params, smoke):
     return rows
 
 
+def _integrity_rows(cfg, params, smoke):
+    """ISSUE 9 rows: cost and coverage of the checksummed-state integrity
+    layer.  The same continuous queue is served with ``integrity='off'``
+    and ``integrity='scrub:2'`` — no faults injected, so
+    ``overhead_vs_off`` is pure scrubbing cost (digest plane upkeep in
+    the jitted write paths + the boundary sweeps), the ratio
+    tools/bench_regression.py bounds in CI.  Full mode adds a counters
+    row from the self-verifying integrity drill (runtime/serving.py
+    ``integrity_drill``: scripted page + weight-plane flips, exact-
+    coordinate detection, bitwise-identical repaired outputs)."""
+    from repro.launch.serve import serve_continuous
+    from repro.runtime.serving import integrity_drill
+    n_tokens = 4 if smoke else 16
+    slots = 2 if smoke else 4
+    R = 4 if smoke else 8
+    seg_len = 4
+    prompt_len = 8
+    reps = 1 if smoke else 3
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, (R, prompt_len), dtype=np.int32)
+    budgets = np.linspace(2, n_tokens, R).round().astype(np.int32)
+    rng.shuffle(budgets)
+    useful = int(budgets.sum())
+    tag = f"{DSCIM}/R{R}s{slots}x{prompt_len}+{n_tokens}"
+    knobs = dict(slots=slots, seg_len=seg_len, max_new=budgets, eos_id=-1,
+                 kv="int8", page_size=4, prepare=False)
+
+    def off():
+        return serve_continuous(cfg, params, prompts, n_tokens, **knobs)[0]
+
+    ig_stats = {}
+
+    def scrubbed():
+        outs, st = serve_continuous(cfg, params, prompts, n_tokens,
+                                    **knobs, integrity="scrub:2")
+        ig_stats.update(st["integrity"])
+        return outs
+
+    us_off = timed(off, n=reps)
+    us_scrub = timed(scrubbed, n=reps)
+    shared = f"useful_tokens={useful};period=2"
+    rows = [{
+        "name": f"serve/integrity_off/{tag}",
+        "us": us_off,
+        "derived": f"tok_s={useful / us_off * 1e6:.1f};{shared}",
+    }, {
+        "name": f"serve/integrity_scrub/{tag}",
+        "us": us_scrub,
+        "derived": (f"tok_s={useful / us_scrub * 1e6:.1f};"
+                    f"overhead_vs_off={us_scrub / us_off:.3f};"
+                    f"checks={ig_stats['checks']};"
+                    f"pages_verified={ig_stats['pages_verified']};"
+                    f"weight_planes_verified="
+                    f"{ig_stats['weight_planes_verified']};"
+                    f"mismatches={ig_stats['page_mismatches'] + ig_stats['weight_mismatches']};"
+                    f"repairs={ig_stats['page_repairs'] + ig_stats['weight_repairs']};"
+                    f"scrub_time_us={ig_stats['scrub_time_s'] * 1e6:.0f};"
+                    f"{shared}"),
+    }]
+    if not smoke:
+        import time
+        t0 = time.perf_counter()
+        rep = integrity_drill(log=lambda *a, **k: None)
+        us_drill = (time.perf_counter() - t0) * 1e6
+        rows.append({
+            "name": "serve/integrity_drill/kernel:dscim2:64/R6s3x8+8",
+            "us": us_drill,
+            "derived": (f"requests={rep['requests']};"
+                        f"page_repairs={rep['leg1']['page_repairs']};"
+                        f"weight_repairs={rep['leg1']['weight_repairs'] + rep['leg2']['weight_repairs']};"
+                        f"replays={rep['leg1']['replays'] + rep['leg2']['replays']};"
+                        f"checks={rep['leg1']['checks'] + rep['leg2']['checks']};"
+                        f"scrub_period={rep['scrub_period']}")})
+    return rows
+
+
 def run(smoke: bool = False):
     from repro.configs import get_arch
     from repro.launch.steps import prepare_serving_params
@@ -480,6 +556,7 @@ def run(smoke: bool = False):
     rows += _queue_rows(cfg, params, smoke)
     rows += _spec_rows(cfg, params, smoke)
     rows += _chaos_rows(cfg, params, smoke)
+    rows += _integrity_rows(cfg, params, smoke)
     cfg_float = dataclasses.replace(cfg, dscim="off")
     params_float = model.init_params(cfg_float, jax.random.PRNGKey(0))
     rows += _paged_kv_rows(cfg_float, params_float, smoke)

@@ -31,6 +31,17 @@ Smokes (all interpret-mode, reduced configs):
                      dscim1 verifies, int8 paged KV — the full
                      draft/verify/rollback window machinery under
                      staggered admission and EOS early-exit
+  integrity          continuous int8 paged serving with checksummed-state
+                     integrity checks armed (--integrity scrub:2, ISSUE 9)
+                     under the sampled chaos schedule (--sampled-chaos
+                     --chaos-seed 21): device losses + page/weight bit
+                     upsets detected, repaired, and replayed in-run
+  integrity-drill    the self-verifying integrity drill
+                     (runtime/serving.py integrity_drill): scripted page
+                     and weight-plane flips under scrub:2; asserts exact-
+                     coordinate detection, surgical repair, zero ladder
+                     escalations, and bitwise-identical outputs vs the
+                     fault-free run
   router             the asyncio serving router under a mini heavy-tailed
                      load-test trace with the sampled fault schedule
                      armed (benchmarks/loadtest.py --smoke, ISSUE 8):
@@ -66,6 +77,11 @@ SMOKES: dict = {
                           "--dscim", _DSCIM, "--mesh", "model=4", *_PAGED,
                           "--paged-attn", "kernel"],
     "chaos": ["--chaos"],
+    "integrity": ["--continuous", "--requests", "6", "--batch", "2",
+                  "--segment-len", "2", "--tokens", "6", "--dscim", _DSCIM,
+                  *_PAGED, "--integrity", "scrub:2", "--sampled-chaos",
+                  "--chaos-seed", "21"],
+    "integrity-drill": ["--integrity-drill"],
     "spec": ["--continuous", "--requests", "6", "--batch", "2",
              "--segment-len", "2", "--tokens", "6", "--dscim", _DSCIM,
              *_PAGED, "--spec", "dscim2:4"],

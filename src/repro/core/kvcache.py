@@ -60,9 +60,110 @@ __all__ = ["quantize_page", "dequantize_page", "paged_from_dense",
            "init_paged_cache", "admit_request", "admit_dense",
            "paged_cache_specs", "kv_cache_bytes", "dense_cache_bytes",
            "PageAllocator", "n_pages_for", "admission_pages",
-           "extract_slot_pages", "insert_slot_pages", "spec_rollback"]
+           "extract_slot_pages", "insert_slot_pages", "spec_rollback",
+           "page_checksums", "refresh_page_checksums", "CHECKSUM_KEY"]
 
 TAIL_DTYPE = jnp.bfloat16
+
+# integrity layer (ISSUE 9): the per-physical-page checksum plane rides
+# the cache dict under this key — (L, P) uint32, one digest per (layer,
+# physical page) over the int8 planes and the bitcast f32 scales.  It is
+# created only under ``init_paged_cache(..., integrity=True)`` so the
+# default cache pytree (and every jitted program traced against it) is
+# byte-for-byte the pre-integrity layout.
+CHECKSUM_KEY = "page_sum"
+_CSUM_MULT = np.uint32(2654435761)        # Knuth's golden-ratio multiplier
+
+
+def _csum_u32(x):
+    """uint32 view of a plane for checksumming: integer dtypes widen,
+    float dtypes go through a same-width bitcast (bit-exact, so a digest
+    mismatch localizes a *bit* flip, not a value drift)."""
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        bits = {2: jnp.uint16, 4: jnp.uint32}[jnp.dtype(x.dtype).itemsize]
+        x = jax.lax.bitcast_convert_type(x, bits)
+    return x.astype(jnp.uint32)
+
+
+def _csum_fold(x, n_lead: int, mult: int):
+    """Weighted modular sum over everything past the leading ``n_lead``
+    axes: sum((2i+1) * GOLD * mult * x_i) mod 2**32.  Every per-element
+    weight is odd, hence invertible mod 2**32 — a change to any single
+    element (any bit, the sign bit of a f32 scale included) always moves
+    the digest; ``mult`` (odd, distinct per plane) stops a flip in one
+    plane cancelling against a flip at the same offset in another."""
+    lead = x.shape[:n_lead]
+    flat = _csum_u32(x).reshape(*lead, -1)
+    n = flat.shape[-1]
+    w = (2 * jnp.arange(n, dtype=jnp.uint32) + 1) \
+        * _CSUM_MULT * jnp.uint32(mult)
+    return jnp.sum(flat * w, axis=-1)
+
+
+def page_checksums(k_pages, v_pages, k_scale, v_scale):
+    """Per-(layer, page) uint32 digest of the quantized pool state:
+    k/v int8 planes (L, P, ps, KV, HD) + bitcast f32 scales (L, P, KV)
+    -> (L, P) uint32.  Deterministic integer arithmetic, so the digest of
+    a page is a pure function of its bits — recomputing it over live
+    planes and comparing against the stored ``page_sum`` plane detects
+    any single-element corruption at an exact (layer, page) coordinate
+    (runtime/integrity.py)."""
+    return (_csum_fold(k_pages, 2, 1) + _csum_fold(v_pages, 2, 3)
+            + _csum_fold(k_scale, 2, 5) + _csum_fold(v_scale, 2, 7))
+
+
+def _update_page_sums(cache, phys):
+    """Refresh the ``page_sum`` plane for the physical pages ``phys`` (any
+    shape; flattened) from the pool's *current* contents.  No-op when the
+    cache was built without the integrity plane.  Called after every bulk
+    page write (``_scatter_pages``, ``insert_slot_pages``) so the stored
+    digests always describe the bits actually resident."""
+    if CHECKSUM_KEY not in cache:
+        return cache
+    idx = jnp.asarray(phys, jnp.int32).reshape(-1)
+    s = page_checksums(cache["k_pages"][:, idx], cache["v_pages"][:, idx],
+                       cache["k_scale"][:, idx], cache["v_scale"][:, idx])
+    return dict(cache, **{CHECKSUM_KEY:
+                          cache[CHECKSUM_KEY].at[:, idx].set(s)})
+
+
+def refresh_page_checksums(cache, pos0, upper, max_span: int):
+    """Re-digest every physical page a decode segment may have flushed.
+
+    Tail pages quantize-and-flush *inside* the jitted segment scan
+    (layers/attention.py), per layer, per step — threading the checksum
+    plane through those write sites would touch every attention variant.
+    Instead the segment builders (launch/steps.py) call this once after
+    the scan: any logical page whose last token index lies in
+    ``[pos0, upper)`` was completely filled during the segment, so its
+    digest is recomputed from the live pool bits.
+
+    ``pos0`` (B,) committed positions entering the segment, ``upper`` (B,)
+    one past the highest position the segment may have written (includes
+    speculative draft overhang), ``max_span`` a *static* bound on
+    ``upper - pos0`` sizing the candidate window.  Done/idle slots pass an
+    empty range and refresh nothing.  Recomputing from live content is
+    self-consistent by construction: a page flushed then superseded (e.g.
+    a rejected speculative window rewritten by ``spec_rollback``-adjacent
+    logic) digests to whatever is actually resident."""
+    if CHECKSUM_KEY not in cache:
+        return cache
+    table = cache["page_table"]
+    mp = table.shape[1]
+    P, ps = cache["k_pages"].shape[1:3]
+    J = max_span // ps + 2
+    js = pos0[:, None] // ps + jnp.arange(J, dtype=jnp.int32)[None, :]
+    last_tok = js * ps + (ps - 1)                       # (B, J)
+    hit = (last_tok >= pos0[:, None]) & (last_tok < upper[:, None]) \
+        & (js < mp)
+    phys = jnp.take_along_axis(table, jnp.minimum(js, mp - 1), axis=1)
+    idx = jnp.where(hit, phys, P).reshape(-1)           # P == out-of-range
+    safe = jnp.minimum(idx, P - 1)
+    s = page_checksums(cache["k_pages"][:, safe], cache["v_pages"][:, safe],
+                       cache["k_scale"][:, safe], cache["v_scale"][:, safe])
+    return dict(cache, **{CHECKSUM_KEY:
+                          cache[CHECKSUM_KEY].at[:, idx].set(
+                              s, mode="drop")})
 
 
 def quantize_page(x):
@@ -96,7 +197,21 @@ def admission_pages(prompt_len: int, budget: int, page_size: int,
     continuous scheduler (runtime/serving.py) and the router's per-bucket
     admission control (runtime/router.py) — if the two computed this
     independently, a drift would show up as mid-stream pool corruption
-    rather than an admission-time refusal."""
+    rather than an admission-time refusal.
+
+    Non-positive ``page_size``/``budget`` raise instead of silently
+    returning a nonsense page count (``page_size <= 0`` used to divide by
+    zero or flip the ceiling-division sign; ``budget <= 0`` means the
+    request can never emit a token, so its admission is a caller bug)."""
+    if page_size <= 0:
+        raise ValueError(f"admission_pages: page_size must be positive, "
+                         f"got {page_size}")
+    if budget <= 0:
+        raise ValueError(f"admission_pages: generation budget must be "
+                         f"positive, got {budget}")
+    if prompt_len < 0 or headroom < 0:
+        raise ValueError(f"admission_pages: prompt_len/headroom must be "
+                         f">= 0, got {prompt_len}/{headroom}")
     return n_pages_for(prompt_len + budget + headroom, page_size)
 
 
@@ -109,13 +224,18 @@ def default_page_table(batch: int, max_pages: int):
 
 
 def init_paged_cache(n_layers: int, batch: int, n_pages: int, page_size: int,
-                     max_pages: int, n_kv: int, head_dim: int):
+                     max_pages: int, n_kv: int, head_dim: int,
+                     integrity: bool = False):
     """Empty pool + idle slots (pos 0, slot-major default page table,
     clamped into the pool so an undersized pool — n_pages < batch *
     max_pages, legal for the continuous scheduler — never leaves idle
-    slots gathering out of bounds before their first admission)."""
+    slots gathering out of bounds before their first admission).
+
+    ``integrity=True`` adds the ``page_sum`` digest plane (initialized
+    consistent with the zero/ones pool, so a verify pass is clean from
+    step 0); the default pytree is unchanged."""
     table = jnp.minimum(default_page_table(batch, max_pages), n_pages - 1)
-    return {
+    cache = {
         "k_pages": jnp.zeros((n_layers, n_pages, page_size, n_kv, head_dim),
                              jnp.int8),
         "v_pages": jnp.zeros((n_layers, n_pages, page_size, n_kv, head_dim),
@@ -129,6 +249,11 @@ def init_paged_cache(n_layers: int, batch: int, n_pages: int, page_size: int,
         "page_table": table,
         "pos": jnp.zeros((batch,), jnp.int32),
     }
+    if integrity:
+        cache[CHECKSUM_KEY] = page_checksums(
+            cache["k_pages"], cache["v_pages"],
+            cache["k_scale"], cache["v_scale"])
+    return cache
 
 
 def _scatter_pages(cache, ks, vs, phys):
@@ -136,12 +261,13 @@ def _scatter_pages(cache, ks, vs, phys):
     into the pool at physical indices ``phys`` (..., nf)."""
     qk, sk = quantize_page(ks)
     qv, sv = quantize_page(vs)
-    return dict(
+    out = dict(
         cache,
         k_pages=cache["k_pages"].at[:, phys].set(qk),
         v_pages=cache["v_pages"].at[:, phys].set(qv),
         k_scale=cache["k_scale"].at[:, phys].set(sk),
         v_scale=cache["v_scale"].at[:, phys].set(sv))
+    return _update_page_sums(out, phys)
 
 
 def paged_from_dense(ks, vs, page_size: int, n_pages: int | None = None,
@@ -225,14 +351,14 @@ def admit_dense(cache, ks1, vs1, slot):
 
 
 def paged_cache_specs(cfg, batch: int, capacity: int, page_size: int,
-                      n_pages: int | None = None):
+                      n_pages: int | None = None, integrity: bool = False):
     """ShapeDtypeStruct tree of the paged cache (sharding-rule input)."""
     mp = n_pages_for(capacity, page_size)
     if n_pages is None:
         n_pages = batch * mp
     f = jax.ShapeDtypeStruct
     L, KV, HD = cfg.n_layers, cfg.n_kv, cfg.head_dim
-    return {
+    specs = {
         "k_pages": f((L, n_pages, page_size, KV, HD), jnp.int8),
         "v_pages": f((L, n_pages, page_size, KV, HD), jnp.int8),
         "k_scale": f((L, n_pages, KV), jnp.float32),
@@ -242,6 +368,9 @@ def paged_cache_specs(cfg, batch: int, capacity: int, page_size: int,
         "page_table": f((batch, mp), jnp.int32),
         "pos": f((batch,), jnp.int32),
     }
+    if integrity:
+        specs[CHECKSUM_KEY] = f((L, n_pages), jnp.uint32)
+    return specs
 
 
 def _nbytes(spec) -> int:
@@ -250,8 +379,11 @@ def _nbytes(spec) -> int:
 
 def kv_cache_bytes(cache_or_specs) -> int:
     """Resident decode-cache bytes (pages + scales + tails + page table;
-    the per-slot positions are bookkeeping, not cache traffic)."""
-    tree = {k: v for k, v in cache_or_specs.items() if k != "pos"}
+    the per-slot positions and the integrity digest plane are
+    bookkeeping, not cache traffic — excluding ``page_sum`` keeps byte
+    accounting comparable across integrity on/off)."""
+    skip = {"pos", CHECKSUM_KEY}
+    tree = {k: v for k, v in cache_or_specs.items() if k not in skip}
     return sum(_nbytes(v) for v in jax.tree.leaves(tree))
 
 
@@ -334,7 +466,15 @@ class PageAllocator:
         return len(self._free)
 
     def alloc(self, n: int):
-        """n physical page ids, or None if the pool can't cover them."""
+        """n physical page ids, or None if the pool can't cover them.
+        ``n <= 0`` raises: a zero/negative grant is always a caller
+        accounting bug (``admission_pages`` never returns one), and
+        ``alloc(0) -> []`` would read as a successful admission that
+        owns no pages — the slot's first tail flush would then scatter
+        through an unowned page-table row."""
+        if n <= 0:
+            raise ValueError(
+                f"PageAllocator.alloc: page count must be positive, got {n}")
         if n > len(self._free):
             self._refusals += 1
             return None
@@ -423,7 +563,7 @@ def insert_slot_pages(cache, slot: int, page_ids, blob: dict):
     mp = cache["page_table"].shape[1]
     row = jnp.asarray(ids + [ids[-1]] * (mp - len(ids)), jnp.int32)
     idx = jnp.asarray(ids, jnp.int32)
-    return dict(
+    out = dict(
         cache,
         k_pages=cache["k_pages"].at[:, idx].set(jnp.asarray(blob["k_pages"])),
         v_pages=cache["v_pages"].at[:, idx].set(jnp.asarray(blob["v_pages"])),
@@ -435,3 +575,4 @@ def insert_slot_pages(cache, slot: int, page_ids, blob: dict):
             jnp.asarray(blob["v_tail"]).astype(cache["v_tail"].dtype)),
         page_table=cache["page_table"].at[slot].set(row),
         pos=cache["pos"].at[slot].set(blob["pos"]))
+    return _update_page_sums(out, idx)

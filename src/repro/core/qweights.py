@@ -34,13 +34,17 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .quant import quantize_int8
 
 __all__ = ["QuantizedLinearWeight", "prepare_linear_weight",
            "dequantize_linear_weight", "prepare_dscim_params",
            "qweight_replicated_specs", "split_dscim_mode", "path_str",
-           "ELIGIBLE_PATTERNS", "ATTN_PATTERNS"]
+           "ELIGIBLE_PATTERNS", "ATTN_PATTERNS",
+           "plane_digest", "iter_qweight_planes", "weight_plane_index",
+           "weight_plane_digests", "golden_weight_copy",
+           "restore_weight_plane"]
 
 
 @jax.tree_util.register_pytree_node_class
@@ -155,6 +159,90 @@ def split_dscim_mode(spec: str) -> tuple[str, bool]:
     if mode.endswith("+attn"):
         return mode[:-len("+attn")], True
     return mode, False
+
+
+# --- integrity digests (ISSUE 9) -----------------------------------------
+# A prepared model's int8 planes and f32 scales are static for the whole
+# serve lifetime — the software twin of the paper's programmed CIM array —
+# so one digest per plane, computed at prepare time, detects any later
+# in-memory bit flip deterministically.  Raw float leaves (norms, the
+# embedding lookup) are NOT covered here: they change under no-op dtype
+# casts and are the accuracy watchdog's statistical territory instead
+# (docs/serving.md "Fault model & integrity contract").
+
+_DIGEST_MULT = np.uint32(2654435761)      # Knuth multiplier, as kvcache
+
+
+def plane_digest(x):
+    """uint32 digest of one array: sum((2i+1) * GOLD * x_i) mod 2**32 over
+    the flattened uint view (floats bitcast same-width).  Odd per-element
+    weights are invertible mod 2**32, so a change to any single element —
+    any bit, f32 sign bit included — always moves the digest."""
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        bits = {2: jnp.uint16, 4: jnp.uint32}[jnp.dtype(x.dtype).itemsize]
+        x = jax.lax.bitcast_convert_type(x, bits)
+    flat = x.reshape(-1).astype(jnp.uint32)
+    w = (2 * jnp.arange(flat.shape[0], dtype=jnp.uint32) + 1) * _DIGEST_MULT
+    return jnp.sum(flat * w)
+
+
+def iter_qweight_planes(params):
+    """Deterministic (path, 'q'|'scale', array) walk over every prepared
+    ``QuantizedLinearWeight`` in ``params`` — the canonical plane order
+    shared by digest sweeps, golden copies, and mismatch attribution."""
+    leaves = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=lambda x: isinstance(x, QuantizedLinearWeight))[0]
+    out = []
+    for path, leaf in leaves:
+        if isinstance(leaf, QuantizedLinearWeight):
+            p = path_str(path)
+            out.append((p, "q", leaf.q))
+            out.append((p, "scale", leaf.scale))
+    return out
+
+
+def weight_plane_index(params):
+    """[(path, 'q'|'scale'), ...] in ``iter_qweight_planes`` order."""
+    return [(p, which) for p, which, _ in iter_qweight_planes(params)]
+
+
+def weight_plane_digests(params):
+    """(n_planes,) uint32 digest vector in ``weight_plane_index`` order.
+    Jittable — the scrubber runs it as one compiled sweep per check."""
+    planes = iter_qweight_planes(params)
+    if not planes:
+        return jnp.zeros((0,), jnp.uint32)
+    return jnp.stack([plane_digest(x) for _, _, x in planes])
+
+
+def golden_weight_copy(params):
+    """Host-side golden copy of every prepared plane + its digest vector,
+    taken once at ``prepare_serving_params``.  Repair source of truth:
+    ``restore_weight_plane`` re-installs these exact bytes, so a repaired
+    model is bit-identical to the freshly prepared one."""
+    planes = {(p, which): np.asarray(x)
+              for p, which, x in iter_qweight_planes(params)}
+    return {"index": weight_plane_index(params),
+            "digests": np.asarray(weight_plane_digests(params)),
+            "planes": planes}
+
+
+def restore_weight_plane(params, path: str, which: str, golden):
+    """Rebuild ``params`` with the (path, which) plane replaced by its
+    golden bytes; every other leaf is passed through untouched (same
+    device buffers — no re-prepare, no requantization drift)."""
+    arr = jnp.asarray(golden["planes"][(path, which)])
+
+    def fix(p, leaf):
+        if isinstance(leaf, QuantizedLinearWeight) and path_str(p) == path:
+            return QuantizedLinearWeight(
+                arr if which == "q" else leaf.q,
+                arr if which == "scale" else leaf.scale,
+                leaf.k_orig, leaf.group_k)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(
+        fix, params, is_leaf=lambda x: isinstance(x, QuantizedLinearWeight))
 
 
 def prepare_dscim_params(params, cfg=None, *, group_k: int | None = 128,

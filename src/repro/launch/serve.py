@@ -226,7 +226,8 @@ def serve_continuous(cfg, params, prompts: np.ndarray, n_tokens: int, *,
                      deadline_steps=None,
                      deadline_s=None, priority=None, monitor=None,
                      injector=None, snapshot_every: int = 0,
-                     max_replays: int = 3, watchdog=None, log=print):
+                     max_replays: int = 3, watchdog=None,
+                     integrity: str = "off", log=print):
     """Continuous-batching scheduler: serve a queue of R requests through
     ``slots`` persistent decode slots.
 
@@ -305,7 +306,8 @@ def serve_continuous(cfg, params, prompts: np.ndarray, n_tokens: int, *,
         paged_attn=paged_attn, spec=spec, deadline_steps=deadline_steps,
         deadline_s=deadline_s, priority=priority, monitor=monitor,
         injector=injector, snapshot_every=snapshot_every,
-        max_replays=max_replays, watchdog=watchdog, log=log)
+        max_replays=max_replays, watchdog=watchdog, integrity=integrity,
+        log=log)
 
 
 def _sample_spec(args) -> str:
@@ -438,6 +440,25 @@ def main(argv=None):
                          "macro fault + a deadline expiry over the fault-"
                          "tolerant scheduler, asserting the failure-"
                          "semantics contract end to end")
+    ap.add_argument("--integrity", default="off", metavar="MODE",
+                    help="serving integrity checks (runtime/integrity.py): "
+                         "'off', 'verify' (every segment boundary) or "
+                         "'scrub:<n>' (every n-th) — checksummed int8 KV "
+                         "pages + prepared-weight plane digests with "
+                         "targeted self-healing; requires --kv int8")
+    ap.add_argument("--integrity-drill", action="store_true",
+                    help="run the self-verifying integrity drill "
+                         "(runtime/serving.py integrity_drill): injected "
+                         "page-pool and weight-plane bit flips under "
+                         "--integrity scrub:2 — asserts exact-coordinate "
+                         "detection, surgical repair, and bitwise-"
+                         "identical outputs vs the fault-free run")
+    ap.add_argument("--sampled-chaos", action="store_true",
+                    help="arm a FailureInjector.sampled schedule (seeded "
+                         "by --chaos-seed) on the --continuous run: device "
+                         "losses + page/weight bit upsets; pairs with "
+                         "--integrity to exercise detect/repair/replay "
+                         "under randomized faults")
     ap.add_argument("--chaos-seed", type=int, default=0, metavar="SEED",
                     help="--chaos determinism pin: seeds the drill's "
                          "params/prompts so a CI chaos failure reproduces "
@@ -452,6 +473,10 @@ def main(argv=None):
     if args.chaos:
         from repro.runtime.serving import chaos_drill
         chaos_drill(args.arch, seed=args.chaos_seed)
+        return 0
+    if args.integrity_drill:
+        from repro.runtime.serving import integrity_drill
+        integrity_drill(args.arch, seed=args.chaos_seed)
         return 0
     if args.tune:
         import os
@@ -480,19 +505,45 @@ def main(argv=None):
         budgets = rng.integers(max(2, args.tokens // 4), args.tokens + 1,
                                (args.requests,), dtype=np.int32)
         for tag, c in cfgs:
+            injector = None
+            snapshot_every = 0
+            if args.sampled_chaos:
+                from repro.core.qweights import split_dscim_mode
+                from repro.runtime.failover import FailureInjector
+                prepared = split_dscim_mode(
+                    getattr(c, "dscim", "off"))[0] not in ("off", "float")
+                # a fresh injector per leg: the fired-once set is stateful
+                injector = FailureInjector.sampled(
+                    args.chaos_seed, segments=8, slots=args.batch,
+                    n_layers=c.n_layers, page_size=args.page_size,
+                    device_losses=1, flips=2,
+                    weight_paths=("layers/mlp/w_up",) if prepared else (),
+                    weight_flip_count=1 if prepared else 0)
+                snapshot_every = 1
             outs, stats = serve_continuous(
                 c, params, prompts, args.tokens, slots=args.batch,
                 seg_len=args.segment_len, max_new=budgets,
                 eos_id=args.eos if args.eos is not None else -1,
                 sample=sample, kv=args.kv, page_size=args.page_size,
                 par=par, prepare=not args.no_prepare,
-                paged_attn=args.paged_attn, spec=args.spec)
+                paged_attn=args.paged_attn, spec=args.spec,
+                injector=injector, snapshot_every=snapshot_every,
+                integrity=args.integrity)
+            extra = ""
+            if stats.get("integrity"):
+                ig = stats["integrity"]
+                extra = (f", integrity: {ig['checks']} checks, "
+                         f"{ig['page_mismatches']}p/"
+                         f"{ig['weight_mismatches']}w mismatches, "
+                         f"{ig['page_repairs'] + ig['weight_repairs']} "
+                         f"repairs, {ig['replays']} replays")
             print(f"[serve-cb] {tag}: {stats['tok_s']:.1f} tok/s over "
                   f"{stats['useful_tokens']} useful tokens, occupancy "
                   f"{stats['occupancy']:.2f} "
                   f"({stats['live_slot_steps']}/{stats['slot_steps']} "
                   f"slot-steps live, "
-                  f"{stats['segments']} segments of {args.segment_len})")
+                  f"{stats['segments']} segments of {args.segment_len}"
+                  f"){extra}")
         return 0
 
     mode = "host-loop" if args.host_loop else "scanned"

@@ -46,7 +46,8 @@ __all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
 
 
 def prepare_serving_params(cfg: ArchConfig, params,
-                           par: ParallelCtx | None = None):
+                           par: ParallelCtx | None = None, *,
+                           golden: bool = False):
     """Quantize-once weight preparation for DS-CIM serving.
 
     No-op for 'off'/'float' specs.  Otherwise every DS-CIM-eligible matrix
@@ -60,15 +61,26 @@ def prepare_serving_params(cfg: ArchConfig, params,
     The MoE shared expert is prepared under a mesh too: its resident int8
     planes replicate across the mesh (launch/sharding.py) and the shard_map
     MoE body computes it locally, bit-identically to single-device serving
-    (models/lm.py ``_moe_apply``) — the former float-only guard is gone."""
-    from repro.core.qweights import prepare_dscim_params, split_dscim_mode
+    (models/lm.py ``_moe_apply``) — the former float-only guard is gone.
+
+    ``golden=True`` returns ``(prepared, golden_blob)`` where the blob is
+    the host-side bit-exact copy + digest vector of every prepared plane
+    (core/qweights.golden_weight_copy) — the integrity layer's repair
+    source of truth, taken here because this is the one moment the planes
+    are known-good by construction.  'off'/'float' specs have no prepared
+    planes; their blob is ``None``."""
+    from repro.core.qweights import (prepare_dscim_params, split_dscim_mode,
+                                     golden_weight_copy)
     spec = getattr(cfg, "dscim", "off")
     if split_dscim_mode(spec)[0] in ("off", "float"):
-        return params
+        return (params, None) if golden else params
     from repro.models.lm import _linear_for
     lin = _linear_for(spec)
-    return prepare_dscim_params(params, cfg,
-                                group_k=lin.group_k if lin else 128)
+    prepared = prepare_dscim_params(params, cfg,
+                                    group_k=lin.group_k if lin else 128)
+    if golden:
+        return prepared, golden_weight_copy(prepared)
+    return prepared
 
 AUX_WEIGHT = 0.01  # MoE load-balance loss weight
 
@@ -583,15 +595,24 @@ def make_generate_fn(cfg: ArchConfig, par: ParallelCtx | None = None,
 
 def init_serve_state(cfg: ArchConfig, slots: int, capacity: int, *,
                      kv: str = "float", page_size: int = 8,
-                     n_pages: int | None = None, seed: int = 0):
+                     n_pages: int | None = None, seed: int = 0,
+                     integrity: bool = False):
     """Idle scheduler state: every slot free (done), empty KV cache of the
     requested layout, shared PRNG key.  ``capacity`` is the per-slot token
     budget (prompt + generated); for ``kv='int8'`` the page pool defaults
     to slots x pages-per-sequence but can be sized independently
-    (``n_pages``) — capacity is a pool knob, not slots x max_len."""
+    (``n_pages``) — capacity is a pool knob, not slots x max_len.
+
+    ``integrity=True`` (int8 only) adds the per-page checksum plane to the
+    cache; every jitted builder branches on the cache *structure* at trace
+    time, so the flag changes no builder cache keys."""
     _check_kv(cfg, kv)
     B = slots
     if kv == "float":
+        if integrity:
+            raise ValueError("integrity checksums need the int8 paged "
+                             "cache (kv='int8'); the float dense cache "
+                             "is rewritten in place every step")
         cdt = jnp.dtype(cfg.cache_dtype)
         cache = {"k": jnp.zeros((cfg.n_layers, B, capacity, cfg.n_kv,
                                  cfg.head_dim), cdt),
@@ -603,7 +624,8 @@ def init_serve_state(cfg: ArchConfig, slots: int, capacity: int, *,
         mp = n_pages_for(capacity, page_size)
         cache = init_paged_cache(cfg.n_layers, B,
                                  B * mp if n_pages is None else n_pages,
-                                 page_size, mp, cfg.n_kv, cfg.head_dim)
+                                 page_size, mp, cfg.n_kv, cfg.head_dim,
+                                 integrity=integrity)
     return {"tok": jnp.zeros((B,), jnp.int32),
             "done": jnp.ones((B,), bool),
             "n_out": jnp.zeros((B,), jnp.int32),
@@ -714,6 +736,13 @@ def make_segment_fn(cfg: ArchConfig, par: ParallelCtx | None = None,
             (tok, done, n_out, max_new, cache, key, _, lg0), \
                 (ems, vms, bads) = \
                 jax.lax.scan(step, carry, None, length=seg_len)
+            if "page_sum" in state["cache"]:        # trace-time structure
+                from repro.core.kvcache import refresh_page_checksums
+                # draft windows flush up to k positions past the committed
+                # pos; every such page is re-digested from live content
+                cache = refresh_page_checksums(
+                    cache, state["cache"]["pos"], cache["pos"] + kd,
+                    seg_len * (kd + 1) + kd)
 
             def rows(x):     # (seg_len, B, k+1) -> (seg_len * (k+1), B)
                 return jnp.moveaxis(x, 2, 1).reshape(seg_len * (kd + 1), B)
@@ -748,6 +777,10 @@ def make_segment_fn(cfg: ArchConfig, par: ParallelCtx | None = None,
         (tok, done, n_out, max_new, cache, key, _, lg0), \
             (toks, lives, bads) = \
             jax.lax.scan(step, carry, None, length=seg_len)
+        if "page_sum" in state["cache"]:            # trace-time structure
+            from repro.core.kvcache import refresh_page_checksums
+            cache = refresh_page_checksums(
+                cache, state["cache"]["pos"], cache["pos"], seg_len)
         return dict(state, tok=tok, done=done, n_out=n_out, max_new=max_new,
                     cache=cache, rng=key), toks, lives, \
             {"bad": bads, "logits0": lg0}
@@ -819,6 +852,12 @@ def make_extend_fn(cfg: ArchConfig, par: ParallelCtx | None = None,
         new_pos = pos0 + jnp.where(is_t, n_real, 0)
         cache2 = kvcache.spec_rollback(vcache, pos0, new_pos, tails0,
                                        win_kv)
+        if paged and "page_sum" in cache:
+            # a chunk (pad positions included) may have flushed pages up
+            # to chunk_len past the slot's entry position — re-digest them
+            cache2 = kvcache.refresh_page_checksums(
+                cache2, pos0, pos0 + jnp.where(is_t, chunk_len, 0),
+                chunk_len)
         # emission: sample the first output token from the last *real*
         # position's logits — the chunked-path analogue of admit's
         # prefill-logits draw; the key is consumed only when emitting

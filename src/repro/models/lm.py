@@ -474,9 +474,12 @@ def _decode_paged(params, cfg: ArchConfig, batch, cache,
                   jnp.arange(cfg.n_layers, dtype=jnp.int32)))
     x = _norm(cfg, x, params["final_norm"])
     logits = _head(params, cfg, x)[:, 0]
-    return logits, {"k_pages": kp, "v_pages": vp, "k_scale": ks,
-                    "v_scale": vs, "k_tail": kt, "v_tail": vt,
-                    "page_table": page_table, "pos": _advance(pos, done)}
+    # dict(cache, ...) rebuild: bookkeeping planes that ride the cache but
+    # are not rewritten per step (the integrity ``page_sum`` digests) must
+    # pass through, not be dropped by an explicit-key reconstruction
+    return logits, dict(cache, k_pages=kp, v_pages=vp, k_scale=ks,
+                        v_scale=vs, k_tail=kt, v_tail=vt,
+                        page_table=page_table, pos=_advance(pos, done))
 
 
 def decode_multi(params, cfg: ArchConfig, batch, cache,
@@ -530,9 +533,11 @@ def decode_multi(params, cfg: ArchConfig, batch, cache,
                        cache["k_scale"], cache["v_scale"],
                        cache["k_tail"], cache["v_tail"],
                        jnp.arange(cfg.n_layers, dtype=jnp.int32)))
-        new_cache = {"k_pages": kp, "v_pages": vp, "k_scale": ks,
-                     "v_scale": vs, "k_tail": kt, "v_tail": vt,
-                     "page_table": page_table, "pos": pos + adv}
+        # pass-through rebuild so the integrity digest plane (if present)
+        # survives the verify forward
+        new_cache = dict(cache, k_pages=kp, v_pages=vp, k_scale=ks,
+                         v_scale=vs, k_tail=kt, v_tail=vt,
+                         page_table=page_table, pos=pos + adv)
         win_kv = (wk, wv)
     else:
         def body(x, xs):

@@ -34,7 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 
-__all__ = ["SimulatedHardwareFailure", "FailureInjector",
+__all__ = ["SimulatedHardwareFailure", "IntegrityReplay", "FailureInjector",
            "run_with_failover", "flip_bits"]
 
 
@@ -42,18 +42,40 @@ class SimulatedHardwareFailure(RuntimeError):
     pass
 
 
+class IntegrityReplay(RuntimeError):
+    """Raised by the integrity layer (runtime/integrity.py) when a
+    corrupted weight plane was repaired *after* poisoned segments already
+    ran: the repair itself is surgical, but tokens decoded against the
+    corrupted plane must be discarded — recoverable via the same
+    snapshot-restore replay path as a device loss (the restored snapshot
+    replays against the now-repaired weights, bit-clean)."""
+
+
 def flip_bits(arr, index: tuple, mask: int):
     """XOR ``mask`` into one element of a jnp array — int dtypes directly,
     float dtypes through a same-width bitcast (so a flip can hit a f32
-    scale's exponent, the classic NaN/Inf-producing upset)."""
+    scale's exponent, the classic NaN/Inf-producing upset).
+
+    ``mask`` must fit the element's bit width: a too-wide mask (say
+    ``0x7f000000`` aimed at a f32 plane but landing on int8) would
+    silently truncate or overflow the dtype cast, and the injector's
+    coverage claim ("this flip hit that plane") would be a lie."""
     import jax
     import jax.numpy as jnp
+    width = jnp.dtype(arr.dtype).itemsize * 8
+    if not 0 < int(mask) < (1 << width):
+        raise ValueError(
+            f"flip_bits: mask {mask:#x} does not fit a {width}-bit "
+            f"{jnp.dtype(arr.dtype).name} element")
     if jnp.issubdtype(arr.dtype, jnp.floating):
         bits = {2: jnp.uint16, 4: jnp.uint32}[arr.dtype.itemsize]
         as_int = jax.lax.bitcast_convert_type(arr, bits)
-        as_int = as_int.at[index].set(as_int[index] ^ mask)
+        # typed mask: a bare python int >= 2**31 (an f32 sign-bit flip)
+        # would overflow jnp's weak int32 promotion in the XOR
+        as_int = as_int.at[index].set(as_int[index] ^ jnp.asarray(mask, bits))
         return jax.lax.bitcast_convert_type(as_int, arr.dtype)
-    return arr.at[index].set(arr[index] ^ jnp.asarray(mask, arr.dtype))
+    umask = jnp.asarray(mask, jnp.uint32).astype(arr.dtype)
+    return arr.at[index].set(arr[index] ^ umask)
 
 
 @dataclasses.dataclass
@@ -67,9 +89,18 @@ class FailureInjector:
     ordinal within the slot's granted pages, translated to a physical id
     by ``corrupt_cache`` via the scheduler's slot_pages map.
     ``macro_fault_at``/``macro_fault``: arm ``cfg.dscim_fault`` from that
-    segment on (persistent — see module docstring)."""
+    segment on (persistent — see module docstring).
+
+    ``weight_flips`` (ISSUE 9): {segment: ((path, 'q'|'scale', offset,
+    mask), ...)} — bit upsets in *prepared weight planes*
+    (core/qweights.QuantizedLinearWeight).  ``path`` is the plane's
+    flattened path string (``path_str``), ``offset`` a flat element
+    offset (taken mod the plane's size, so ``sampled`` needs no shape
+    knowledge).  One-shot like page flips: a snapshot replay after the
+    repair does not re-corrupt."""
     fail_at: tuple = ()
     page_flips: dict = dataclasses.field(default_factory=dict)
+    weight_flips: dict = dataclasses.field(default_factory=dict)
     macro_fault_at: int | None = None
     macro_fault: str = "stuck:5:24.0"
     fired: set = dataclasses.field(default_factory=set)
@@ -78,7 +109,9 @@ class FailureInjector:
     def sampled(cls, seed: int, *, segments: int = 64, slots: int = 4,
                 n_layers: int = 2, page_size: int = 8, n_kv: int = 1,
                 head_dim: int = 8, device_losses: int = 1, flips: int = 2,
-                macro_fault: str | None = None) -> "FailureInjector":
+                macro_fault: str | None = None,
+                weight_paths: tuple = (),
+                weight_flip_count: int = 0) -> "FailureInjector":
         """A randomized-but-reproducible fault schedule over ``segments``
         serve segments: ``device_losses`` segment-level device losses,
         ``flips`` page-pool bit upsets at random (slot, plane, element)
@@ -116,10 +149,23 @@ class FailureInjector:
                 mask = 1 << int(rng.integers(0, 8))        # int8 any bit
             page_flips.setdefault(seg, ())
             page_flips[seg] = page_flips[seg] + ((slot, plane, index, mask),)
+        weight_flips: dict = {}
+        if weight_flip_count and weight_paths:
+            for _ in range(weight_flip_count):
+                seg = int(rng.integers(1, hi))
+                path = weight_paths[int(rng.integers(0, len(weight_paths)))]
+                which = ("q", "scale")[int(rng.integers(0, 2))]
+                offset = int(rng.integers(0, 1 << 30))   # taken mod size
+                mask = (1 << int(rng.integers(0, 8)) if which == "q"
+                        else 1 << int(rng.integers(20, 31)))
+                weight_flips.setdefault(seg, ())
+                weight_flips[seg] = weight_flips[seg] \
+                    + ((path, which, offset, mask),)
         macro_at = None
         if macro_fault:
             macro_at = int(rng.integers(1, hi))
         return cls(fail_at=fail_at, page_flips=page_flips,
+                   weight_flips=weight_flips,
                    macro_fault_at=macro_at,
                    macro_fault=macro_fault or "stuck:5:24.0")
 
@@ -158,6 +204,44 @@ class FailureInjector:
                          **{plane: flip_bits(cache[plane], full, mask)})
             affected.append(slot)
         return cache, affected
+
+    def corrupt_weights(self, segment: int, params):
+        """Apply this segment's due prepared-weight plane flips (once
+        each).  Returns (params', [(path, which), ...] hit).  The flat
+        offset is unraveled against the live plane's shape, so one
+        sampled schedule works across models."""
+        import numpy as np
+        from repro.core.qweights import QuantizedLinearWeight, path_str
+        import jax
+        hit = []
+        for flip in self.weight_flips.get(segment, ()):
+            key = ("wflip", segment, flip)
+            if key in self.fired:
+                continue
+            self.fired.add(key)
+            path, which, offset, mask = flip
+            touched = []
+
+            def corrupt(p, leaf, _path=path, _which=which,
+                        _offset=offset, _mask=mask):
+                if not (isinstance(leaf, QuantizedLinearWeight)
+                        and path_str(p) == _path):
+                    return leaf
+                arr = getattr(leaf, _which)
+                idx = np.unravel_index(_offset % arr.size, arr.shape)
+                arr = flip_bits(arr, idx, _mask)
+                touched.append(_path)
+                return QuantizedLinearWeight(
+                    arr if _which == "q" else leaf.q,
+                    arr if _which == "scale" else leaf.scale,
+                    leaf.k_orig, leaf.group_k)
+
+            params = jax.tree_util.tree_map_with_path(
+                corrupt, params,
+                is_leaf=lambda x: isinstance(x, QuantizedLinearWeight))
+            if touched:
+                hit.append((path, which))
+        return params, hit
 
 
 def run_with_failover(train_fn, *, restore_fn, max_restarts: int = 3,

@@ -1,0 +1,182 @@
+"""Deterministic silent-data-corruption detection + targeted repair
+(ISSUE 9 tentpole).
+
+The serving stack's pre-existing fault handling is *statistical*: the
+accuracy watchdog notices a bit flip only if it drags the probe's logit
+RMSE past the ErrorModel threshold, and ``stats['corrupted_requests']``
+is honest only because the chaos injector says which slots it hit.  This
+module makes int8 state corruption *deterministically* detectable and
+*surgically* repairable:
+
+* **KV page pool** — every physical page carries a uint32 digest over its
+  int8 k/v planes and bitcast f32 scales (``core/kvcache.page_checksums``),
+  stored in the cache's device-resident ``page_sum`` plane and kept
+  current by the jitted write paths.  ``check_pages`` re-digests the live
+  pool in one compiled sweep and attributes any mismatch to an exact
+  (layer, physical page) coordinate.
+* **Prepared weights** — every ``QuantizedLinearWeight`` plane (int8 q,
+  f32 scale) is digested once at ``prepare_serving_params(...,
+  golden=True)`` alongside a host-side bit-exact golden copy.
+  ``check_weights`` re-digests the live planes in one compiled sweep;
+  a mismatch names the exact (path, 'q'|'scale') plane, and
+  ``repair_weights`` re-installs the golden bytes — bit-identical to the
+  freshly prepared model, no requantization.
+
+What this deliberately does NOT cover: raw float leaves (norms, the
+embedding table) and transient activations — those stay the watchdog's
+statistical territory (docs/serving.md "Fault model & integrity
+contract").
+
+Cadence (the scheduler's ``integrity`` option):
+
+* ``'off'``    — period 0, no digest plane, today's behavior bit-for-bit;
+* ``'verify'`` — period 1, check every segment boundary (detection
+  latency <= 1 segment);
+* ``'scrub:<n>'`` — check every n-th boundary (background scrubbing —
+  cheaper, detection latency <= n segments).
+
+Counters live on the engine, not in the scheduler's host dict, so a
+snapshot-restore replay does not erase the record of what was detected.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+__all__ = ["parse_integrity", "IntegrityEngine"]
+
+
+def _page_bad(cache, live_mask):
+    from repro.core.kvcache import page_checksums, CHECKSUM_KEY
+    cur = page_checksums(cache["k_pages"], cache["v_pages"],
+                         cache["k_scale"], cache["v_scale"])
+    return (cur != cache[CHECKSUM_KEY]) & live_mask[None, :]
+
+
+_SWEEPS: dict = {}
+
+
+def _sweeps():
+    """Module-level jitted sweep functions, shared across engines.
+
+    An engine is built per serve call; per-instance ``jax.jit`` wrappers
+    would retrace both sweeps on every call, which at smoke shapes costs
+    more than the sweeps themselves."""
+    if not _SWEEPS:
+        import jax
+        from repro.core.qweights import weight_plane_digests
+        _SWEEPS["weights"] = jax.jit(weight_plane_digests)
+        _SWEEPS["pages"] = jax.jit(_page_bad)
+    return _SWEEPS
+
+
+def parse_integrity(spec: str | None) -> int:
+    """'off'|'verify'|'scrub:<n>' -> check period in segments (0 = off)."""
+    if spec is None or spec == "off":
+        return 0
+    if spec == "verify":
+        return 1
+    if spec.startswith("scrub:"):
+        try:
+            n = int(spec.split(":", 1)[1])
+        except ValueError:
+            n = 0
+        if n >= 1:
+            return n
+    raise ValueError(f"integrity spec {spec!r}: expected 'off', 'verify' "
+                     f"or 'scrub:<n>' with n >= 1")
+
+
+class IntegrityEngine:
+    """Segment-boundary verifier/scrubber + repair bookkeeping.
+
+    ``golden`` is the blob from ``prepare_serving_params(...,
+    golden=True)`` (None when the model has no prepared planes — weight
+    checks then trivially pass).  The engine owns the jitted sweep
+    functions, the reference digest vector, the detection ledger, and the
+    counters surfaced through serve stats and ``Router /stats``."""
+
+    def __init__(self, golden, *, period: int):
+        self.period = int(period)
+        self.golden = golden
+        self.index = list(golden["index"]) if golden else []
+        self.ref_digests = (np.asarray(golden["digests"]) if golden
+                            else np.zeros((0,), np.uint32))
+        sweeps = _sweeps()
+        self._weight_sweep = sweeps["weights"]
+        self._page_sweep = sweeps["pages"]
+        self.detections: list = []
+        self.counters = {"checks": 0,
+                         "pages_verified": 0,
+                         "weight_planes_verified": 0,
+                         "page_mismatches": 0,
+                         "weight_mismatches": 0,
+                         "page_repairs": 0,
+                         "weight_repairs": 0,
+                         "replays": 0,
+                         "scrub_time_s": 0.0}
+
+    def due(self, segment: int) -> bool:
+        return self.period > 0 and segment % self.period == 0
+
+    # -- detection ----------------------------------------------------------
+    def check_pages(self, cache, live_mask) -> list:
+        """Re-digest the pool, compare against the stored plane, return
+        the mismatching (layer, physical_page) coordinates.  ``live_mask``
+        (n_pages,) bool marks pages that are granted AND completely
+        flushed — only those have digests under warranty (freed or
+        tail-resident pages hold stale sums by design)."""
+        t0 = time.perf_counter()
+        mask = np.asarray(live_mask, bool)
+        bad = np.asarray(self._page_sweep(cache, mask))
+        self.counters["checks"] += 1
+        self.counters["pages_verified"] += int(mask.sum()) * bad.shape[0]
+        self.counters["scrub_time_s"] += time.perf_counter() - t0
+        coords = [tuple(int(v) for v in c) for c in np.argwhere(bad)]
+        if coords:
+            self.counters["page_mismatches"] += len(coords)
+            self.detections.append({"kind": "page", "coords": coords})
+        return coords
+
+    def check_weights(self, params) -> list:
+        """Re-digest every prepared plane, return the mismatching
+        (path, 'q'|'scale') pairs."""
+        if not self.index:
+            return []
+        t0 = time.perf_counter()
+        cur = np.asarray(self._weight_sweep(params))
+        self.counters["weight_planes_verified"] += len(self.index)
+        self.counters["scrub_time_s"] += time.perf_counter() - t0
+        bad = [self.index[i] for i in
+               np.nonzero(cur != self.ref_digests)[0].tolist()]
+        if bad:
+            self.counters["weight_mismatches"] += len(bad)
+            self.detections.append({"kind": "weight", "coords": list(bad)})
+        return bad
+
+    # -- repair -------------------------------------------------------------
+    def repair_weights(self, params, planes) -> "params":
+        """Re-install the golden bytes for each corrupted plane.  The
+        result digests clean by construction (asserted — a repair that
+        doesn't verify would be a silent double fault)."""
+        from repro.core.qweights import restore_weight_plane
+        for path, which in planes:
+            params = restore_weight_plane(params, path, which, self.golden)
+            self.counters["weight_repairs"] += 1
+        cur = np.asarray(self._weight_sweep(params))
+        if (cur != self.ref_digests).any():
+            raise RuntimeError("integrity: weight repair failed to verify")
+        return params
+
+    def note_page_repair(self, n: int = 1) -> None:
+        self.counters["page_repairs"] += n
+
+    def note_replay(self) -> None:
+        self.counters["replays"] += 1
+
+    def stats(self) -> dict:
+        out = dict(self.counters)
+        out["period"] = self.period
+        out["scrub_time_s"] = round(out["scrub_time_s"], 6)
+        return out

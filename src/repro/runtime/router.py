@@ -91,7 +91,8 @@ from repro.core.kvcache import PageAllocator, admission_pages, n_pages_for
 from repro.launch.steps import (_parse_spec, init_serve_state, make_admit_fn,
                                 make_extend_fn, make_probe_fn,
                                 make_segment_fn)
-from repro.runtime.failover import SimulatedHardwareFailure
+from repro.runtime.failover import IntegrityReplay, SimulatedHardwareFailure
+from repro.runtime.integrity import IntegrityEngine, parse_integrity
 from repro.runtime.serving import exact_probe_spec, next_ladder_spec
 from repro.runtime.watchdog import StepHang
 
@@ -107,7 +108,7 @@ STATUS_DEGRADED = "degraded"
 TERMINAL_STATUSES = (STATUS_OK, STATUS_DEADLINE, STATUS_REFUSED,
                      STATUS_CANCELLED, STATUS_DEGRADED)
 
-_RECOVERABLE = (SimulatedHardwareFailure, StepHang)
+_RECOVERABLE = (SimulatedHardwareFailure, StepHang, IntegrityReplay)
 
 
 class Refused(Exception):
@@ -228,6 +229,7 @@ class Router:
                  spec: str | None = None, par=None, prepare: bool = True,
                  rng_seed: int = 0, monitor=None, injector=None,
                  snapshot_every: int = 0, max_replays: int = 3,
+                 integrity: str = "off",
                  resume: dict | None = None, log=print):
         from repro.launch.serve import _place   # lazy: serve.py imports us
         self.cfg = cfg
@@ -266,9 +268,18 @@ class Router:
         self.capacity = self.max_prompt + self.max_new_cap \
             + max(self.headroom_bucket, self.headroom_chunked)
         self.mp = n_pages_for(self.capacity, page_size)
+        period = parse_integrity(integrity)
+        if period > 0 and kv != "int8":
+            raise ValueError("integrity checksums cover the int8 paged "
+                             "cache; use kv='int8' or integrity='off'")
+        self._integrity = None
+        if period > 0:
+            from repro.core.qweights import golden_weight_copy
+            self._integrity = IntegrityEngine(
+                golden_weight_copy(self.params), period=period)
         self._state = init_serve_state(cfg, slots, self.capacity, kv=kv,
                                        page_size=page_size, n_pages=n_pages,
-                                       seed=rng_seed)
+                                       seed=rng_seed, integrity=period > 0)
         self._alloc = PageAllocator(self._state["cache"]["k_pages"].shape[1]) \
             if kv == "int8" else None
         self.n_pages = self._alloc.n_pages if self._alloc is not None else None
@@ -313,6 +324,7 @@ class Router:
         self._next_rid = 0
         self._replays = 0
         self._snap = None
+        self._vsnap = None       # last integrity-verified snapshot
         self._draining = False
         self._drain_mode = "drain"
         self._engine_task = None
@@ -448,6 +460,9 @@ class Router:
             "occupancy": h["live_steps"] / max(h["total_steps"], 1),
             "pages": self._alloc.stats() if self._alloc is not None else None,
             "queue_depth": self._queue_depth(),
+            "integrity": (dict(self._integrity.stats(),
+                               detections=self._integrity.detections)
+                          if self._integrity is not None else None),
         }
 
     # ------------------------------------------------------------------
@@ -737,6 +752,43 @@ class Router:
             if hit:
                 self._state = dict(self._state, cache=cache2)
                 corrupted = hit
+        if self.injector is not None \
+                and getattr(self.injector, "weight_flips", None):
+            p2, whit = self.injector.corrupt_weights(seg, self.params)
+            if whit:
+                self.params = p2
+        if self._integrity is not None and self._integrity.due(seg):
+            bad_w = self._integrity.check_weights(self.params)
+            if bad_w:
+                self.params = self._integrity.repair_weights(self.params,
+                                                             bad_w)
+                self.log(f"[router] integrity: weight plane(s) {bad_w} "
+                         "restored from golden copy")
+            coords = []
+            if self._alloc is not None:
+                pos_h = np.asarray(self._state["cache"]["pos"])
+                live_pages = np.zeros((self._alloc.n_pages,), bool)
+                for b in range(self.slots):
+                    ids = h["slot_pages"][b]
+                    if ids is not None:
+                        for p in ids[:int(pos_h[b]) // self.page_size]:
+                            live_pages[int(p)] = True
+                coords = self._integrity.check_pages(self._state["cache"],
+                                                     live_pages)
+                if coords:
+                    self.log(f"[router] integrity: corrupted page(s) at "
+                             f"(layer, page) {coords}")
+            if bad_w or coords:
+                # slot-scoped repair lives in the scheduler
+                # (runtime/serving.py); the router takes the always-safe
+                # path — restore the last *verified* snapshot and replay.
+                # Repaired weights persist on self.params; transient
+                # flips fire once, so the replay runs clean.
+                self._integrity.note_replay()
+                self._snap = self._vsnap
+                raise IntegrityReplay(
+                    f"weights {bad_w or 'clean'}, pages {coords or 'clean'}")
+            self._vsnap = self._take_snapshot()
         cfg_now = self._cfg_now
         segment = self._segment if cfg_now is self.cfg else \
             make_segment_fn(cfg_now, self.par, self.seg_len,
@@ -815,9 +867,12 @@ class Router:
                 req.ended = True
 
     async def _engine(self) -> None:
-        use_ft = self.injector is not None or self.snapshot_every > 0
+        use_ft = self.injector is not None or self.snapshot_every > 0 \
+            or self._integrity is not None
         if use_ft:
+            # the initial state is integrity-verified by construction
             self._snap = self._take_snapshot()
+            self._vsnap = self._snap
         emitted_before = 0
         t_last = time.perf_counter()
         while True:

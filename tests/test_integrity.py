@@ -1,0 +1,166 @@
+"""Deterministic integrity layer (ISSUE 9, runtime/integrity.py): digest
+algebra for KV pages and prepared weight planes, flip_bits mask
+discipline, golden-copy repair, the fault-free bitwise-parity contract
+of ``integrity='verify'``, and the end-to-end acceptance drill."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core.kvcache import page_checksums
+from repro.core.qweights import (iter_qweight_planes, weight_plane_digests,
+                                 weight_plane_index)
+from repro.launch.serve import serve_continuous
+from repro.launch.steps import prepare_serving_params
+from repro.models import get_model
+from repro.runtime.failover import FailureInjector, flip_bits
+from repro.runtime.integrity import IntegrityEngine, parse_integrity
+from repro.runtime.serving import integrity_drill
+
+
+def test_parse_integrity():
+    assert parse_integrity(None) == 0
+    assert parse_integrity("off") == 0
+    assert parse_integrity("verify") == 1
+    assert parse_integrity("scrub:4") == 4
+    for bad in ("scrub:0", "scrub:-2", "scrub:x", "sometimes"):
+        with pytest.raises(ValueError, match="integrity spec"):
+            parse_integrity(bad)
+
+
+def test_flip_bits_mask_width_guard():
+    """ISSUE 9 satellite: a mask wider than the element (or empty) is an
+    injector configuration bug, not a silent truncation."""
+    q = jnp.zeros((3,), jnp.int8)
+    for mask in (0x100, 0, -1):
+        with pytest.raises(ValueError, match="mask"):
+            flip_bits(q, (0,), mask)
+    s = jnp.ones((2,), jnp.float32)
+    with pytest.raises(ValueError, match="mask"):
+        flip_bits(s, (0,), 1 << 32)
+    t = jnp.ones((2,), jnp.bfloat16)
+    with pytest.raises(ValueError, match="mask"):
+        flip_bits(t, (0,), 1 << 16)
+
+
+def test_flip_bits_f32_scale_plane_involution():
+    """An exponent upset on an f32 scale plane flips exactly the
+    addressed element's bits and XORs back to the original pattern —
+    checked on the uint32 views, so a NaN-producing flip still
+    round-trips bitwise."""
+    rng = np.random.default_rng(0)
+    s = jnp.asarray(rng.normal(1, .1, (2, 4, 3)), jnp.float32)
+    hit = flip_bits(s, (1, 2, 0), 0x7f000000)
+    b0 = np.asarray(s).view(np.uint32)
+    b1 = np.asarray(hit).view(np.uint32)
+    assert np.argwhere(b0 != b1).tolist() == [[1, 2, 0]]
+    assert b1[1, 2, 0] == b0[1, 2, 0] ^ 0x7f000000
+    back = flip_bits(hit, (1, 2, 0), 0x7f000000)
+    np.testing.assert_array_equal(np.asarray(back).view(np.uint32), b0)
+
+
+def test_page_checksums_detect_single_bit_flips():
+    """Any single-bit upset in any of a page's four planes (int8 k/v,
+    f32 k/v scales) moves exactly that (layer, page) digest — the
+    position-weighted sum's odd weights are invertible mod 2**32."""
+    rng = np.random.default_rng(1)
+    L, P, ps, KV, HD = 2, 5, 4, 2, 8
+    kp = jnp.asarray(rng.integers(-127, 128, (L, P, ps, KV, HD)), jnp.int8)
+    vp = jnp.asarray(rng.integers(-127, 128, (L, P, ps, KV, HD)), jnp.int8)
+    ks = jnp.asarray(rng.normal(1, .1, (L, P, KV)), jnp.float32)
+    vs = jnp.asarray(rng.normal(1, .1, (L, P, KV)), jnp.float32)
+    ref = np.asarray(page_checksums(kp, vp, ks, vs))
+    cases = [
+        ("k_pages", dict(kp=flip_bits(kp, (1, 3, 0, 1, 7), 0x01)), (1, 3)),
+        ("v_pages", dict(vp=flip_bits(vp, (0, 4, 2, 0, 0), 0x80)), (0, 4)),
+        ("k_scale", dict(ks=flip_bits(ks, (1, 0, 1), 1 << 31)), (1, 0)),
+        ("v_scale", dict(vs=flip_bits(vs, (0, 2, 0), 1 << 23)), (0, 2)),
+    ]
+    for name, sub, coord in cases:
+        cur = np.asarray(page_checksums(sub.get("kp", kp), sub.get("vp", vp),
+                                        sub.get("ks", ks), sub.get("vs", vs)))
+        assert np.argwhere(cur != ref).tolist() == [list(coord)], name
+
+
+def _prepared():
+    cfg = dataclasses.replace(get_arch("qwen3-0.6b").reduced(),
+                              dscim="kernel:dscim1:256")
+    model = get_model(cfg)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    prepared, golden = prepare_serving_params(cfg, params, golden=True)
+    return cfg, params, prepared, golden
+
+
+def test_weight_digest_detects_and_golden_repairs():
+    """Engine sweep attributes injected plane flips to the exact
+    (path, 'q'|'scale') coordinates; repair re-installs golden bytes
+    bit-exactly and re-verifies clean."""
+    cfg, _, prepared, golden = _prepared()
+    index = weight_plane_index(prepared)
+    assert len(index) > 0 and golden["index"] == index
+    np.testing.assert_array_equal(
+        np.asarray(weight_plane_digests(prepared)), golden["digests"])
+
+    eng = IntegrityEngine(golden, period=2)
+    assert eng.due(0) and not eng.due(1) and eng.due(2)
+    assert eng.check_weights(prepared) == []
+
+    qpath = next(p for p, w in index if w == "q")
+    spath = next(p for p, w in index if w == "scale")
+    inj = FailureInjector(weight_flips={
+        0: ((qpath, "q", 1234, 0x20), (spath, "scale", 7, 1 << 22))})
+    bad, hits = inj.corrupt_weights(0, prepared)
+    assert sorted(hits) == sorted([(qpath, "q"), (spath, "scale")])
+    found = eng.check_weights(bad)
+    assert sorted(found) == sorted(hits)
+    fixed = eng.repair_weights(bad, found)
+    assert eng.check_weights(fixed) == []
+    planes = {(p, w): x for p, w, x in iter_qweight_planes(fixed)}
+    np.testing.assert_array_equal(np.asarray(planes[(qpath, "q")]),
+                                  golden["planes"][(qpath, "q")])
+    np.testing.assert_array_equal(np.asarray(planes[(spath, "scale")]),
+                                  golden["planes"][(spath, "scale")])
+    assert eng.counters["weight_mismatches"] == 2
+    assert eng.counters["weight_repairs"] == 2
+    assert eng.counters["checks"] == 0          # weight sweeps don't count
+    assert eng.detections[0]["kind"] == "weight"
+
+
+def test_integrity_verify_fault_free_bitwise():
+    """The 'off is today's behavior / verify is free of side effects'
+    contract: with no faults injected, integrity='verify' serves every
+    request bitwise-identical to integrity='off' and records zero
+    mismatches."""
+    cfg, _, _, _ = _prepared()
+    model = get_model(cfg)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    prompts = np.random.default_rng(3).integers(0, cfg.vocab, (4, 8),
+                                                dtype=np.int32)
+    budgets = np.array([2, 4, 3, 5], np.int32)
+    knobs = dict(slots=2, seg_len=2, max_new=budgets, eos_id=-1,
+                 kv="int8", page_size=4)
+    out_off, st_off = serve_continuous(cfg, params, prompts, 5, **knobs)
+    out_v, st_v = serve_continuous(cfg, params, prompts, 5, **knobs,
+                                   integrity="verify")
+    for r in range(4):
+        np.testing.assert_array_equal(out_v[r], out_off[r], err_msg=str(r))
+    gi = st_v["integrity"]
+    assert gi["checks"] > 0 and gi["pages_verified"] > 0
+    assert gi["page_mismatches"] == 0 and gi["weight_mismatches"] == 0
+    assert gi["replays"] == 0
+    assert st_off.get("integrity") is None
+
+
+def test_integrity_drill():
+    """The full ISSUE 9 acceptance scenario (page + weight flips under
+    scrub:2): exact-coordinate detection, surgical repair, zero ladder
+    escalations, bitwise-identical outputs — every assertion lives
+    inside integrity_drill itself."""
+    report = integrity_drill(log=lambda *a: None)
+    leg1, leg2 = report["leg1"], report["leg2"]
+    assert leg1["page_repairs"] == 2 and leg1["weight_repairs"] == 1
+    assert leg1["replays"] == 0
+    assert leg2["weight_repairs"] == 1 and leg2["replays"] == 1

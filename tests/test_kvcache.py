@@ -13,9 +13,12 @@ import numpy as np
 import pytest
 
 from repro.configs import get_arch
-from repro.core.kvcache import (PageAllocator, dense_cache_bytes,
-                                dequantize_page, kv_cache_bytes,
-                                n_pages_for, paged_cache_specs,
+from repro.core.kvcache import (CHECKSUM_KEY, PageAllocator,
+                                admission_pages, dense_cache_bytes,
+                                dequantize_page, extract_slot_pages,
+                                init_paged_cache, insert_slot_pages,
+                                kv_cache_bytes, n_pages_for,
+                                page_checksums, paged_cache_specs,
                                 paged_from_dense, quantize_page)
 from repro.launch.serve import serve_batch, serve_continuous
 from repro.models import get_model
@@ -251,3 +254,90 @@ def test_continuous_small_page_pool_backpressure():
         serve_continuous(cfg, params, prompts, 4, slots=3, seg_len=2,
                          max_new=budgets, eos_id=-1, kv="int8",
                          page_size=4, n_pages=mp - 1)
+
+
+def test_allocator_and_admission_guards():
+    """ISSUE 9 satellite: zero/negative grants and nonsense admission
+    parameters raise at the call site instead of corrupting the pool
+    three segments later."""
+    a = PageAllocator(4)
+    for n in (0, -2):
+        with pytest.raises(ValueError, match="positive"):
+            a.alloc(n)
+    assert a.free_pages == 4                  # guard left the pool intact
+    assert a.alloc(4) is not None
+    for ps in (0, -4):
+        with pytest.raises(ValueError, match="page_size"):
+            admission_pages(8, 4, ps)
+    for budget in (0, -1):
+        with pytest.raises(ValueError, match="budget"):
+            admission_pages(8, budget, 4)
+    with pytest.raises(ValueError, match="prompt_len/headroom"):
+        admission_pages(-1, 4, 4)
+    with pytest.raises(ValueError, match="prompt_len/headroom"):
+        admission_pages(8, 4, 4, headroom=-1)
+    assert admission_pages(7, 4, 4, headroom=2) == n_pages_for(13, 4)
+
+
+@pytest.mark.parametrize("ps", [4, 8, 16])
+def test_slot_page_roundtrip_property(ps):
+    """ISSUE 9 satellite: extract -> insert -> extract is the identity on
+    a slot's blob across page sizes, ragged positions, and permuted
+    page-table layouts — bitwise, including the digest plane's warranty
+    on the re-granted pages."""
+    L, B, KV, HD, mp = 2, 3, 2, 4, 4
+    P = B * mp
+    rng = np.random.default_rng(ps)
+
+    def scrambled_cache(perm):
+        cache = init_paged_cache(L, B, P, ps, mp, KV, HD, integrity=True)
+        grants, poses, off = [], [], 0
+        for b in range(B):
+            g = int(rng.integers(1, mp + 1))
+            grants.append([int(i) for i in perm[off:off + g]])
+            off += g
+            # ragged: anywhere from 1 token to every granted page flushed
+            poses.append(int(rng.integers(1, g * ps + 1)))
+        rows = [ids + [ids[-1]] * (mp - len(ids)) for ids in grants]
+        cache = dict(
+            cache,
+            k_pages=jnp.asarray(rng.integers(-127, 128, (L, P, ps, KV, HD)),
+                                jnp.int8),
+            v_pages=jnp.asarray(rng.integers(-127, 128, (L, P, ps, KV, HD)),
+                                jnp.int8),
+            k_scale=jnp.asarray(rng.normal(1, .1, (L, P, KV)), jnp.float32),
+            v_scale=jnp.asarray(rng.normal(1, .1, (L, P, KV)), jnp.float32),
+            k_tail=jnp.asarray(rng.normal(0, 1, (L, B, ps, KV, HD)),
+                               jnp.bfloat16),
+            v_tail=jnp.asarray(rng.normal(0, 1, (L, B, ps, KV, HD)),
+                               jnp.bfloat16),
+            page_table=jnp.asarray(rows, jnp.int32),
+            pos=jnp.asarray(poses, jnp.int32))
+        cache = dict(cache, **{CHECKSUM_KEY: page_checksums(
+            cache["k_pages"], cache["v_pages"],
+            cache["k_scale"], cache["v_scale"])})
+        return cache, grants
+
+    src, src_grants = scrambled_cache(rng.permutation(P))
+    dst, _ = scrambled_cache(rng.permutation(P))
+    new_perm = rng.permutation(P)
+    off = 0
+    for b in range(B):
+        blob = extract_slot_pages(src, b, src_grants[b])
+        b2 = (b + 1) % B                      # different slot on insert
+        ids2 = [int(i) for i in new_perm[off:off + blob["page_count"]]]
+        off += blob["page_count"]
+        dst = insert_slot_pages(dst, b2, ids2, blob)
+        blob2 = extract_slot_pages(dst, b2, ids2)
+        assert blob2["page_count"] == blob["page_count"]
+        assert blob2["pos"] == blob["pos"]
+        for key in ("k_pages", "v_pages", "k_scale", "v_scale",
+                    "k_tail", "v_tail"):
+            np.testing.assert_array_equal(blob2[key], blob[key],
+                                          err_msg=f"{key} slot {b}")
+        # the digest plane follows the insert: stored sums on the
+        # re-granted pages match a fresh recompute (warranty holds)
+        fresh = np.asarray(page_checksums(
+            dst["k_pages"], dst["v_pages"], dst["k_scale"], dst["v_scale"]))
+        np.testing.assert_array_equal(
+            np.asarray(dst[CHECKSUM_KEY])[:, ids2], fresh[:, ids2])

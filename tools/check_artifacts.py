@@ -50,6 +50,11 @@ Checks (no third-party deps — stdlib json only):
   rest), ``replays``/``quarantined`` counters, and the allocator
   counters with ``pages_live=0`` — router rows are recorded after
   drain, so any live page is a leak.
+* serve/integrity_* rows (ISSUE 9): the checksummed-state integrity rows
+  need a finite positive ``tok_s``; integrity_scrub additionally needs a
+  positive ``overhead_vs_off`` ratio (the CI-bounded scrubbing cost) and
+  the sweep coverage/repair counters as non-negative ints;
+  integrity_drill needs its repair/replay counters.
 * No duplicate rows (ISSUE 7 satellite): a row name may appear at most
   once per run, and a (name, rev) pair at most once across the whole
   trajectory — benchmarks/run.py dedupes on append (newest run wins), so
@@ -166,6 +171,38 @@ def _check_spec_row(name: str, derived: str, rtag: str, errs: list):
         _check_page_stats(name, f, rtag, errs)
 
 
+def _check_integrity_row(name: str, derived: str, rtag: str, errs: list):
+    """ISSUE 9: typed schema for serve/integrity_* derived fields
+    (benchmarks/serve_bench.py ``_integrity_rows``).  integrity_off /
+    integrity_scrub need a finite positive ``tok_s``; integrity_scrub
+    additionally needs a positive ``overhead_vs_off`` ratio (the
+    CI-bounded scrubbing cost) and the sweep coverage counters;
+    integrity_drill needs its repair/replay counters — a drill row whose
+    counters went missing would silently blind the self-healing gate."""
+    f = _derived_fields(derived)
+    kind = name.split("/", 2)[1]   # integrity_off | _scrub | _drill
+    if kind in ("integrity_off", "integrity_scrub"):
+        if not _pos_float(f.get("tok_s")):
+            errs.append(f"{rtag} ({name!r}): integrity row needs a finite "
+                        f"positive tok_s, got {f.get('tok_s')!r}")
+    if kind == "integrity_scrub":
+        if not _pos_float(f.get("overhead_vs_off")):
+            errs.append(f"{rtag} ({name!r}): integrity_scrub needs a "
+                        f"positive overhead_vs_off ratio, got "
+                        f"{f.get('overhead_vs_off')!r}")
+        for key in ("checks", "pages_verified", "weight_planes_verified",
+                    "mismatches", "repairs"):
+            if not _nonneg_int(f.get(key)):
+                errs.append(f"{rtag} ({name!r}): integrity_scrub needs "
+                            f"non-negative int {key}, got {f.get(key)!r}")
+    if kind == "integrity_drill":
+        for key in ("requests", "page_repairs", "weight_repairs",
+                    "replays", "checks"):
+            if not _nonneg_int(f.get(key)):
+                errs.append(f"{rtag} ({name!r}): integrity_drill needs "
+                            f"non-negative int {key}, got {f.get(key)!r}")
+
+
 def _check_router_row(name: str, derived: str, rtag: str, errs: list):
     """ISSUE 8: typed schema for serve/router_* load-test rows
     (benchmarks/loadtest.py).  Every row must carry the latency
@@ -274,6 +311,9 @@ def check_bench(path: str) -> list:
                 _check_spec_row(name, derived, rtag, errs)
             elif isinstance(name, str) and name.startswith("serve/router_"):
                 _check_router_row(name, derived, rtag, errs)
+            elif isinstance(name, str) \
+                    and name.startswith("serve/integrity_"):
+                _check_integrity_row(name, derived, rtag, errs)
     return errs
 
 
