@@ -36,13 +36,17 @@ import numpy as np
 
 
 def make_trace(seed: int, n: int, *, buckets=(4, 8), max_prompt: int = 12,
-               max_new_cap: int = 8, mean_gap_s: float = 0.002):
+               max_new_cap: int = 8, mean_gap_s: float = 0.002,
+               shared_prefix=None, shared_frac: float = 0.0):
     """``n`` request descriptors with arrival offsets.  ~80% of prompts
     hit a one-shot bucket length, the rest land on odd lengths (chunked
     prefill); budgets are geometric (heavy tail, clipped to the cap);
     arrivals are bursty — geometric burst sizes at exponential gaps.  A
     few requests carry deadlines; a few are marked for mid-stream client
-    disconnect."""
+    disconnect.  ``shared_prefix``/``shared_frac`` (ISSUE 10): overwrite
+    the leading tokens of that fraction of prompts with a common system
+    prompt — the prefix-cache leg's hit source (only whole pages below
+    the sharing cap actually dedup, so short prompts stay misses)."""
     rng = np.random.default_rng(seed)
     buckets = tuple(buckets)
     odd = [s for s in range(2, max_prompt + 1) if s not in buckets]
@@ -58,8 +62,11 @@ def make_trace(seed: int, n: int, *, buckets=(4, 8), max_prompt: int = 12,
             else:
                 S = int(rng.choice(odd))
             budget = int(np.clip(rng.geometric(0.35), 1, max_new_cap))
-            req = {"t": t, "prompt": rng.integers(1, 1000, S,
-                                                  dtype=np.int32),
+            prompt = rng.integers(1, 1000, S, dtype=np.int32)
+            if shared_prefix is not None and rng.random() < shared_frac:
+                m = min(len(shared_prefix), S)
+                prompt[:m] = shared_prefix[:m]
+            req = {"t": t, "prompt": prompt,
                    "max_new": budget, "priority": int(rng.random() < 0.1),
                    "deadline_s": None, "deadline_steps": None,
                    "disconnect_after": None}
@@ -107,14 +114,16 @@ async def _client(router, spec, t0, rec):
 async def _run_leg(cfg, params, trace, *, injector=None, monitor=None,
                    snapshot_every=0, slots=4, seg_len=4, page_size=4,
                    n_pages=None, buckets=(4, 8), chunk_len=4,
-                   max_prompt=12, max_new_cap=8, max_queue=64):
+                   max_prompt=12, max_new_cap=8, max_queue=64,
+                   prefix_cache=False):
     from repro.runtime.router import Router
     router = Router(cfg, params, slots=slots, seg_len=seg_len, kv="int8",
                     page_size=page_size, n_pages=n_pages, buckets=buckets,
                     chunk_len=chunk_len, max_prompt=max_prompt,
                     max_new_cap=max_new_cap, max_queue=max_queue,
                     prepare=False, injector=injector, monitor=monitor,
-                    snapshot_every=snapshot_every, log=lambda *a: None)
+                    snapshot_every=snapshot_every, prefix_cache=prefix_cache,
+                    log=lambda *a: None)
     await router.start()
     t0 = time.perf_counter()
     recs = [{"status": None, "tokens": []} for _ in trace]
@@ -220,10 +229,15 @@ def _check_vs_continuous(cfg, params, trace, plain, *, buckets, seg_len,
 
 def run_loadtest(smoke: bool = True, *, requests: int | None = None,
                  seed: int = 0, chaos_seed: int = 0, arch: str = "qwen3-0.6b",
-                 log=print):
+                 prefix: bool = False, log=print):
     """Both legs + invariants; returns (rows, plain_metrics,
     chaos_metrics).  ``smoke``: mini trace for CI; full mode runs >= 1000
-    requests and the serve_continuous bitwise replay."""
+    requests and the serve_continuous bitwise replay.  ``prefix``
+    (ISSUE 10): add a shared-system-prompt trace served by an all-chunked
+    cold router and a ``prefix_cache=True`` router — ok-vs-ok outputs are
+    asserted bitwise (the hit-vs-cold contract under real traffic,
+    disconnects and deadlines included) and a ``serve/prefix_router`` row
+    records the dedup ledger."""
     import jax
 
     from repro.configs import get_arch
@@ -287,6 +301,44 @@ def run_loadtest(smoke: bool = True, *, requests: int | None = None,
                                         page_size=page_size)
         log(f"[loadtest] bitwise vs serve_continuous: {n_direct} requests")
     rows = [_row("plain", tag, m_plain), _row("chaos", tag, m_chaos)]
+    if prefix:
+        sysp = np.random.default_rng(seed + 3).integers(1, 1000, 8,
+                                                        dtype=np.int32)
+        ptrace = make_trace(seed + 2, n, buckets=buckets,
+                            max_prompt=max_prompt, max_new_cap=max_new_cap,
+                            mean_gap_s=0.001 if smoke else 0.002,
+                            shared_prefix=sysp, shared_frac=0.75)
+        # cold reference: the same all-chunked page-aligned admission
+        # path with sharing off — the bitwise-comparable leg
+        kn_c = dict(kn, buckets=(), chunk_len=page_size)
+        log(f"[loadtest] prefix cold leg: {n} requests (all-chunked)")
+        pcold, st_pc, _ = asyncio.run(_run_leg(cfg, params, ptrace, **kn_c))
+        _assert_terminal(pcold, st_pc, "prefix-cold")
+        log("[loadtest] prefix warm leg: prefix_cache=True")
+        pwarm, st_pw, wall_pw = asyncio.run(
+            _run_leg(cfg, params, ptrace, prefix_cache=True, **kn_c))
+        _assert_terminal(pwarm, st_pw, "prefix-warm")
+        n_hit = _check_bitwise(ptrace, pcold, pwarm)
+        px = st_pw["prefix"]
+        assert px["hits"] > 0, f"shared trace produced no hits: {px}"
+        removed = 1.0 - px["prefill_positions_computed"] \
+            / max(px["prefill_positions_total"], 1)
+        log(f"[loadtest] prefix: bitwise ok-vs-ok {n_hit} requests, "
+            f"{px['hits']}/{px['lookups']} hits, "
+            f"{removed:.2f} prefill removed")
+        m_pfx = _metrics(pwarm, st_pw, wall_pw)
+        row = _row("plain", tag, m_pfx)     # base fields, then the ledger
+        rows.append({
+            "name": f"serve/prefix_router/{tag}",
+            "us": row["us"],
+            "derived": (f"{row['derived']};hits={px['hits']};"
+                        f"lookups={px['lookups']};"
+                        f"hit_tokens={px['hit_tokens']};"
+                        f"pages_deduped={px['pages_deduped']};"
+                        f"prefill_removed_frac={removed:.3f};"
+                        f"pages_retained="
+                        f"{st_pw['pages']['retained_pages']};"
+                        f"bitwise_ok={n_hit}")})
     for kind, m in (("plain", m_plain), ("chaos", m_chaos)):
         log(f"[loadtest] {kind}: p50 {m['p50_ms']:.1f}ms "
             f"p99 {m['p99_ms']:.1f}ms {m['tok_s']:.1f} tok/s "
@@ -307,12 +359,16 @@ def main(argv=None):
                     help="FailureInjector.sampled seed — reproduce a CI "
                          "fault schedule exactly")
     ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="add the shared-system-prompt prefix legs "
+                         "(ISSUE 10): bitwise hit-vs-cold under real "
+                         "traffic + a serve/prefix_router row")
     ap.add_argument("--no-append", action="store_true",
                     help="skip the BENCH_kernels.json append")
     args = ap.parse_args(argv)
     rows, _, _ = run_loadtest(args.smoke, requests=args.requests,
                               seed=args.seed, chaos_seed=args.chaos_seed,
-                              arch=args.arch)
+                              arch=args.arch, prefix=args.prefix_cache)
     if not args.no_append:
         from benchmarks.run import append_trajectory
         append_trajectory(rows)

@@ -29,6 +29,12 @@ dscim2-draft -> dscim1-verify vs the plain driver at asserted-bitwise
 greedy outputs, with accepted-tokens-per-verify / acceptance-rate in the
 derived fields, and page-pool occupancy read from ``PageAllocator.stats()``
 on the continuous rows.
+
+ISSUE 10 adds the prefix-cache rows (``serve/prefix_hit0|hit50|hit90``):
+the same queue with a shared system prompt on 0/50/90% of requests,
+served warm vs cold, with prefill-positions-removed and hit-vs-cold
+admission latency in the derived fields — both CI-bounded by
+tools/bench_regression.py.
 """
 from __future__ import annotations
 
@@ -381,6 +387,88 @@ def _spec_rows(cfg, params, smoke):
     return rows
 
 
+def _prefix_rows(cfg, params, smoke):
+    """ISSUE 10 rows: prefix caching with refcounted copy-on-write pages.
+    The same request queue — a 3-page shared system prompt on 0% / 50% /
+    90% of the requests — is served warm (``prefix_cache='on'``) and
+    cold (``prefix_cache='cold'``: the identical page-aligned chunked
+    admission path with lookup/registration disabled, so the warm leg's
+    outputs are asserted bitwise against it by tests/test_prefix_cache.py
+    and the prefix CI smoke, and timing differences are pure dedup).
+
+    The derived fields carry the two CI-bounded metrics
+    (tools/bench_regression.py): ``prefill_removed_frac`` — the fraction
+    of prefill positions never computed because their pages were shared
+    (>= 0.4 at the 90% trace is the ISSUE 10 acceptance bar) — and
+    ``admit_latency_ratio`` — mean wall admission latency of a prefix
+    *hit* over the cold leg's miss admissions (hits feed fewer chunks,
+    so the ratio must stay well under 1)."""
+    from repro.launch.serve import serve_continuous
+    ps, S = 4, 16
+    R = 6 if smoke else 10
+    n_tokens = 4 if smoke else 8
+    slots = 2 if smoke else 4
+    reps = 1 if smoke else 3
+    rng = np.random.default_rng(0)
+    budgets = np.clip(np.linspace(2, n_tokens, R).round(), 2,
+                      n_tokens).astype(np.int32)
+    base = rng.integers(0, cfg.vocab, (R, S), dtype=np.int32)
+    sysp = rng.integers(0, cfg.vocab, 12, dtype=np.int32)  # 3 shared pages
+    knobs = dict(slots=slots, seg_len=2, max_new=budgets, eos_id=-1,
+                 kv="int8", page_size=ps, prepare=False,
+                 log=lambda *a: None)
+    rows = []
+    for frac, kind in ((0.0, "hit0"), (0.5, "hit50"), (0.9, "hit90")):
+        prompts = base.copy()
+        n_shared = int(round(frac * R))
+        if n_shared:
+            prompts[:n_shared, :12] = sysp
+        st_w, st_c = {}, {}
+
+        def cold():
+            outs, s = serve_continuous(cfg, params, prompts, n_tokens,
+                                       prefix_cache="cold", **knobs)
+            st_c.clear()
+            st_c.update(s)
+            return outs
+
+        def warm():
+            outs, s = serve_continuous(cfg, params, prompts, n_tokens,
+                                       prefix_cache="on", **knobs)
+            st_w.clear()
+            st_w.update(s)
+            return outs
+
+        us_cold = timed(cold, n=reps)
+        us_warm = timed(warm, n=reps)
+        pw = st_w["prefix"]
+        removed = 1.0 - pw["prefill_positions_computed"] \
+            / max(pw["prefill_positions_total"], 1)
+        lat_cold = float(np.mean(st_c["prefix"]["admit_lat_miss"])) * 1e6
+        lat_hit = float(np.mean(pw["admit_lat_hit"])) * 1e6 \
+            if pw["admit_lat_hit"] else lat_cold
+        useful = int(budgets.sum())
+        pg = st_w["pages"]
+        tag = f"{DSCIM}/R{R}s{slots}x{S}+{n_tokens}"
+        rows.append({
+            "name": f"serve/prefix_{kind}/{tag}",
+            "us": us_warm,
+            "derived": (f"tok_s={useful / us_warm * 1e6:.1f};"
+                        f"hit_rate_target={frac:.2f};"
+                        f"hits={pw['hits']};lookups={pw['lookups']};"
+                        f"hit_tokens={pw['hit_tokens']};"
+                        f"pages_deduped={pw['pages_deduped']};"
+                        f"prefill_removed_frac={removed:.3f};"
+                        f"admit_us_hit={lat_hit:.1f};"
+                        f"admit_us_cold={lat_cold:.1f};"
+                        f"admit_latency_ratio={lat_hit / max(lat_cold, 1e-9):.3f};"
+                        f"speedup_vs_cold={us_cold / us_warm:.2f}x;"
+                        f"pages_live={pg['live_pages']};"
+                        f"pages_retained={pg['retained_pages']};"
+                        f"pages_shares={pg['shares']}")})
+    return rows
+
+
 def _chaos_rows(cfg, params, smoke):
     """ISSUE 6 rows: fault-free monitoring cost of the fault-tolerant
     serving runtime.  The same continuous queue is served plain and with
@@ -555,6 +643,7 @@ def run(smoke: bool = False):
     rows = _dispatch_rows(cfg, params, smoke)
     rows += _queue_rows(cfg, params, smoke)
     rows += _spec_rows(cfg, params, smoke)
+    rows += _prefix_rows(cfg, params, smoke)
     rows += _chaos_rows(cfg, params, smoke)
     rows += _integrity_rows(cfg, params, smoke)
     cfg_float = dataclasses.replace(cfg, dscim="off")

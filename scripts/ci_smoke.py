@@ -42,6 +42,22 @@ Smokes (all interpret-mode, reduced configs):
                      coordinate detection, surgical repair, zero ladder
                      escalations, and bitwise-identical outputs vs the
                      fault-free run
+  prefix             the prefix-cache drill (--prefix-drill,
+                     runtime/serving.prefix_drill, ISSUE 10): staggered
+                     admissions where 4 of 6 requests share a 3-page
+                     system prompt; asserts the warm (prefix_cache=on)
+                     outputs are bitwise the cold chunked reference's,
+                     the hit/dedup ledger matches the trace exactly
+                     (4 hits, 12 pages deduped, 48 prompt positions
+                     skipped, > 40% of prefill removed), shared pages
+                     are quantized once and refcount-freed to the
+                     retained pool, and the pool drains to zero live
+  prefix-router      the asyncio router replaying a 75%-shared-prefix
+                     trace warm vs the all-chunked cold reference under
+                     real traffic (deadlines, disconnects, reclaim;
+                     benchmarks/loadtest.py --prefix-cache): asserts
+                     terminal statuses, zero live pages, and ok-vs-ok
+                     bitwise agreement between legs
   router             the asyncio serving router under a mini heavy-tailed
                      load-test trace with the sampled fault schedule
                      armed (benchmarks/loadtest.py --smoke, ISSUE 8):
@@ -86,10 +102,13 @@ SMOKES: dict = {
              "--segment-len", "2", "--tokens", "6", "--dscim", _DSCIM,
              *_PAGED, "--spec", "dscim2:4"],
     "router": ["--smoke", "--no-append"],
+    "prefix": ["--prefix-drill"],
+    "prefix-router": ["--smoke", "--prefix-cache", "--no-append"],
 }
 
 # smokes whose preset drives a different entry point than serve.main
-_ENTRY = {"router": "benchmarks.loadtest"}
+_ENTRY = {"router": "benchmarks.loadtest",
+          "prefix-router": "benchmarks.loadtest"}
 
 
 def run(names) -> int:

@@ -47,10 +47,59 @@ stack) pins either path explicitly; ``REPRO_PAGED_ATTN`` forces the
 f32 statistics, agreeing to <=1e-5 logits (tests/test_paged_kernel.py).
 
 Page allocation is host-side (``PageAllocator``): the continuous-batching
-scheduler (launch/serve.py) grants a request its pages at admission and
-returns them at completion, so the jitted segment never allocates.
+scheduler (runtime/serving.py) and the async router (runtime/router.py)
+grant a request its pages at admission and return them at completion, so
+the jitted segment never allocates.  The allocator is **refcounted**
+(ISSUE 10): ``alloc`` hands out pages at refcount 1, ``share`` takes an
+additional reference on pages another request already owns, and ``free``
+*decrements* — a physical page leaves the live set only when its last
+sharer releases it.  Pages the prefix index marks *retainable* park in a
+recently-freed LRU set at refcount 0 instead of returning to the free
+list (their int8 bytes stay valid: pool pages are only rewritten on
+reallocation) and are reclaimed oldest-first, via registered drop hooks,
+only when an ``alloc`` would otherwise refuse — so prefix retention can
+never cause an admission refusal the unretained pool would not have had.
+
+**Prefix cache** (``PrefixCache``, ISSUE 10 tentpole): a rolling hash
+over page-aligned token chunks of each prompt keys full flushed prefix
+pages.  A new admission whose prompt shares a page-aligned prefix with a
+live or retained entry maps its leading page-table rows at the *same*
+physical pages (``acquire`` -> ``PageAllocator.share``) — quantized
+once, ever — and prefill runs only from the first divergent page.
+Invariants, in one place:
+
+* Sharing covers only **full flushed pages strictly below the slot's
+  write frontier** (``pos // ps``): the tail is always private, decode
+  flushes land at logical index >= pos // ps, and extension prefill
+  feeds from the first divergent page — so the jitted write paths never
+  touch a shared page and both read paths work unchanged (they already
+  resolve arbitrary permuted page tables, the PR 5 parity property).
+* A host-side write into a slot's granted range must first call
+  ``cow_fork``: any page there with refcount > 1 is forked to a fresh
+  private copy (bytes + digest) before the scatter.  In the aligned
+  admission flow this is a checked no-op; it is the enforcement point,
+  not a hot path.
+* ``page_checksums`` digests are per *physical* page, so they stay
+  correct under sharing, and repairing a corrupted shared page heals
+  every sharer at once.  ``extract_slot_pages``/``insert_slot_pages``
+  copy bytes by physical id and always restore onto freshly granted
+  private pages — eviction round trips never re-enter the shared set.
+* ``PageAllocator.snapshot()`` carries refcounts, the retained LRU, and
+  the retainable mark set; ``PrefixCache.snapshot()`` carries the hash
+  index and hit counters — failover restores both and replays
+  bit-identically.
+
+Integrity (ISSUE 9): ``init_paged_cache(..., integrity=True)`` adds a
+device-resident ``page_sum`` plane — one uint32 digest per (layer,
+physical page) over the int8 planes and bitcast f32 scales — kept
+current by every bulk write path here and by
+``refresh_page_checksums`` after each decode segment.  Only granted AND
+fully-flushed pages are under warranty; see runtime/integrity.py for
+the scrub/repair contract.
 """
 from __future__ import annotations
+
+from collections import OrderedDict
 
 import jax
 import jax.numpy as jnp
@@ -59,7 +108,8 @@ import numpy as np
 __all__ = ["quantize_page", "dequantize_page", "paged_from_dense",
            "init_paged_cache", "admit_request", "admit_dense",
            "paged_cache_specs", "kv_cache_bytes", "dense_cache_bytes",
-           "PageAllocator", "n_pages_for", "admission_pages",
+           "PageAllocator", "PrefixCache", "cow_fork", "prefix_chunk_keys",
+           "n_pages_for", "admission_pages",
            "extract_slot_pages", "insert_slot_pages", "spec_rollback",
            "page_checksums", "refresh_page_checksums", "CHECKSUM_KEY"]
 
@@ -445,9 +495,29 @@ def spec_rollback(cache, pos0, new_pos, tails0=None, win_kv=None):
 
 
 class PageAllocator:
-    """Host-side free-list over the physical page pool.  The continuous
-    scheduler allocates a request's pages at admission and frees them at
-    completion — capacity is the pool size, not slots x max_len.
+    """Host-side refcounted free-list over the physical page pool.  The
+    continuous scheduler allocates a request's pages at admission and
+    frees them at completion — capacity is the pool size, not
+    slots x max_len.
+
+    Lifecycle of a physical page (ISSUE 10):
+
+    * ``alloc`` — free -> live at refcount 1 (the classic grant).
+    * ``share`` — +1 reference on a live page, or revive a *retained*
+      page back to live at refcount 1 (the prefix-cache hit path: a new
+      request maps its leading page-table entries at pages another
+      request already filled).
+    * ``free`` — -1 reference; a page leaves the live set only at
+      refcount 0, and then returns to the free list **unless** it is
+      marked retainable (``set_retainable``, the prefix index's mark),
+      in which case it parks in a recently-freed LRU set with its bytes
+      intact (pool pages are only rewritten on reallocation).
+    * retained pages are reclaimed oldest-first — notifying registered
+      ``on_reclaim`` hooks so the prefix index drops its entries — only
+      when an ``alloc`` would otherwise refuse.  Retention therefore
+      never costs an admission the unretained pool could have served,
+      and retained pages are *not* live: the drain invariant
+      ``live_pages == 0`` still certifies a leak-free shutdown.
 
     ``free`` validates its ids (ISSUE 6): a double-free or an out-of-range
     id would silently put the same physical page on the free list twice,
@@ -458,40 +528,116 @@ class PageAllocator:
         self.n_pages = n_pages
         self._free = list(range(n_pages - 1, -1, -1))
         self._live: set = set()
+        self._refs: dict = {}               # live pid -> refcount >= 1
+        self._retained: OrderedDict = OrderedDict()   # ref-0 parked, LRU
+        self._retainable: set = set()       # pids the prefix index marked
+        self._drop_hooks: list = []
         self._high_water = 0
         self._refusals = 0
+        self._shares = 0
+        self._reclaimed = 0
 
     @property
     def free_pages(self) -> int:
         return len(self._free)
 
+    @property
+    def available_pages(self) -> int:
+        """Pages an ``alloc`` could hand out: free + reclaimable retained."""
+        return len(self._free) + len(self._retained)
+
+    def refcount(self, pid: int) -> int:
+        """Current reference count of a page (0 for free/retained)."""
+        return self._refs.get(int(pid), 0)
+
+    def _reclaim_one(self) -> None:
+        pid, _ = self._retained.popitem(last=False)     # oldest first
+        self._retainable.discard(pid)
+        for hook in self._drop_hooks:
+            hook(pid)
+        self._free.append(pid)
+        self._reclaimed += 1
+
     def alloc(self, n: int):
-        """n physical page ids, or None if the pool can't cover them.
-        ``n <= 0`` raises: a zero/negative grant is always a caller
-        accounting bug (``admission_pages`` never returns one), and
-        ``alloc(0) -> []`` would read as a successful admission that
-        owns no pages — the slot's first tail flush would then scatter
-        through an unowned page-table row."""
+        """n private physical page ids (refcount 1 each), or None if the
+        pool can't cover them.  ``n <= 0`` raises: a zero/negative grant
+        is always a caller accounting bug (``admission_pages`` never
+        returns one), and ``alloc(0) -> []`` would read as a successful
+        admission that owns no pages — the slot's first tail flush would
+        then scatter through an unowned page-table row."""
         if n <= 0:
             raise ValueError(
                 f"PageAllocator.alloc: page count must be positive, got {n}")
-        if n > len(self._free):
+        if n > len(self._free) + len(self._retained):
             self._refusals += 1
             return None
+        while n > len(self._free):
+            self._reclaim_one()
         ids = [self._free.pop() for _ in range(n)]
         self._live.update(ids)
+        for i in ids:
+            self._refs[i] = 1
         self._high_water = max(self._high_water, len(self._live))
         return ids
+
+    def share(self, ids) -> None:
+        """Take one additional reference on each page in ``ids``: +1 on a
+        live page, or revive a retained page to live at refcount 1.  A
+        page that is neither live nor retained cannot be shared — its
+        bytes are gone (free pages are reallocation fodder), so the
+        caller's index is stale; raise rather than alias garbage."""
+        ids = [int(i) for i in ids]
+        for i in ids:
+            if not (i in self._live or i in self._retained):
+                raise ValueError(
+                    f"PageAllocator.share: page {i} is neither live nor "
+                    "retained — a stale prefix-index entry would alias a "
+                    "reallocated page")
+        # validate-then-commit
+        for i in ids:
+            if i in self._retained:
+                del self._retained[i]
+                self._live.add(i)
+                self._refs[i] = 1
+            else:
+                self._refs[i] += 1
+            self._shares += 1
+        self._high_water = max(self._high_water, len(self._live))
+
+    def set_retainable(self, pid: int, flag: bool = True) -> None:
+        """Mark/unmark a page for retention at refcount 0 (the prefix
+        index marks the pages it holds keys for).  Unmarking a currently
+        retained page releases it to the free list immediately."""
+        pid = int(pid)
+        if flag:
+            self._retainable.add(pid)
+        else:
+            self._retainable.discard(pid)
+            if pid in self._retained:
+                del self._retained[pid]
+                self._free.append(pid)
+
+    def on_reclaim(self, hook) -> None:
+        """Register ``hook(pid)`` to fire when a retained page is
+        reclaimed for reallocation (the prefix index purges its key)."""
+        self._drop_hooks.append(hook)
 
     def stats(self) -> dict:
         """Occupancy counters for serve_bench / the scheduler's stats dict:
         live pages now, the high-water mark since construction (peak
-        concurrent grant), and how many ``alloc`` calls were refused
-        (admission backpressure events)."""
+        concurrent grant), how many ``alloc`` calls were refused
+        (admission backpressure events), plus the sharing ledger —
+        pages currently referenced more than once, retained ref-0 pages,
+        cumulative ``share`` references taken, and retained pages
+        reclaimed back into circulation."""
         return {"n_pages": self.n_pages,
                 "live_pages": len(self._live),
                 "high_water": self._high_water,
-                "refusals": self._refusals}
+                "refusals": self._refusals,
+                "shared_pages": sum(1 for r in self._refs.values() if r > 1),
+                "retained_pages": len(self._retained),
+                "shares": self._shares,
+                "reclaimed": self._reclaimed}
 
     def free(self, ids) -> None:
         ids = [int(i) for i in ids]
@@ -508,16 +654,33 @@ class PageAllocator:
                     "physical page")
             seen.add(i)
         # validate-then-commit: a raise above must leave the pool unchanged
-        self._live.difference_update(seen)
-        self._free.extend(ids)
+        for i in ids:
+            self._refs[i] -= 1
+            if self._refs[i] > 0:
+                continue                     # another sharer still holds it
+            del self._refs[i]
+            self._live.discard(i)
+            if i in self._retainable:
+                self._retained[i] = None     # park, newest at the LRU back
+            else:
+                self._free.append(i)
 
     # -- snapshot/restore (serve-state failover, runtime/serving.py) --------
     def snapshot(self) -> dict:
-        """Plain-data copy of the allocator state (host snapshot leaf)."""
+        """Plain-data copy of the allocator state (host snapshot leaf):
+        free list (order preserved — reuse order is replay-visible),
+        live set with refcounts, the retained LRU (order preserved), and
+        the retainable mark set.  Drop hooks are process state, not
+        snapshot state — the restoring driver re-registers them."""
         return {"n_pages": self.n_pages, "free": list(self._free),
                 "live": sorted(self._live),
+                "refs": {int(k): int(v) for k, v in self._refs.items()},
+                "retained": list(self._retained),
+                "retainable": sorted(self._retainable),
                 "high_water": self._high_water,
-                "refusals": self._refusals}
+                "refusals": self._refusals,
+                "shares": self._shares,
+                "reclaimed": self._reclaimed}
 
     @classmethod
     def from_snapshot(cls, snap: dict) -> "PageAllocator":
@@ -525,9 +688,215 @@ class PageAllocator:
         a.n_pages = int(snap["n_pages"])
         a._free = [int(i) for i in snap["free"]]
         a._live = {int(i) for i in snap["live"]}
+        # pre-ISSUE-10 snapshots carry no refcounts: every live page was
+        # singly owned
+        a._refs = {int(k): int(v)
+                   for k, v in snap.get("refs", {}).items()} \
+            or {i: 1 for i in a._live}
+        a._retained = OrderedDict(
+            (int(i), None) for i in snap.get("retained", ()))
+        a._retainable = {int(i) for i in snap.get("retainable", ())}
+        a._drop_hooks = []
         a._high_water = int(snap.get("high_water", len(a._live)))
         a._refusals = int(snap.get("refusals", 0))
+        a._shares = int(snap.get("shares", 0))
+        a._reclaimed = int(snap.get("reclaimed", 0))
         return a
+
+
+_PREFIX_MULT = 1099511628211          # FNV-1a prime, odd -> invertible
+_PREFIX_SEED = 14695981039346656037   # FNV-1a offset basis
+_U64 = (1 << 64) - 1
+
+
+def prefix_chunk_keys(tokens, page_size: int) -> list:
+    """Rolling hash over page-aligned chunks of a token sequence.
+
+    One uint64 key per *full* page of tokens; key j digests the entire
+    prefix ``tokens[:(j+1) * page_size]`` (the hash rolls, it does not
+    reset per page), so equal keys at chunk j mean equal full prefixes
+    up to that page boundary — the property that lets the prefix index
+    match the *longest* shared page-aligned prefix by scanning keys
+    left to right.  ``tok + 1`` keeps a zero token from being absorbed
+    (h * m + 0 == h * m would make [0] and [] collide)."""
+    h = _PREFIX_SEED
+    keys = []
+    toks = np.asarray(tokens).reshape(-1)
+    n_full = len(toks) // page_size
+    for j in range(n_full):
+        for t in toks[j * page_size:(j + 1) * page_size]:
+            h = (h * _PREFIX_MULT + int(t) + 1) & _U64
+        keys.append(h)
+    return keys
+
+
+class PrefixCache:
+    """Prefix-hash index over full flushed physical pages (ISSUE 10).
+
+    Maps rolling prefix-chunk keys (``prefix_chunk_keys``) to physical
+    page ids so a new admission sharing a page-aligned prompt prefix
+    with a live or retained request reuses those pages instead of
+    re-prefilling and re-quantizing them:
+
+    * ``acquire(tokens, max_chunks)`` — longest indexed prefix of the
+      prompt, capped at ``max_chunks`` pages; takes a reference on each
+      matched page (``PageAllocator.share``) and returns
+      ``(n_shared_tokens, page_ids)``.  The caller maps those ids at
+      page-table indices ``[0, d)`` and prefills from token
+      ``n_shared_tokens``.
+    * ``register(tokens, page_ids)`` — index a served request's full
+      flushed prefix pages (``len(tokens) // ps`` of them) and mark
+      them retainable.  First writer wins: a key already indexed keeps
+      its existing page (typically the very page this request shared).
+    * reclaim — the index registers an ``on_reclaim`` hook, so when the
+      allocator recycles a retained page the key is purged before the
+      page's bytes can be rewritten; index entries therefore always
+      point at live-or-retained pages and ``share`` never aliases.
+
+    The index never copies KV bytes and never blocks the pool: retained
+    pages are reclaimed LRU-oldest-first the moment an allocation needs
+    them."""
+
+    def __init__(self, alloc: "PageAllocator", page_size: int):
+        self.alloc = alloc
+        self.page_size = int(page_size)
+        self._index: dict = {}       # chunk key -> physical page id
+        self._by_pid: dict = {}      # physical page id -> chunk key
+        self.lookups = 0
+        self.hits = 0
+        self.hit_tokens = 0
+        self.pages_deduped = 0
+        alloc.on_reclaim(self._on_reclaim)
+
+    def __len__(self) -> int:
+        return len(self._index)
+
+    def _on_reclaim(self, pid: int) -> None:
+        key = self._by_pid.pop(int(pid), None)
+        if key is not None:
+            self._index.pop(key, None)
+
+    def acquire(self, tokens, max_chunks: int):
+        """Match the longest indexed page-aligned prefix of ``tokens``
+        (at most ``max_chunks`` pages), take a reference on each matched
+        page, and return ``(n_shared_tokens, page_ids)``.  A miss is
+        ``(0, [])``.  Callers cap ``max_chunks`` at
+        ``(len(tokens) - 1) // page_size`` so at least one prompt token
+        is always left to feed — the first sampled token needs the last
+        prompt position's logits."""
+        self.lookups += 1
+        keys = prefix_chunk_keys(tokens, self.page_size)[:max(max_chunks, 0)]
+        pids = []
+        for key in keys:
+            pid = self._index.get(key)
+            if pid is None:
+                break
+            pids.append(pid)
+        if not pids:
+            return 0, []
+        self.alloc.share(pids)
+        self.hits += 1
+        self.hit_tokens += len(pids) * self.page_size
+        self.pages_deduped += len(pids)
+        return len(pids) * self.page_size, list(pids)
+
+    def register(self, tokens, page_ids) -> int:
+        """Index a request's full flushed prefix pages: chunk j's key ->
+        ``page_ids[j]`` for every fully-flushed page (``len(tokens) //
+        page_size`` of them, clipped to the grant).  Pages now indexed
+        are marked retainable so their bytes survive the request's
+        release.  Returns the number of *new* index entries."""
+        n_flushed = min(len(np.asarray(tokens).reshape(-1))
+                        // self.page_size, len(page_ids))
+        keys = prefix_chunk_keys(tokens, self.page_size)[:n_flushed]
+        added = 0
+        for key, pid in zip(keys, page_ids):
+            pid = int(pid)
+            if key in self._index:
+                continue                     # first writer wins
+            if pid in self._by_pid:
+                continue                     # page already keyed elsewhere
+            self._index[key] = pid
+            self._by_pid[pid] = key
+            self.alloc.set_retainable(pid, True)
+            added += 1
+        return added
+
+    def stats(self) -> dict:
+        return {"entries": len(self._index),
+                "lookups": self.lookups,
+                "hits": self.hits,
+                "hit_tokens": self.hit_tokens,
+                "pages_deduped": self.pages_deduped}
+
+    # -- snapshot/restore (failover: the index must survive a replay) ------
+    def snapshot(self) -> dict:
+        return {"page_size": self.page_size,
+                "index": [[int(k), int(p)] for k, p in self._index.items()],
+                "lookups": self.lookups, "hits": self.hits,
+                "hit_tokens": self.hit_tokens,
+                "pages_deduped": self.pages_deduped}
+
+    @classmethod
+    def from_snapshot(cls, snap: dict,
+                      alloc: "PageAllocator") -> "PrefixCache":
+        pc = cls(alloc, int(snap["page_size"]))
+        for k, p in snap["index"]:
+            pc._index[int(k)] = int(p)
+            pc._by_pid[int(p)] = int(k)
+        pc.lookups = int(snap.get("lookups", 0))
+        pc.hits = int(snap.get("hits", 0))
+        pc.hit_tokens = int(snap.get("hit_tokens", 0))
+        pc.pages_deduped = int(snap.get("pages_deduped", 0))
+        return pc
+
+
+def cow_fork(cache, alloc: "PageAllocator", page_ids, start_idx: int = 0):
+    """Copy-on-write fork: make every page of a slot's grant from logical
+    index ``start_idx`` on *private* before a write can land there.
+
+    Any page in that range with refcount > 1 is copied — int8 planes,
+    f32 scales, and (if present) its ``page_sum`` digest — onto a fresh
+    page from the allocator, the original's refcount is decremented (the
+    other sharers keep it), and the grant list is updated in place of
+    return.  Pages already private pass through untouched.
+
+    In the aligned admission flow this is a checked no-op: sharing stops
+    strictly below the write frontier, so the writable range holds only
+    private pages.  It exists as the enforcement point — the invariant
+    "no write ever lands on a page with refcount > 1" is guaranteed by
+    calling this before granting write access, not by hoping the
+    alignment argument holds everywhere forever.
+
+    Returns ``(cache, new_page_ids, n_forked)``.  Raises RuntimeError if
+    the pool cannot supply a fork target (callers size grants so this
+    cannot happen on the admission path)."""
+    ids = [int(i) for i in page_ids]
+    out = cache
+    forked = 0
+    for j in range(max(start_idx, 0), len(ids)):
+        old = ids[j]
+        if alloc.refcount(old) <= 1:
+            continue
+        got = alloc.alloc(1)
+        if got is None:
+            raise RuntimeError(
+                "cow_fork: page pool exhausted while forking a shared "
+                f"page (id {old}) — the grant was undersized")
+        new = got[0]
+        out = dict(
+            out,
+            k_pages=out["k_pages"].at[:, new].set(out["k_pages"][:, old]),
+            v_pages=out["v_pages"].at[:, new].set(out["v_pages"][:, old]),
+            k_scale=out["k_scale"].at[:, new].set(out["k_scale"][:, old]),
+            v_scale=out["v_scale"].at[:, new].set(out["v_scale"][:, old]))
+        if CHECKSUM_KEY in out:
+            out = dict(out, **{CHECKSUM_KEY: out[CHECKSUM_KEY].at[:, new].set(
+                out[CHECKSUM_KEY][:, old])})
+        alloc.free([old])
+        ids[j] = new
+        forked += 1
+    return out, ids, forked
 
 
 def extract_slot_pages(cache, slot: int, page_ids) -> dict:

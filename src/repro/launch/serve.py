@@ -227,7 +227,7 @@ def serve_continuous(cfg, params, prompts: np.ndarray, n_tokens: int, *,
                      deadline_s=None, priority=None, monitor=None,
                      injector=None, snapshot_every: int = 0,
                      max_replays: int = 3, watchdog=None,
-                     integrity: str = "off", log=print):
+                     integrity: str = "off", prefix_cache=False, log=print):
     """Continuous-batching scheduler: serve a queue of R requests through
     ``slots`` persistent decode slots.
 
@@ -296,6 +296,16 @@ def serve_continuous(cfg, params, prompts: np.ndarray, n_tokens: int, *,
       ``'ok'`` is trustworthy even under estimator faults.  ``watchdog``
       (a runtime/watchdog.py ``Watchdog``) additionally wraps each
       segment for straggler/hang detection (``stats['stragglers']``).
+    * **Prefix caching** (``prefix_cache``, int8 KV only, ISSUE 10).
+      ``True``/'on': admissions run page-aligned chunked prefill and
+      share physical pages across page-aligned prompt prefixes via the
+      refcounted allocator + prefix-hash index — a hit skips prefill
+      (and quantization) for the shared pages entirely, bitwise-
+      identically to cold serving; 'cold' runs the same chunked path
+      with sharing disabled (the drill's reference leg).
+      ``stats['prefix']`` reports hits, hit tokens, pages deduped, and
+      prefill positions computed vs total (docs/serving.md has the full
+      operator contract).
     """
     from repro.runtime.serving import serve_continuous_ft
     params = _place(cfg, params, par, prepare)
@@ -307,7 +317,7 @@ def serve_continuous(cfg, params, prompts: np.ndarray, n_tokens: int, *,
         deadline_s=deadline_s, priority=priority, monitor=monitor,
         injector=injector, snapshot_every=snapshot_every,
         max_replays=max_replays, watchdog=watchdog, integrity=integrity,
-        log=log)
+        prefix_cache=prefix_cache, log=log)
 
 
 def _sample_spec(args) -> str:
@@ -453,6 +463,20 @@ def main(argv=None):
                          "--integrity scrub:2 — asserts exact-coordinate "
                          "detection, surgical repair, and bitwise-"
                          "identical outputs vs the fault-free run")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share int8 KV pages across page-aligned prompt "
+                         "prefixes on the --continuous run (refcounted "
+                         "copy-on-write pages + prefix-hash index, "
+                         "core/kvcache.py): hits skip prefill for the "
+                         "shared pages, bitwise-identically; requires "
+                         "--kv int8")
+    ap.add_argument("--prefix-drill", action="store_true",
+                    help="run the self-verifying prefix-cache drill "
+                         "(runtime/serving.py prefix_drill): staggered "
+                         "admissions with a shared system prompt, warm "
+                         "vs cold legs — asserts bitwise parity, visible "
+                         "page dedup, >40% prefill positions removed, "
+                         "and a drained pool")
     ap.add_argument("--sampled-chaos", action="store_true",
                     help="arm a FailureInjector.sampled schedule (seeded "
                          "by --chaos-seed) on the --continuous run: device "
@@ -478,6 +502,10 @@ def main(argv=None):
         from repro.runtime.serving import integrity_drill
         integrity_drill(args.arch, seed=args.chaos_seed)
         return 0
+    if args.prefix_drill:
+        from repro.runtime.serving import prefix_drill
+        prefix_drill(args.arch, seed=args.chaos_seed)
+        return 0
     if args.tune:
         import os
         os.environ["REPRO_DSCIM_TUNE"] = "1"
@@ -501,6 +529,11 @@ def main(argv=None):
                                    if args.dscim != "off" else [])
         prompts = rng.integers(0, cfg.vocab, (args.requests, args.prompt_len),
                                dtype=np.int32)
+        if args.prefix_cache:
+            # a shared page-aligned "system prompt" over 3/4 of the queue
+            # so the prefix index has something to hit
+            shared = max(args.prompt_len // 2, args.page_size)
+            prompts[:args.requests * 3 // 4, :shared] = prompts[0, :shared]
         # skewed per-request budgets exercise slot recycling
         budgets = rng.integers(max(2, args.tokens // 4), args.tokens + 1,
                                (args.requests,), dtype=np.int32)
@@ -528,7 +561,8 @@ def main(argv=None):
                 par=par, prepare=not args.no_prepare,
                 paged_attn=args.paged_attn, spec=args.spec,
                 injector=injector, snapshot_every=snapshot_every,
-                integrity=args.integrity)
+                integrity=args.integrity,
+                prefix_cache=args.prefix_cache)
             extra = ""
             if stats.get("integrity"):
                 ig = stats["integrity"]
@@ -537,6 +571,13 @@ def main(argv=None):
                          f"{ig['weight_mismatches']}w mismatches, "
                          f"{ig['page_repairs'] + ig['weight_repairs']} "
                          f"repairs, {ig['replays']} replays")
+            if stats.get("prefix"):
+                pf = stats["prefix"]
+                extra += (f", prefix: {pf['hits']}/{pf['lookups']} hits, "
+                          f"{pf['pages_deduped']} pages deduped, "
+                          f"{pf['prefill_positions_computed']}/"
+                          f"{pf['prefill_positions_total']} prefill "
+                          "positions computed")
             print(f"[serve-cb] {tag}: {stats['tok_s']:.1f} tok/s over "
                   f"{stats['useful_tokens']} useful tokens, occupancy "
                   f"{stats['occupancy']:.2f} "

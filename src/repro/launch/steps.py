@@ -794,7 +794,7 @@ def make_segment_fn(cfg: ArchConfig, par: ParallelCtx | None = None,
 def make_extend_fn(cfg: ArchConfig, par: ParallelCtx | None = None,
                    chunk_len: int = 16, *, eos_id: int | None = None,
                    sample: str = "greedy", paged_attn: str = "auto",
-                   jit: bool = True):
+                   trace_logits: bool = False, jit: bool = True):
     """One jitted chunked-prefill step for the serving router
     (runtime/router.py): feed ``chunk_len`` prompt tokens of ONE slot
     through the batched verify forward (``models.lm.decode_multi``) while
@@ -828,7 +828,12 @@ def make_extend_fn(cfg: ArchConfig, par: ParallelCtx | None = None,
     arms the slot (tok/done/n_out=1/max_new).  Non-emitting calls leave
     the slot done-masked so interleaved segments skip it.  The state is
     donated; the slot's page-table row must already hold its granted
-    pages (the router writes it host-side at begin-admit)."""
+    pages (the router writes it host-side at begin-admit).
+
+    ``trace_logits=True`` compiles a separate program returning a third
+    element — the slot's full-chunk logits ((chunk_len, Vp) f32, pad
+    positions included) — the prefix-cache bitwise-parity tests compare
+    these traces hit-vs-cold; the serving paths never pay for them."""
     from repro.core import kvcache
     model = get_model(cfg)
     _check_spec(model, cfg)
@@ -870,7 +875,7 @@ def make_extend_fn(cfg: ArchConfig, par: ParallelCtx | None = None,
                            key2, state["rng"])
         done0 = jnp.where(emit, (tok0 == eos) | (max_new <= 1), True)
         old = state["tok"][slot]
-        return dict(
+        state2 = dict(
             state, cache=cache2,
             tok=state["tok"].at[slot].set(jnp.where(emit, tok0, old)),
             done=state["done"].at[slot].set(done0),
@@ -878,7 +883,10 @@ def make_extend_fn(cfg: ArchConfig, par: ParallelCtx | None = None,
                 jnp.where(emit, 1, state["n_out"][slot])),
             max_new=state["max_new"].at[slot].set(
                 jnp.where(emit, max_new, state["max_new"][slot])),
-            rng=key), tok0
+            rng=key)
+        if trace_logits:
+            return state2, tok0, logits[slot].astype(jnp.float32)
+        return state2, tok0
 
     return jax.jit(extend, donate_argnums=(1,)) if jit else extend
 

@@ -29,6 +29,16 @@ Admission paths (the PR 4 "length bucketing" follow-on):
   between chunks, so a 10k-token admission never stalls streaming
   requests.  Sequential-decode equivalent (teacher-forced ``decode``
   parity), not bitwise-equal to the batched full-prompt prefill.
+* **prefix-cached** (``prefix_cache=True``, ISSUE 10) — every
+  admission routes chunked at ``chunk_len == page_size`` through one
+  compiled extend program; a prompt sharing a page-aligned prefix with
+  an earlier request maps its leading page-table rows to the donor's
+  physical int8 pages (``PrefixCache.acquire``) and feeds only from
+  the first divergent page.  Because hit and miss run the identical
+  program over identical bytes, a prefix hit is bitwise-identical to
+  the same prompt served cold by this router.  ``cow_fork`` guards the
+  write frontier; refcounts ride the allocator snapshot so failover
+  replay preserves sharing.
 
 Robustness surface (the headline):
 
@@ -87,7 +97,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.kvcache import PageAllocator, admission_pages, n_pages_for
+from repro.core.kvcache import (PageAllocator, PrefixCache, admission_pages,
+                                cow_fork, n_pages_for)
 from repro.launch.steps import (_parse_spec, init_serve_state, make_admit_fn,
                                 make_extend_fn, make_probe_fn,
                                 make_segment_fn)
@@ -217,7 +228,10 @@ class Router:
     bounds per-request budgets (page grants are sized from it).
     ``monitor``/``injector``/``snapshot_every`` are the PR 6 knobs with
     identical semantics; ``spec`` enables self-speculative decode
-    segments (PR 7).  Call ``await start()`` before ``submit``."""
+    segments (PR 7).  ``prefix_cache`` turns on page-aligned prefix
+    sharing (int8 KV only; forces every admission chunked at
+    ``chunk_len == page_size`` so hits stay bitwise-identical to cold).
+    Call ``await start()`` before ``submit``."""
 
     def __init__(self, cfg, params, *, slots: int = 4, seg_len: int = 4,
                  kv: str = "int8", page_size: int = 8,
@@ -229,7 +243,7 @@ class Router:
                  spec: str | None = None, par=None, prepare: bool = True,
                  rng_seed: int = 0, monitor=None, injector=None,
                  snapshot_every: int = 0, max_replays: int = 3,
-                 integrity: str = "off",
+                 integrity: str = "off", prefix_cache: bool = False,
                  resume: dict | None = None, log=print):
         from repro.launch.serve import _place   # lazy: serve.py imports us
         self.cfg = cfg
@@ -240,6 +254,15 @@ class Router:
         self.page_size = page_size
         self.buckets = tuple(sorted(set(int(b) for b in buckets)))
         self.chunk_len = int(chunk_len)
+        self.prefix_cache = bool(prefix_cache)
+        if self.prefix_cache:
+            if kv != "int8":
+                raise ValueError("prefix caching shares int8 physical "
+                                 "pages; pass kv='int8'")
+            # every admission (hit or miss) runs the one compiled extend
+            # program at chunk_len == page_size, page-aligned from the
+            # first divergent page — the bitwise hit-vs-cold contract
+            self.chunk_len = self.page_size
         self.max_prompt = int(max_prompt)
         self.max_new_cap = int(max_new_cap)
         self.max_queue = int(max_queue)
@@ -284,6 +307,8 @@ class Router:
             if kv == "int8" else None
         self.n_pages = self._alloc.n_pages if self._alloc is not None else None
         self._no_pages = jnp.zeros((self.mp,), jnp.int32)
+        self._prefix = PrefixCache(self._alloc, page_size) \
+            if self.prefix_cache else None
 
         self._segment = make_segment_fn(cfg, par, seg_len, eos_id=eos_id,
                                         sample=sample, paged_attn=paged_attn,
@@ -315,6 +340,7 @@ class Router:
             "admit_step": {},                # rid -> global_step at admission
             "segments": 0, "global_step": 0,
             "live_steps": 0, "total_steps": 0,
+            "prefill_computed": 0, "prefill_total": 0,
             "counters": {"deadline_cancelled": 0, "cancelled": 0,
                          "quarantined": 0, "degraded": 0, "refused_queue": 0,
                          "refused_too_large": 0, "refused_draining": 0},
@@ -394,7 +420,7 @@ class Router:
             raise Refused("too_large", detail=(
                 f"prompt {S} tokens / budget {max_new} vs max_prompt "
                 f"{self.max_prompt} / max_new_cap {self.max_new_cap}"))
-        chunked = S not in self.buckets
+        chunked = self.prefix_cache or S not in self.buckets
         if self.n_pages is not None \
                 and self._need_pages(S, max_new, chunked) > self.n_pages:
             self._host["counters"]["refused_too_large"] += 1
@@ -459,6 +485,10 @@ class Router:
             "tok_s": useful / max(dt, 1e-9),
             "occupancy": h["live_steps"] / max(h["total_steps"], 1),
             "pages": self._alloc.stats() if self._alloc is not None else None,
+            "prefix": (dict(self._prefix.stats(),
+                            prefill_positions_computed=h["prefill_computed"],
+                            prefill_positions_total=h["prefill_total"])
+                       if self._prefix is not None else None),
             "queue_depth": self._queue_depth(),
             "integrity": (dict(self._integrity.stats(),
                                detections=self._integrity.detections)
@@ -473,13 +503,24 @@ class Router:
         return {"state": jax.device_get(self._state),
                 "host": copy.deepcopy(self._host),
                 "alloc": self._alloc.snapshot()
-                if self._alloc is not None else None}
+                if self._alloc is not None else None,
+                "prefix": self._prefix.snapshot()
+                if self._prefix is not None else None}
 
     def _restore_blob(self, blob: dict) -> None:
         self._state = jax.device_put(blob["state"])
         self._host = copy.deepcopy(blob["host"])
+        self._host.setdefault("prefill_computed", 0)
+        self._host.setdefault("prefill_total", 0)
         if blob["alloc"] is not None:
             self._alloc = PageAllocator.from_snapshot(blob["alloc"])
+        if blob.get("prefix") is not None:
+            self._prefix = PrefixCache.from_snapshot(blob["prefix"],
+                                                     self._alloc)
+        elif self._prefix is not None:
+            # prefix router resumed from a pre-prefix blob: start a
+            # fresh index bound to the restored allocator
+            self._prefix = PrefixCache(self._alloc, self.page_size)
         # arrivals ingested after the snapshot was taken vanish from the
         # restored host — re-ingest anything the snapshot doesn't know
         for rid in sorted(self._requests):
@@ -565,13 +606,22 @@ class Router:
             rid = h["waiting"][0]
             req = self._requests[rid]
             S = len(req.prompt)
-            chunked = S not in self.buckets
+            chunked = self.prefix_cache or S not in self.buckets
             pages = self._no_pages
+            d_shared = 0
             if self._alloc is not None:
                 need = self._need_pages(S, req.max_new, chunked)
-                ids = self._alloc.alloc(need)
-                if ids is None:
+                shared: list = []
+                if self._prefix is not None:
+                    _n, shared = self._prefix.acquire(
+                        req.prompt, (S - 1) // self.page_size)
+                d_shared = len(shared)
+                fresh = self._alloc.alloc(need - d_shared)
+                if fresh is None:
+                    if shared:             # return the borrowed refs
+                        self._alloc.free(shared)
                     return                     # pool exhausted: wait
+                ids = shared + fresh
                 h["slot_pages"][b] = ids
                 pages = jnp.asarray(ids + [ids[-1]] * (self.mp - need),
                                     jnp.int32)
@@ -581,16 +631,29 @@ class Router:
             h["admit_step"][rid] = h["global_step"]
             if chunked:
                 # begin-admit: point the slot's page-table row at its
-                # grant and rewind its position; the slot stays
-                # done-masked until the final chunk emits
+                # grant and rewind its position past any shared prefix;
+                # the slot stays done-masked until the final chunk emits
                 cache = self._state["cache"]
-                upd = {"pos": cache["pos"].at[b].set(0)}
+                if self._prefix is not None and h["slot_pages"][b]:
+                    # enforcement point: writes land only on private
+                    # pages — a shared page at/after the write frontier
+                    # would be forked here (fresh grants never are)
+                    cache, ids, _nf = cow_fork(cache, self._alloc,
+                                               h["slot_pages"][b],
+                                               start_idx=d_shared)
+                    h["slot_pages"][b] = ids
+                    pages = jnp.asarray(
+                        ids + [ids[-1]] * (self.mp - len(ids)), jnp.int32)
+                fed0 = d_shared * self.page_size
+                upd = {"pos": cache["pos"].at[b].set(fed0)}
                 if "page_table" in cache:
                     upd["page_table"] = cache["page_table"].at[b].set(pages)
                 self._state = dict(self._state, cache=dict(cache, **upd),
                                    done=self._state["done"].at[b].set(True))
                 h["slot_phase"][b] = "prefill"
-                h["slot_fed"][b] = 0
+                h["slot_fed"][b] = fed0
+                h["prefill_computed"] += S - fed0
+                h["prefill_total"] += S
             else:
                 admit = make_admit_fn(self._cfg_now, self.par,
                                       eos_id=self.eos_id, sample=self.sample)
@@ -630,6 +693,13 @@ class Router:
             if emit:
                 h["out"][rid].append(int(tok0))
                 h["slot_phase"][b] = "decode"
+                if self._prefix is not None and h["slot_pages"][b]:
+                    # every fully-flushed prompt page is now immutable
+                    # (writes continue past pos) — index it for reuse
+                    self._prefix.register(
+                        req.prompt,
+                        h["slot_pages"][b][:len(req.prompt)
+                                           // self.page_size])
 
     def _ladder_reserve(self, rid: int) -> None:
         """Quarantined request: re-serve from the prompt down the

@@ -74,12 +74,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.kvcache import (PageAllocator, admission_pages,
-                                extract_slot_pages, insert_slot_pages,
-                                n_pages_for)
+from repro.core.kvcache import (PageAllocator, PrefixCache, admission_pages,
+                                cow_fork, extract_slot_pages,
+                                insert_slot_pages, n_pages_for)
 from repro.launch.steps import (_parse_spec, init_serve_state,
-                                make_admit_fn, make_probe_fn,
-                                make_segment_fn)
+                                make_admit_fn, make_extend_fn,
+                                make_probe_fn, make_segment_fn)
 from repro.runtime.failover import (IntegrityReplay,
                                     SimulatedHardwareFailure,
                                     run_with_failover)
@@ -88,7 +88,7 @@ from repro.runtime.watchdog import AccuracyWatchdog, StepHang
 
 __all__ = ["STATUS_OK", "STATUS_DEADLINE", "serve_continuous_ft",
            "next_ladder_spec", "exact_probe_spec", "watchdog_for_spec",
-           "chaos_drill", "integrity_drill"]
+           "chaos_drill", "integrity_drill", "prefix_drill"]
 
 STATUS_OK = "ok"
 STATUS_DEADLINE = "deadline"
@@ -174,7 +174,8 @@ def serve_continuous_ft(cfg, params, prompts: np.ndarray, n_tokens: int, *,
                         injector=None, snapshot_every: int = 0,
                         max_replays: int = 3, watchdog=None,
                         spec: str | None = None,
-                        integrity: str = "off", log=print):
+                        integrity: str = "off", prefix_cache=False,
+                        log=print):
     """Fault-tolerant continuous batching over already-placed ``params``
     (launch/serve.py ``serve_continuous`` is the user-facing wrapper —
     argument semantics and the failure-mode contract are documented
@@ -190,7 +191,21 @@ def serve_continuous_ft(cfg, params, prompts: np.ndarray, n_tokens: int, *,
     repair — the owning slot alone is rewound to the last verified
     snapshot (``insert_slot_pages``) or re-served from its prompt, every
     other slot untouched.  'off' is bit-for-bit today's behavior (the
-    digest plane is never created)."""
+    digest plane is never created).
+
+    ``prefix_cache`` (ISSUE 10, int8 KV only): ``True``/'on' admits
+    every request through page-aligned chunked prefill (one compiled
+    ``make_extend_fn`` program at ``chunk_len == page_size``) and shares
+    physical pages across page-aligned prompt prefixes via the
+    refcounted ``PrefixCache`` — a hit maps its leading page-table
+    entries at the donor's pages and prefills only from the first
+    divergent page.  Because hit and miss admissions run the *same*
+    chunk programs on the same inputs (and shared pages hold exactly
+    the bytes those programs would have produced), prefix-hit serving
+    is bitwise-identical to cold serving.  'cold' runs the identical
+    chunked admission path with lookup/registration disabled — the
+    bitwise reference leg (``prefix_drill``).  ``False`` is today's
+    one-shot bucketed admission, untouched."""
     prompts = np.asarray(prompts)
     R, S = prompts.shape
     budgets = np.full((R,), n_tokens, np.int32) if max_new is None \
@@ -214,17 +229,31 @@ def serve_continuous_ft(cfg, params, prompts: np.ndarray, n_tokens: int, *,
         raise ValueError("integrity checksums cover the int8 paged cache; "
                          "pass kv='int8' (the float dense cache is the "
                          "watchdog's statistical territory)")
-    # +k_spec headroom: a speculative window may write k draft positions
-    # past the committed pos before rollback, so every slot's cache (and
-    # page grant, below) is sized for budget + k in-flight positions.
+    if prefix_cache is True:
+        prefix_cache = "on"
+    if prefix_cache not in (False, None, "", "off", "on", "cold"):
+        raise ValueError(f"prefix_cache must be one of False/'on'/'cold', "
+                         f"got {prefix_cache!r}")
+    use_prefix = prefix_cache in ("on", "cold")
+    if use_prefix and kv != "int8":
+        raise ValueError("prefix caching shares int8 physical pages; "
+                         "pass kv='int8'")
+    # +headroom past prompt + budget: a speculative window may write k
+    # draft positions past the committed pos before rollback, and a
+    # chunked prefill (prefix mode) may write up to page_size - 1 pad
+    # positions past the prompt — slot capacity and page grants cover
+    # whichever the serving mode can incur.
     k_spec = _parse_spec(spec)[1] if _parse_spec(spec) else 0
-    capacity = S + int(budgets.max()) + k_spec
+    headroom = max(k_spec, page_size - 1) if use_prefix else k_spec
+    capacity = S + int(budgets.max()) + headroom
     mp = n_pages_for(capacity, page_size)
     state0 = init_serve_state(cfg, slots, capacity, kv=kv,
                               page_size=page_size, n_pages=n_pages,
                               seed=rng_seed, integrity=integrity_period > 0)
     alloc0 = PageAllocator(state0["cache"]["k_pages"].shape[1]) \
         if kv == "int8" else None
+    pfx0 = PrefixCache(alloc0, page_size) if use_prefix else None
+    pfx_box = {"pfx": pfx0}
     engine = None
     if integrity_period > 0:
         from repro.core.qweights import golden_weight_copy
@@ -245,6 +274,7 @@ def serve_continuous_ft(cfg, params, prompts: np.ndarray, n_tokens: int, *,
                      "deadline_cancelled": 0},
         "segments": 0, "global_step": 0,
         "live_steps": 0, "total_steps": 0,
+        "prefill_computed": 0, "prefill_total": 0, "admit_lat": [],
     }
     probe = None
     if monitor is not None and monitor.rel_threshold is not None:
@@ -270,19 +300,23 @@ def serve_continuous_ft(cfg, params, prompts: np.ndarray, n_tokens: int, *,
             return True
         return False
 
-    def _snap(state, host, alloc):
+    def _snap(state, host, alloc, pfx=None):
         return {"state": jax.device_get(state),
                 "host": copy.deepcopy(host),
-                "alloc": alloc.snapshot() if alloc is not None else None}
+                "alloc": alloc.snapshot() if alloc is not None else None,
+                "prefix": pfx.snapshot() if pfx is not None else None}
 
     def _loop(snap):
         if snap is None:
-            state, host, alloc = state0, host0, alloc0
+            state, host, alloc, pfx = state0, host0, alloc0, pfx0
         else:
             state = jax.device_put(snap["state"])
             host = copy.deepcopy(snap["host"])
             alloc = None if snap["alloc"] is None \
                 else PageAllocator.from_snapshot(snap["alloc"])
+            pfx = None if snap.get("prefix") is None \
+                else PrefixCache.from_snapshot(snap["prefix"], alloc)
+        pfx_box["pfx"] = pfx
         if watchdog is not None:
             watchdog.reset()
         # segments run since the last weight-digest sweep: a corrupted
@@ -406,7 +440,7 @@ def serve_continuous_ft(cfg, params, prompts: np.ndarray, n_tokens: int, *,
             seg = host["segments"]
             if holder is not None and snapshot_every > 0 \
                     and seg % snapshot_every == 0:
-                holder["snap"] = _snap(state, host, alloc)
+                holder["snap"] = _snap(state, host, alloc, pfx)
             if injector is not None:
                 injector.maybe_fail(seg)
             fault_now = injector.serving_fault(seg) \
@@ -414,6 +448,9 @@ def serve_continuous_ft(cfg, params, prompts: np.ndarray, n_tokens: int, *,
             cfg_now = cfg if not fault_now else \
                 dataclasses.replace(cfg, dscim_fault=fault_now)
             admit = make_admit_fn(cfg_now, par, eos_id=eos_id, sample=sample)
+            extend = make_extend_fn(cfg_now, par, page_size, eos_id=eos_id,
+                                    sample=sample, paged_attn=paged_attn) \
+                if pfx is not None else None
             segment = make_segment_fn(cfg_now, par, seg_len, eos_id=eos_id,
                                       sample=sample, paged_attn=paged_attn,
                                       spec=spec)
@@ -459,28 +496,87 @@ def serve_continuous_ft(cfg, params, prompts: np.ndarray, n_tokens: int, *,
                         continue
                     rq = host["next_req"]
                 pages = no_pages
+                ids = None
+                d_shared = 0
                 if alloc is not None:
                     need = admission_pages(S, int(budgets[rq]), page_size,
-                                           k_spec)
-                    ids = grant(need,
-                                int(prio[rq]) if prio is not None else None)
-                    if ids is None:                # pool exhausted: wait
+                                           headroom)
+                    shared = []
+                    if pfx is not None and prefix_cache == "on":
+                        _ntok, shared = pfx.acquire(prompts[rq],
+                                                    (S - 1) // page_size)
+                    d_shared = len(shared)
+                    fresh = grant(need - d_shared,
+                                  int(prio[rq]) if prio is not None else None)
+                    if fresh is None:              # pool exhausted: wait
+                        if shared:
+                            alloc.free(shared)     # release the refs we took
                         continue
+                    ids = shared + fresh
                     host["slot_pages"][b] = ids
-                    # pad to mp with a self-owned id (never read unmasked,
-                    # never flushed — pos stays under the budget's pages)
-                    pages = jnp.asarray(ids + [ids[-1]] * (mp - need),
-                                        jnp.int32)
+                    if pfx is None:
+                        # pad to mp with a self-owned id (never read
+                        # unmasked, never flushed — pos stays under the
+                        # budget's pages)
+                        pages = jnp.asarray(ids + [ids[-1]] * (mp - need),
+                                            jnp.int32)
                 if reserve:
                     host["reserve"].pop(0)
                 else:
                     host["next_req"] = rq + 1
                 if host["admit_t"][rq] is None:    # re-serves keep their
                     host["admit_t"][rq] = time.perf_counter()  # anchor
-                state, tok0 = admit(pholder["params"], state,
-                                    jnp.asarray(prompts[rq:rq + 1]),
-                                    jnp.int32(b), pages,
-                                    jnp.int32(budgets[rq]))
+                if pfx is not None:
+                    # prefix-mode admission: page-aligned chunked prefill
+                    # through ONE compiled extend program for hits and
+                    # misses alike — a hit feeds from the first divergent
+                    # page, a miss from page 0.  Same programs + same
+                    # inputs + shared pages holding exactly the bytes
+                    # those programs produced on the donor => warm
+                    # serving is bitwise-identical to cold serving.
+                    t_adm = time.perf_counter()
+                    fed = d_shared * page_size
+                    cache = state["cache"]
+                    # COW enforcement point: everything at or past the
+                    # write frontier must be private before any scatter
+                    # (a checked no-op here — sharing stops strictly
+                    # below the frontier by construction)
+                    cache, ids, _nf = cow_fork(cache, alloc, ids,
+                                               start_idx=d_shared)
+                    host["slot_pages"][b] = ids
+                    row = jnp.asarray(ids + [ids[-1]] * (mp - len(ids)),
+                                      jnp.int32)
+                    cache = dict(
+                        cache,
+                        page_table=cache["page_table"].at[b].set(row),
+                        pos=cache["pos"].at[b].set(fed))
+                    state = dict(state, cache=cache,
+                                 done=state["done"].at[b].set(True))
+                    tok0 = None
+                    while fed < S:
+                        part = prompts[rq, fed:fed + page_size]
+                        n_real = len(part)
+                        if n_real < page_size:
+                            part = np.pad(part, (0, page_size - n_real))
+                        state, tok0 = extend(
+                            pholder["params"], state,
+                            jnp.asarray(part[None]), jnp.int32(b),
+                            jnp.int32(n_real),
+                            jnp.bool_(fed + n_real >= S),
+                            jnp.int32(budgets[rq]))
+                        fed += n_real
+                    tok0 = int(tok0)               # sync: latency is real
+                    if prefix_cache == "on":
+                        pfx.register(prompts[rq], ids[:S // page_size])
+                    host["prefill_computed"] += S - d_shared * page_size
+                    host["prefill_total"] += S
+                    host["admit_lat"].append(
+                        (d_shared > 0, time.perf_counter() - t_adm))
+                else:
+                    state, tok0 = admit(pholder["params"], state,
+                                        jnp.asarray(prompts[rq:rq + 1]),
+                                        jnp.int32(b), pages,
+                                        jnp.int32(budgets[rq]))
                 host["out"][rq].append(int(tok0))
                 host["slot_req"][b] = rq
                 host["seq"] += 1
@@ -493,7 +589,7 @@ def serve_continuous_ft(cfg, params, prompts: np.ndarray, n_tokens: int, *,
                     return state, host, alloc
                 nr = host["next_req"]
                 what = (f"request {nr} "
-                        f"({admission_pages(S, int(budgets[nr]), page_size, k_spec)} "
+                        f"({admission_pages(S, int(budgets[nr]), page_size, headroom)} "
                         "pages needed") if nr < R else \
                     (f"evicted request {host['readmit'][0]} "
                      f"({host['evicted'][host['readmit'][0]]['page_count']}"
@@ -565,7 +661,7 @@ def serve_continuous_ft(cfg, params, prompts: np.ndarray, n_tokens: int, *,
                 # everything digests clean now: this becomes the repair
                 # restore point (regular snapshots may hold state later
                 # poisoned by a not-yet-detected flip; this one cannot)
-                holder["verified"] = _snap(state, host, alloc)
+                holder["verified"] = _snap(state, host, alloc, pfx)
                 if reprobe and lg_exact is not None:
                     # the pre-repair probe fetch no longer matches the
                     # repaired state — re-fetch so a surgical repair can
@@ -620,7 +716,7 @@ def serve_continuous_ft(cfg, params, prompts: np.ndarray, n_tokens: int, *,
     use_ft = injector is not None or snapshot_every > 0 \
         or watchdog is not None or engine is not None
     if use_ft:
-        snap0 = _snap(state0, host0, alloc0)
+        snap0 = _snap(state0, host0, alloc0, pfx0)
         # the initial state is verified-clean by construction
         holder = {"snap": snap0, "verified": snap0}
         (state, host, alloc), replays = run_with_failover(
@@ -669,6 +765,13 @@ def serve_continuous_ft(cfg, params, prompts: np.ndarray, n_tokens: int, *,
         "pages": alloc.stats() if alloc is not None else None,
         "integrity": (dict(engine.stats(), detections=engine.detections)
                       if engine is not None else None),
+        "prefix": (dict(
+            pfx_box["pfx"].stats(),
+            prefill_positions_computed=host["prefill_computed"],
+            prefill_positions_total=host["prefill_total"],
+            admit_lat_hit=[t for hit, t in host["admit_lat"] if hit],
+            admit_lat_miss=[t for hit, t in host["admit_lat"] if not hit])
+            if pfx_box["pfx"] is not None else None),
     }
     return [np.asarray(o, np.int32) for o in host["out"]], stats
 
@@ -981,4 +1084,86 @@ def integrity_drill(arch: str = "qwen3-0.6b", *, seed: int = 0,
         "statuses": st1["status"],
     }
     log(f"[integrity] drill ok: {report}")
+    return report
+
+
+def prefix_drill(arch: str = "qwen3-0.6b", *, seed: int = 0,
+                 log=print) -> dict:
+    """The ISSUE 10 acceptance exercise: staggered admissions sharing a
+    page-aligned system prompt, served warm (``prefix_cache='on'``) vs
+    cold (``prefix_cache='cold'`` — the identical chunked admission path
+    with lookup/registration disabled), must agree **bitwise** per
+    request while the warm leg visibly dedupes pages and skips prefill:
+
+    * every warm output equals its cold output token for token;
+    * the warm leg records prefix hits and deduped pages (requests
+      admitted after the first register-then-match its shared pages —
+      sharers overlap live, so refcounts > 1 are exercised, and the
+      last sharers release while the index retains);
+    * prefill positions actually computed drop by the shared fraction
+      (the prefill-FLOPs-removed measurement the bench rows report);
+    * after drain the pool holds zero live pages (retained ref-0 pages
+      are not live) and the retained set is non-empty — the index kept
+      the prefix resident for future admissions.
+
+    Deterministic by construction: greedy decoding, eos=-1, one
+    compiled extend program for every admission.  Returns a report dict
+    (the prefix bench rows and the CI smoke both consume it)."""
+    from repro.configs import get_arch
+    from repro.launch.serve import serve_continuous
+
+    spec = "kernel:dscim2:64"
+    cfg = dataclasses.replace(get_arch(arch).reduced(), dscim=spec)
+    from repro.models import get_model
+    model = get_model(cfg)
+    params = model.init_params(cfg, jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    R, S, n, ps = 6, 16, 6, 4
+    prompts = rng.integers(0, cfg.vocab, (R, S), dtype=np.int32)
+    # requests 0..4 share a 12-token (3-page) system prompt; request 5
+    # is fully distinct (a guaranteed miss among hits)
+    prompts[1:5, :12] = prompts[0, :12]
+    budgets = np.asarray([6, 5, 6, 4, 6, 5], np.int32)
+    knobs = dict(slots=2, seg_len=2, max_new=budgets, eos_id=-1,
+                 kv="int8", page_size=ps)
+
+    outs_cold, st_cold = serve_continuous(cfg, params, prompts, n, **knobs,
+                                          prefix_cache="cold", log=log)
+    outs_warm, st_warm = serve_continuous(cfg, params, prompts, n, **knobs,
+                                          prefix_cache="on", log=log)
+
+    # -- the acceptance contract ------------------------------------------
+    for r in range(R):
+        np.testing.assert_array_equal(
+            outs_warm[r], outs_cold[r],
+            err_msg=f"request {r}: prefix-hit serving diverged from cold")
+    pw, pc = st_warm["prefix"], st_cold["prefix"]
+    assert pc["hits"] == 0 and pc["pages_deduped"] == 0, \
+        f"cold leg must not share: {pc}"
+    assert pw["hits"] == 4, f"requests 1..4 must hit: {pw}"
+    assert pw["pages_deduped"] == 4 * 3, \
+        f"each hit shares 3 full pages: {pw}"
+    assert pw["hit_tokens"] == 4 * 12, f"12 tokens per hit: {pw}"
+    removed = 1.0 - pw["prefill_positions_computed"] \
+        / max(pw["prefill_positions_total"], 1)
+    assert removed > 0.4, \
+        f"shared prefixes must remove >40% of prefill positions: {pw}"
+    assert st_warm["pages"]["live_pages"] == 0 \
+        and st_cold["pages"]["live_pages"] == 0, \
+        "drained pools must hold zero live pages"
+    assert st_warm["pages"]["retained_pages"] > 0, \
+        f"the index must retain the shared prefix: {st_warm['pages']}"
+    assert st_warm["pages"]["shares"] == pw["pages_deduped"], \
+        f"every dedup is a share reference: {st_warm['pages']} vs {pw}"
+    assert all(s == STATUS_OK for s in st_warm["status"]), \
+        f"warm statuses: {st_warm['status']}"
+    report = {
+        "seed": seed, "requests": R,
+        "hits": pw["hits"], "pages_deduped": pw["pages_deduped"],
+        "hit_tokens": pw["hit_tokens"],
+        "prefill_removed_frac": removed,
+        "retained_pages": st_warm["pages"]["retained_pages"],
+        "statuses": st_warm["status"],
+    }
+    log(f"[prefix] drill ok: {report}")
     return report

@@ -1,0 +1,458 @@
+"""Prefix caching with refcounted copy-on-write pages (ISSUE 10,
+core/kvcache.py + runtime/serving.py + runtime/router.py): rolling
+page-chunk hashing, the allocator's share/retain/reclaim lifecycle,
+COW forking, a property-style random refcount schedule ending with a
+leak-free drain, and the bitwise hit-vs-cold contract — greedy tokens
+AND per-chunk logit traces — across both paged-attention read paths."""
+import asyncio
+
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from repro.configs import get_arch
+from repro.core.kvcache import (PageAllocator, PrefixCache, admission_pages,
+                                cow_fork, init_paged_cache, n_pages_for,
+                                prefix_chunk_keys)
+from repro.launch.serve import serve_continuous
+from repro.launch.steps import init_serve_state, make_extend_fn
+from repro.models import get_model
+
+V = 151
+
+
+def _setup():
+    cfg = get_arch("qwen3-0.6b").reduced()
+    model = get_model(cfg)
+    return cfg, model.init_params(cfg, jax.random.PRNGKey(0))
+
+
+# --------------------------------------------------------------------------
+# rolling chunk keys
+# --------------------------------------------------------------------------
+
+def test_chunk_keys_roll_over_full_pages():
+    """One key per FULL page; key j digests the whole prefix, so a
+    divergence at page j changes every key from j on while keys before
+    j are untouched — the longest-shared-prefix scan property."""
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, V, 13, dtype=np.int32)
+    b = a.copy()
+    b[5] ^= 1                                   # diverge inside page 1
+    ka, kb = prefix_chunk_keys(a, 4), prefix_chunk_keys(b, 4)
+    assert len(ka) == 3                         # 13 // 4: partial page dropped
+    assert ka[0] == kb[0]
+    assert ka[1] != kb[1] and ka[2] != kb[2]
+    assert prefix_chunk_keys(a[:3], 4) == []    # no full page, no keys
+
+
+def test_chunk_keys_zero_token_not_absorbed():
+    """token 0 must perturb the hash (h*m + 0 == h*m would make a page
+    of zeros collide with its own prefix)."""
+    z = prefix_chunk_keys(np.zeros(8, np.int32), 4)
+    assert z[0] != z[1]
+
+
+# --------------------------------------------------------------------------
+# allocator refcount lifecycle
+# --------------------------------------------------------------------------
+
+def test_share_and_free_refcounts():
+    a = PageAllocator(4)
+    ids = a.alloc(2)
+    assert [a.refcount(i) for i in ids] == [1, 1]
+    a.share(ids)
+    assert [a.refcount(i) for i in ids] == [2, 2]
+    assert a.stats()["shared_pages"] == 2
+    a.free(ids)                     # first sharer releases: still live
+    assert [a.refcount(i) for i in ids] == [1, 1]
+    assert a.stats()["live_pages"] == 2
+    a.free(ids)                     # last sharer: unretained -> free list
+    assert a.stats()["live_pages"] == 0 and a.free_pages == 4
+    assert a.stats()["retained_pages"] == 0
+
+
+def test_free_page_cannot_be_shared():
+    a = PageAllocator(2)
+    ids = a.alloc(1)
+    a.free(ids)
+    with pytest.raises(ValueError, match="neither live nor retained"):
+        a.share(ids)
+
+
+def test_retained_revive_and_lru_reclaim():
+    """Retainable pages park at refcount 0 with bytes intact; ``share``
+    revives them; reclaim runs oldest-first only when an alloc would
+    otherwise refuse, firing the drop hooks the index listens on."""
+    a = PageAllocator(3)
+    ids = a.alloc(3)
+    for i in ids:
+        a.set_retainable(i)
+    a.free([ids[0]])
+    a.free([ids[1]])
+    a.free([ids[2]])
+    assert a.stats() == dict(a.stats(), live_pages=0, retained_pages=3)
+    a.share([ids[1]])               # revive out of LRU order
+    assert a.refcount(ids[1]) == 1 and a.stats()["retained_pages"] == 2
+    dropped = []
+    a.on_reclaim(dropped.append)
+    got = a.alloc(2)                # forces reclaim: oldest (0) then 2
+    assert got is not None and dropped == [ids[0], ids[2]]
+    assert a.stats()["reclaimed"] == 2 and a.stats()["retained_pages"] == 0
+    a.free(got + [ids[1]])
+
+
+def test_unmark_retainable_releases_parked_page():
+    a = PageAllocator(2)
+    (pid,) = a.alloc(1)
+    a.set_retainable(pid)
+    a.free([pid])
+    assert a.stats()["retained_pages"] == 1
+    a.set_retainable(pid, False)
+    assert a.stats()["retained_pages"] == 0 and a.free_pages == 2
+
+
+def test_allocator_snapshot_carries_sharing_state():
+    a = PageAllocator(4)
+    ids = a.alloc(3)
+    a.share(ids[:2])
+    a.set_retainable(ids[2])
+    a.free([ids[2]])                # park one retained
+    b = PageAllocator.from_snapshot(a.snapshot())
+    assert b.stats() == a.stats()
+    assert [b.refcount(i) for i in ids] == [a.refcount(i) for i in ids]
+    b.share([ids[2]])               # revive survives the roundtrip
+    assert b.refcount(ids[2]) == 1
+    # pre-ISSUE-10 blob (no refs/retained keys): every live page singly
+    # owned — the backward-compat default
+    legacy = {k: v for k, v in PageAllocator(2).snapshot().items()
+              if k in ("n_pages", "free", "live", "high_water", "refusals")}
+    c = PageAllocator.from_snapshot(legacy)
+    assert c.stats()["live_pages"] == 0 and c.free_pages == 2
+
+
+# --------------------------------------------------------------------------
+# prefix index
+# --------------------------------------------------------------------------
+
+def test_index_longest_prefix_and_reclaim_purge():
+    a = PageAllocator(8)
+    pc = PrefixCache(a, 4)
+    toks = np.arange(12, dtype=np.int32)
+    ids = a.alloc(3)
+    assert pc.register(toks, ids) == 3
+    n, got = pc.acquire(toks, max_chunks=2)     # capped below full match
+    assert (n, got) == (8, ids[:2])
+    assert [a.refcount(i) for i in ids] == [2, 2, 1]
+    a.free(got)
+    # divergence at page 1 matches only page 0
+    other = toks.copy()
+    other[4] ^= 1
+    n, got = pc.acquire(other, max_chunks=2)
+    assert (n, got) == (4, ids[:1])
+    a.free(got)
+    # release the donor: indexed pages park retained, then a pool-draining
+    # alloc reclaims them and the index purges — the next lookup misses
+    # instead of aliasing a reallocated page
+    a.free(ids)
+    assert a.stats()["retained_pages"] == 3
+    big = a.alloc(8)
+    assert len(pc) == 0
+    assert pc.acquire(toks, max_chunks=2) == (0, [])
+    a.free(big)
+
+
+def test_register_first_writer_wins():
+    a = PageAllocator(8)
+    pc = PrefixCache(a, 4)
+    toks = np.arange(8, dtype=np.int32)
+    first = a.alloc(2)
+    dup = a.alloc(2)
+    assert pc.register(toks, first) == 2
+    assert pc.register(toks, dup) == 0          # keys taken: no new entries
+    _, got = pc.acquire(toks, max_chunks=1)
+    assert got == first[:1]
+    a.free(got)
+    a.free(first + dup)
+
+
+# --------------------------------------------------------------------------
+# copy-on-write fork
+# --------------------------------------------------------------------------
+
+def test_cow_fork_copies_shared_pages():
+    """A shared page inside the writable range is forked onto a fresh
+    private page — int8 planes, scales, and digest plane byte-equal —
+    and the donor keeps its copy; private pages pass through."""
+    a = PageAllocator(6)
+    cache = init_paged_cache(1, 1, 6, 4, 4, 1, 4, integrity=True)
+    rng = np.random.default_rng(0)
+    cache = dict(cache,
+                 k_pages=jax.numpy.asarray(
+                     rng.integers(-127, 128, cache["k_pages"].shape),
+                     cache["k_pages"].dtype))
+    ids = a.alloc(3)
+    a.share(ids[:1])                            # page 0 shared, rest private
+    c2, ids2, nf = cow_fork(cache, a, ids, start_idx=0)
+    assert nf == 1 and ids2[1:] == ids[1:] and ids2[0] != ids[0]
+    np.testing.assert_array_equal(np.asarray(c2["k_pages"])[:, ids2[0]],
+                                  np.asarray(cache["k_pages"])[:, ids[0]])
+    np.testing.assert_array_equal(np.asarray(c2["page_sum"])[:, ids2[0]],
+                                  np.asarray(cache["page_sum"])[:, ids[0]])
+    assert a.refcount(ids[0]) == 1 and a.refcount(ids2[0]) == 1
+    # start_idx excludes the shared prefix: nothing left to fork
+    a.share(ids2[:1])
+    c3, ids3, nf = cow_fork(c2, a, ids2, start_idx=1)
+    assert nf == 0 and ids3 == ids2 and c3 is c2
+    a.free(ids2[:1])
+    a.free(ids2 + [ids[0]])
+
+
+def test_cow_fork_pool_exhausted_raises():
+    a = PageAllocator(2)
+    cache = init_paged_cache(1, 1, 2, 4, 2, 1, 4)
+    ids = a.alloc(2)
+    a.share(ids)
+    with pytest.raises(RuntimeError, match="exhausted while forking"):
+        cow_fork(cache, a, ids, start_idx=0)
+    a.free(ids)
+    a.free(ids)
+
+
+# --------------------------------------------------------------------------
+# property: random refcount schedule drains leak-free
+# --------------------------------------------------------------------------
+
+def _run_schedule(seed: int) -> None:
+    """Random admit (with/without a shared prefix), COW fork, cancel/evict
+    (free in arbitrary order), reclaim pressure — after draining every
+    request: zero live pages, zero refcounts, and the allocator's books
+    (free + retained + live == pool) balance at every step."""
+    rng = np.random.default_rng(seed)
+    ps, pool = 4, 24
+    a = PageAllocator(pool)
+    pc = PrefixCache(a, ps)
+    live: list = []                              # (ids, tokens) per request
+    mirror: dict = {}                            # pid -> expected refcount
+    vocab = 7                                    # tiny: collisions -> hits
+
+    def check():
+        st_ = a.stats()
+        assert a.free_pages + st_["retained_pages"] + st_["live_pages"] \
+            == pool
+        for pid in range(pool):
+            assert a.refcount(pid) == mirror.get(pid, 0), (seed, pid)
+
+    for _ in range(120):
+        op = rng.integers(0, 3)
+        if op == 0 and len(live) < 5:            # admit
+            S = int(rng.integers(ps, 4 * ps + 1))
+            toks = rng.integers(0, vocab, S).astype(np.int32)
+            need = admission_pages(S, 2, ps, ps - 1)
+            _n, shared = pc.acquire(toks, (S - 1) // ps)
+            fresh = a.alloc(need - len(shared))
+            if fresh is None:
+                if shared:
+                    a.free(shared)
+                    for p in shared:
+                        mirror[p] -= 1
+                        if mirror[p] == 0:
+                            del mirror[p]
+                continue
+            for p in shared + fresh:
+                mirror[p] = mirror.get(p, 0) + 1
+            live.append((shared + fresh, toks))
+        elif op == 1 and live:                   # cancel/evict, random victim
+            ids, toks = live.pop(int(rng.integers(len(live))))
+            if rng.integers(2):                  # some finishers register
+                pc.register(toks, ids[:len(toks) // ps])
+            a.free(ids)
+            for p in ids:
+                mirror[p] -= 1
+                if mirror[p] == 0:
+                    del mirror[p]
+        elif op == 2 and live:                   # COW write into a request
+            i = int(rng.integers(len(live)))
+            ids, toks = live[i]
+            if a.available_pages < len(ids):     # fork targets must exist
+                continue
+            cache = init_paged_cache(1, 1, pool, ps, len(ids), 1, 2)
+            _, ids2, _ = cow_fork(cache, a, ids, start_idx=0)
+            for old, new in zip(ids, ids2):
+                if old == new:
+                    continue
+                mirror[old] -= 1
+                if mirror[old] == 0:
+                    del mirror[old]
+                mirror[new] = 1
+            live[i] = (ids2, toks)
+        check()
+
+    for ids, _ in live:                          # drain
+        a.free(ids)
+        for p in ids:
+            mirror[p] -= 1
+            if mirror[p] == 0:
+                del mirror[p]
+    live.clear()
+    check()
+    assert a.stats()["live_pages"] == 0 and not mirror
+    # retained pages are reclaimable, never leaked: a full-pool alloc
+    # succeeds and returns every page to the free list
+    every = a.alloc(pool)
+    assert every is not None and len(pc) == 0
+    a.free(every)
+    assert a.free_pages == pool
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**32 - 1))
+def test_refcount_schedule_property(seed):
+    _run_schedule(seed)
+
+
+@pytest.mark.skipif(HAVE_HYPOTHESIS, reason="hypothesis drives the sweep")
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_refcount_schedule_fallback(seed):
+    _run_schedule(seed)
+
+
+# --------------------------------------------------------------------------
+# bitwise hit-vs-cold: tokens and logit traces, both read paths
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("paged_attn", ["jnp", "kernel"])
+def test_extend_logit_trace_parity_hit_vs_cold(paged_attn):
+    """The acceptance criterion at its sharpest: a prefix-hit admission's
+    post-divergence chunk logits are bitwise the cold admission's —
+    shared pages hold exactly the bytes the donor's identical chunk
+    programs wrote, so the trace cannot tell a hit from a miss."""
+    cfg, params = _setup()
+    ps, S, budget = 4, 12, 3
+    rng = np.random.default_rng(0)
+    donor = rng.integers(1, V, S).astype(np.int32)
+    hitter = donor.copy()
+    hitter[8:] = rng.integers(1, V, S - 8)       # diverge at page 2
+    extend = make_extend_fn(cfg, None, ps, eos_id=-1, sample="greedy",
+                            paged_attn=paged_attn, trace_logits=True)
+    need = admission_pages(S, budget, ps, ps - 1)
+
+    def admit_chunked(state, alloc, pfx, b, toks, use_prefix):
+        d = 0
+        shared = []
+        if use_prefix:
+            _n, shared = pfx.acquire(toks, (S - 1) // ps)
+            d = len(shared)
+        ids = shared + alloc.alloc(need - d)
+        cache, ids, _ = cow_fork(state["cache"], alloc, ids, start_idx=d)
+        mp = cache["page_table"].shape[1]
+        row = jax.numpy.asarray(ids + [ids[-1]] * (mp - len(ids)),
+                                jax.numpy.int32)
+        cache = dict(cache, page_table=cache["page_table"].at[b].set(row),
+                     pos=cache["pos"].at[b].set(d * ps))
+        state = dict(state, cache=cache,
+                     done=state["done"].at[b].set(True))
+        traces = []
+        fed = d * ps
+        while fed < S:
+            part = toks[fed:fed + ps]
+            state, tok0, lg = extend(
+                params, state, jax.numpy.asarray(part[None]),
+                jax.numpy.int32(b), jax.numpy.int32(len(part)),
+                jax.numpy.bool_(fed + len(part) >= S),
+                jax.numpy.int32(budget))
+            traces.append(np.asarray(lg))
+            fed += len(part)
+        pfx.register(toks, ids[:S // ps])
+        return state, ids, int(tok0), traces
+
+    def leg(use_prefix):
+        alloc = PageAllocator(4 * need)
+        pfx = PrefixCache(alloc, ps)
+        state = init_serve_state(cfg, 2, S + budget + ps - 1, kv="int8",
+                                 page_size=ps, n_pages=4 * need)
+        state, _, _, _ = admit_chunked(state, alloc, pfx, 0, donor, False)
+        state, ids, tok0, traces = admit_chunked(state, alloc, pfx, 1,
+                                                 hitter, use_prefix)
+        return tok0, traces, pfx.stats()
+
+    tok_c, tr_c, st_c = leg(False)
+    tok_w, tr_w, st_w = leg(True)
+    assert st_c["hits"] == 0 and st_w["hits"] == 1
+    assert st_w["pages_deduped"] == 2            # pages 0 and 1 shared
+    assert tok_w == tok_c
+    assert len(tr_c) == 3 and len(tr_w) == 1     # hit skipped 2 chunks
+    np.testing.assert_array_equal(tr_w[0], tr_c[2])
+
+
+@pytest.mark.parametrize("paged_attn", ["jnp", "kernel"])
+def test_serving_prefix_bitwise_vs_cold(paged_attn):
+    """End-to-end through the continuous scheduler: warm serving with
+    prefix hits emits bitwise the cold leg's tokens on both paged-attn
+    read paths, while visibly deduping pages."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(1)
+    R, S, n = 4, 8, 4
+    prompts = rng.integers(0, cfg.vocab, (R, S), dtype=np.int32)
+    prompts[1:, :4] = prompts[0, :4]             # 1-page shared prefix
+    budgets = np.asarray([4, 3, 4, 2], np.int32)
+    knobs = dict(slots=2, seg_len=2, max_new=budgets, eos_id=-1, kv="int8",
+                 page_size=4, paged_attn=paged_attn, log=lambda *a: None)
+    cold, st_c = serve_continuous(cfg, params, prompts, n, **knobs,
+                                  prefix_cache="cold")
+    warm, st_w = serve_continuous(cfg, params, prompts, n, **knobs,
+                                  prefix_cache="on")
+    for r in range(R):
+        np.testing.assert_array_equal(warm[r], cold[r], err_msg=f"req {r}")
+    assert st_c["prefix"]["hits"] == 0
+    assert st_w["prefix"]["hits"] == 3 and st_w["prefix"]["hit_tokens"] == 12
+    assert st_w["pages"]["live_pages"] == 0
+
+
+def test_prefix_requires_int8_kv():
+    cfg, params = _setup()
+    prompts = np.zeros((1, 8), np.int32)
+    with pytest.raises(ValueError, match="int8"):
+        serve_continuous(cfg, params, prompts, 2, slots=1, kv="float",
+                         prefix_cache=True, eos_id=-1,
+                         max_new=np.asarray([2], np.int32))
+
+
+def test_router_prefix_hits_match_cold_and_snapshot_carries_index():
+    """Router admissions through the prefix path match the non-prefix
+    chunked router bitwise (same chunk_len), /stats exposes the prefix
+    ledger, and a failover snapshot round-trips the index."""
+    from repro.runtime.router import Router
+    cfg, params = _setup()
+    rng = np.random.default_rng(2)
+    shared = rng.integers(1, V, 8).astype(np.int32)
+    prompts = [np.concatenate([shared, rng.integers(1, V, 4).astype(np.int32)])
+               for _ in range(4)]
+    budgets = [4, 3, 4, 2]
+    kn = dict(seg_len=2, kv="int8", page_size=4, buckets=(16,), chunk_len=4,
+              max_prompt=24, max_new_cap=8, slots=2, log=lambda *a: None)
+
+    async def run(prefix):
+        r = Router(cfg, params, prefix_cache=prefix, **kn)
+        await r.start()
+        res = []
+        for p, b in zip(prompts, budgets):      # staggered submissions
+            res.append(await r.submit(p, b).result())
+        st = r.stats()
+        snap = r._take_snapshot()
+        await r.close()
+        assert r.stats()["pages"]["live_pages"] == 0
+        return res, st, snap
+
+    warm, st, snap = asyncio.run(run(True))
+    cold, st_c, _ = asyncio.run(run(False))
+    assert st_c["prefix"] is None
+    for i, (w, c) in enumerate(zip(warm, cold)):
+        assert (w.status, w.tokens) == (c.status, c.tokens), i
+    assert st["prefix"]["hits"] == 3 and st["prefix"]["pages_deduped"] == 6
+    assert st["prefix"]["prefill_positions_computed"] \
+        < st["prefix"]["prefill_positions_total"]
+    pc = PrefixCache.from_snapshot(snap["prefix"],
+                                   PageAllocator.from_snapshot(snap["alloc"]))
+    assert len(pc) > 0 and pc.hits == st["prefix"]["hits"]

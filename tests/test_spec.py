@@ -309,8 +309,16 @@ def test_spec_rollback_rebuilds_committed_tail():
 
 def test_page_allocator_stats():
     a = PageAllocator(4)
-    assert a.stats() == {"n_pages": 4, "live_pages": 0, "high_water": 0,
-                         "refusals": 0}
+    st0 = a.stats()
+    assert {k: st0[k] for k in ("n_pages", "live_pages", "high_water",
+                                "refusals")} \
+        == {"n_pages": 4, "live_pages": 0, "high_water": 0, "refusals": 0}
+    # the ISSUE 10 sharing counters start at zero and stay there on the
+    # non-prefix path exercised here
+    assert {k: st0[k] for k in ("shared_pages", "retained_pages", "shares",
+                                "reclaimed")} \
+        == {"shared_pages": 0, "retained_pages": 0, "shares": 0,
+            "reclaimed": 0}
     p1 = a.alloc(3)
     assert a.stats()["live_pages"] == 3 and a.stats()["high_water"] == 3
     assert a.alloc(2) is None                     # refused, pool exhausted
@@ -318,8 +326,9 @@ def test_page_allocator_stats():
     a.free(p1)
     p2 = a.alloc(4)
     st = a.stats()
-    assert st == {"n_pages": 4, "live_pages": 4, "high_water": 4,
-                  "refusals": 1}
+    assert {k: st[k] for k in ("n_pages", "live_pages", "high_water",
+                               "refusals")} \
+        == {"n_pages": 4, "live_pages": 4, "high_water": 4, "refusals": 1}
     # counters survive the snapshot/restore failover path
     b = PageAllocator.from_snapshot(a.snapshot())
     assert b.stats() == st

@@ -1,7 +1,8 @@
 """CI artifact-gate unit tests (ISSUE 6): the serve/chaos_* derived-field
 schema in tools/check_artifacts.py — a chaos row that loses its tok_s /
 overhead ratio / drill counters must fail the gate, not silently blind
-the bench-regression baseline."""
+the bench-regression baseline.  ISSUE 10 adds the serve/prefix_* schema
+and the docs link/anchor gate (tools/check_docs.py)."""
 import importlib.util
 import json
 import os
@@ -9,13 +10,16 @@ import os
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def _gate():
+def _load_tool(name):
     spec = importlib.util.spec_from_file_location(
-        "check_artifacts",
-        os.path.join(REPO, "tools", "check_artifacts.py"))
+        name, os.path.join(REPO, "tools", f"{name}.py"))
     mod = importlib.util.module_from_spec(spec)
     spec.loader.exec_module(mod)
     return mod
+
+
+def _gate():
+    return _load_tool("check_artifacts")
 
 
 def _bench(tmp_path, rows):
@@ -70,3 +74,77 @@ def test_chaos_drill_requires_counters(tmp_path):
 def test_checked_in_trajectory_passes():
     mod = _gate()
     assert mod.check_bench(os.path.join(REPO, "BENCH_kernels.json")) == []
+
+
+PREFIX_HIT = {
+    "name": "serve/prefix_hit90/x/R6", "us": 14.0,
+    "derived": ("tok_s=1234.5;hit_rate_target=0.90;hits=4;lookups=6;"
+                "hit_tokens=48;pages_deduped=12;prefill_removed_frac=0.500;"
+                "admit_us_hit=100.0;admit_us_cold=274.0;"
+                "admit_latency_ratio=0.365;speedup_vs_cold=1.20x;"
+                "pages_live=0;pages_retained=3;pages_shares=12")}
+PREFIX_ROUTER = {
+    "name": "serve/prefix_router/x/R24", "us": 15.0,
+    "derived": ("p50_ms=5.0;p99_ms=20.0;tok_s=100.0;refusal_rate=0.1;"
+                "requests=20;ok=15;deadline=1;refused=4;cancelled=0;"
+                "degraded=0;replays=0;quarantined=0;pages_live=0;"
+                "pages_high_water=8;pages_refusals=2;hits=11;lookups=20;"
+                "hit_tokens=48;pages_deduped=12;prefill_removed_frac=0.369;"
+                "pages_retained=6;bitwise_ok=19")}
+
+
+def test_prefix_rows_pass(tmp_path):
+    assert _gate().check_bench(
+        _bench(tmp_path, [PREFIX_HIT, PREFIX_ROUTER])) == []
+
+
+def test_prefix_hit_row_requires_ledger_and_drained_pool(tmp_path):
+    for field, needle in (("hits=4", "hits"),
+                          ("prefill_removed_frac=0.500",
+                           "prefill_removed_frac"),
+                          ("admit_latency_ratio=0.365",
+                           "admit_latency_ratio"),
+                          ("pages_live=0", "pages_live")):
+        bad = PREFIX_HIT["derived"].replace(f"{field};", "")\
+                                   .replace(f";{field}", "")
+        errs = _gate().check_bench(
+            _bench(tmp_path, [dict(PREFIX_HIT, derived=bad)]))
+        assert errs and any(needle in e for e in errs), (field, errs)
+    leak = PREFIX_HIT["derived"].replace("pages_live=0", "pages_live=2")
+    errs = _gate().check_bench(
+        _bench(tmp_path, [dict(PREFIX_HIT, derived=leak)]))
+    assert errs and "page leak" in errs[0]
+
+
+def test_prefix_router_row_rides_router_schema(tmp_path):
+    # drop bitwise_ok -> prefix error; break the status sum -> router error
+    bad1 = PREFIX_ROUTER["derived"].replace(";bitwise_ok=19", "")
+    bad2 = PREFIX_ROUTER["derived"].replace("ok=15", "ok=14")
+    errs1 = _gate().check_bench(
+        _bench(tmp_path, [dict(PREFIX_ROUTER, derived=bad1)]))
+    errs2 = _gate().check_bench(
+        _bench(tmp_path, [dict(PREFIX_ROUTER, derived=bad2)]))
+    assert errs1 and "bitwise_ok" in errs1[0]
+    assert errs2 and any("sum" in e for e in errs2)
+
+
+def test_check_docs_catches_broken_links_and_anchors(tmp_path):
+    docs = _load_tool("check_docs")
+    a = tmp_path / "a.md"
+    a.write_text("# Top Title\n\n## Sub `sec`\n\n"
+                 "[ok](b.md)\n[ok2](b.md#real-heading)\n"
+                 "[self](#sub-sec)\n"
+                 "[bad](missing.md)\n[badfrag](b.md#nope)\n"
+                 "[ext](https://example.invalid/x#y)\n"
+                 "```\n[fence](nope.md)\n```\n"
+                 "`[span](nope2.md)`\n")
+    (tmp_path / "b.md").write_text("# Real heading\n[up](a.md)\n")
+    errs = docs.check_file(str(a), {})
+    errs += docs.check_file(str(tmp_path / "b.md"), {})
+    assert len(errs) == 2, errs
+    assert "missing.md" in errs[0] and "#nope" in errs[1]
+
+
+def test_check_docs_passes_on_repo_docs():
+    docs = _load_tool("check_docs")
+    assert docs.main([]) == 0

@@ -70,6 +70,24 @@ chaos leg's tail at CI shapes) and the refusal rate at
 ``router_refusal_rate_max`` (admission control that starts refusing the
 majority of a modest trace is broken backpressure, not load shedding).
 
+The ISSUE 10 leg serves the 90%-shared-prefix request queue warm
+(``prefix_cache='on'``) and cold (``prefix_cache='cold'`` — the
+identical page-aligned chunked admission path with lookup/registration
+disabled), asserts the warm outputs bitwise against the cold ones (the
+tentpole acceptance criterion: a prefix hit maps page-table entries to
+already-quantized physical pages, it never re-derives bytes), and
+bounds two metrics: the fraction of prefill positions removed by page
+sharing must stay above ``prefix_flops_removed_min`` (the >= 0.4
+acceptance bar at the 90% trace; measured 0.50 at the CI shape — 5 of
+6 requests share 3 of 4 prompt pages and only the first admission pays
+for them), and the mean wall admission latency of a prefix *hit* over
+the cold leg's miss admissions must stay below
+``prefix_hit_admission_latency_ratio_max`` (hits feed strictly fewer
+chunks through the same compiled extend program, so the ratio sits
+well under 1 — 0.37 measured; a ratio drifting toward 1 means hit
+admissions started re-feeding their shared pages, i.e. the dedup
+stopped removing work without breaking bitwise parity).
+
 Usage:  PYTHONPATH=src python -m tools.bench_regression [--smoke]
 (--smoke shortens the trace; CI passes it.)  Exit 0 on pass, 1 on drift.
 """
@@ -233,6 +251,59 @@ def _spec_acceptance(smoke: bool):
     return match, rate
 
 
+def _prefix_leg(smoke: bool):
+    """(bitwise_match, prefill_removed_frac, admit_latency_ratio) for the
+    90%-shared-prefix continuous-serving queue (ISSUE 10).  Both legs run
+    the same compiled page-aligned chunked extend program; the cold leg
+    just has prefix lookup/registration disabled, so the warm outputs
+    must be token-identical and every difference is pure dedup.  Each leg
+    runs twice and the second run's stats are used — the first pair warms
+    the shared executables so the admission wall-clock samples measure
+    the steady-state path, not tracing."""
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_arch
+    from repro.launch.serve import serve_continuous
+    from repro.models import get_model
+
+    cfg = dataclasses.replace(get_arch("qwen3-0.6b").reduced(),
+                              dscim="kernel:dscim1:256")
+    model = get_model(cfg)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    ps, S, R = 4, 16, 6
+    n_tokens = 4 if smoke else 8
+    rng = np.random.default_rng(0)
+    budgets = np.clip(np.linspace(2, n_tokens, R).round(), 2,
+                      n_tokens).astype(np.int32)
+    prompts = rng.integers(0, cfg.vocab, (R, S), dtype=np.int32)
+    prompts[:round(0.9 * R), :12] = rng.integers(0, cfg.vocab, 12,
+                                                 dtype=np.int32)
+    knobs = dict(slots=2, seg_len=2, max_new=budgets, eos_id=-1,
+                 kv="int8", page_size=ps, prepare=False,
+                 log=lambda *a: None)
+
+    def leg(mode):
+        return serve_continuous(cfg, params, prompts, n_tokens,
+                                prefix_cache=mode, **knobs)
+
+    leg("cold"), leg("on")          # warm the shared executables
+    out_c, st_c = leg("cold")
+    out_w, st_w = leg("on")
+    match = len(out_c) == len(out_w) and all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(out_c, out_w))
+    pw = st_w["prefix"]
+    removed = 1.0 - pw["prefill_positions_computed"] \
+        / max(pw["prefill_positions_total"], 1)
+    lat_cold = float(np.mean(st_c["prefix"]["admit_lat_miss"]))
+    lat_hit = float(np.mean(pw["admit_lat_hit"])) if pw["admit_lat_hit"] \
+        else float("inf")
+    return match, removed, lat_hit / max(lat_cold, 1e-12)
+
+
 def _router_loadtest(smoke: bool):
     """(worst-leg p99/p50 ratio, worst-leg refusal rate) from the mini
     router load test (ISSUE 8).  run_loadtest itself hard-asserts the
@@ -305,6 +376,28 @@ def main(argv=None) -> int:
     if rate < rate_min:
         print("BENCH REGRESSION: greedy self-spec acceptance rate "
               "collapsed below its bound", file=sys.stderr)
+        ok = False
+
+    pmatch, removed, admit_ratio = _prefix_leg(args.smoke)
+    removed_min = th["prefix_flops_removed_min"]
+    admit_max = th["prefix_hit_admission_latency_ratio_max"]
+    print(f"prefix cache (90% shared trace): bitwise match {pmatch}, "
+          f"prefill removed {removed:.3f} (threshold >= {removed_min}), "
+          f"hit/cold admission latency ratio {admit_ratio:.3f} "
+          f"(threshold <= {admit_max})")
+    if not pmatch:
+        print("BENCH REGRESSION: prefix-cached serving drifted from the "
+              "cold chunked reference (bitwise-parity contract)",
+              file=sys.stderr)
+        ok = False
+    if removed < removed_min:
+        print("BENCH REGRESSION: prefix caching stopped removing prefill "
+              "work — shared pages are being re-fed", file=sys.stderr)
+        ok = False
+    if admit_ratio > admit_max:
+        print("BENCH REGRESSION: prefix-hit admission latency no longer "
+              "beats a cold admission — dedup is not skipping chunks",
+              file=sys.stderr)
         ok = False
 
     tail, refusal = _router_loadtest(args.smoke)

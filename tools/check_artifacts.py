@@ -55,6 +55,21 @@ Checks (no third-party deps — stdlib json only):
   positive ``overhead_vs_off`` ratio (the CI-bounded scrubbing cost) and
   the sweep coverage/repair counters as non-negative ints;
   integrity_drill needs its repair/replay counters.
+* serve/prefix_* rows (ISSUE 10): the prefix-cache rows carry the dedup
+  ledger (``hits``/``lookups``/``hit_tokens``/``pages_deduped`` as
+  non-negative ints) and ``prefill_removed_frac`` in [0, 1] — the
+  CI-bounded fraction of prefill positions never computed because their
+  pages were shared.  The serve-bench hit-rate sweep rows
+  (prefix_hit0/hit50/hit90) additionally need a finite positive
+  ``tok_s``, ``hit_rate_target`` in [0, 1], a positive
+  ``admit_latency_ratio`` (hit-vs-cold admission wall time, CI-bounded
+  in tools/bench_regression.py), and drained allocator occupancy
+  (``pages_live=0``, ``pages_retained``/``pages_shares`` non-negative —
+  retained pages are the prefix index's parked ref-0 pages, not leaks).
+  The router trace row (prefix_router) rides the full serve/router_*
+  schema (latency percentiles, terminal-status ledger, zero live pages)
+  plus a non-negative ``bitwise_ok`` count — the number of ok-vs-ok
+  request pairs asserted token-identical between the warm and cold legs.
 * No duplicate rows (ISSUE 7 satellite): a row name may appear at most
   once per run, and a (name, rev) pair at most once across the whole
   trajectory — benchmarks/run.py dedupes on append (newest run wins), so
@@ -203,6 +218,64 @@ def _check_integrity_row(name: str, derived: str, rtag: str, errs: list):
                             f"non-negative int {key}, got {f.get(key)!r}")
 
 
+def _check_prefix_row(name: str, derived: str, rtag: str, errs: list):
+    """ISSUE 10: typed schema for serve/prefix_* derived fields.  All
+    prefix rows carry the dedup ledger and the removed-prefill fraction;
+    the serve-bench sweep rows (prefix_hit*) add the admission-latency
+    ratio and drained allocator occupancy, and the loadtest row
+    (prefix_router) layers the prefix ledger on the full router-row
+    schema plus the bitwise ok-vs-ok assertion count.  A prefix row
+    whose ledger went missing would blind both CI bounds (the
+    flops-removed floor and the hit-admission latency ceiling)."""
+    f = _derived_fields(derived)
+    kind = name.split("/", 2)[1]    # prefix_hit0|hit50|hit90|router
+    for key in ("hits", "lookups", "hit_tokens", "pages_deduped"):
+        if not _nonneg_int(f.get(key)):
+            errs.append(f"{rtag} ({name!r}): prefix row needs non-negative "
+                        f"int {key}, got {f.get(key)!r}")
+    try:
+        removed = float(f.get("prefill_removed_frac"))
+    except (TypeError, ValueError):
+        removed = -1.0
+    if not 0.0 <= removed <= 1.0:
+        errs.append(f"{rtag} ({name!r}): prefill_removed_frac must be in "
+                    f"[0, 1], got {f.get('prefill_removed_frac')!r}")
+    if kind == "prefix_router":
+        _check_router_row(name, derived, rtag, errs)
+        if not _nonneg_int(f.get("bitwise_ok")):
+            errs.append(f"{rtag} ({name!r}): prefix_router needs a "
+                        f"non-negative int bitwise_ok (ok-vs-ok pairs "
+                        f"asserted token-identical), got "
+                        f"{f.get('bitwise_ok')!r}")
+        if not _nonneg_int(f.get("pages_retained")):
+            errs.append(f"{rtag} ({name!r}): prefix_router needs "
+                        f"non-negative int pages_retained, got "
+                        f"{f.get('pages_retained')!r}")
+    else:
+        if not _pos_float(f.get("tok_s")):
+            errs.append(f"{rtag} ({name!r}): prefix row needs a finite "
+                        f"positive tok_s, got {f.get('tok_s')!r}")
+        try:
+            target = float(f.get("hit_rate_target"))
+        except (TypeError, ValueError):
+            target = -1.0
+        if not 0.0 <= target <= 1.0:
+            errs.append(f"{rtag} ({name!r}): hit_rate_target must be in "
+                        f"[0, 1], got {f.get('hit_rate_target')!r}")
+        if not _pos_float(f.get("admit_latency_ratio")):
+            errs.append(f"{rtag} ({name!r}): prefix sweep row needs a "
+                        f"positive admit_latency_ratio, got "
+                        f"{f.get('admit_latency_ratio')!r}")
+        for key in ("pages_retained", "pages_shares"):
+            if not _nonneg_int(f.get(key)):
+                errs.append(f"{rtag} ({name!r}): prefix sweep row needs "
+                            f"non-negative int {key}, got {f.get(key)!r}")
+        if f.get("pages_live") != "0":
+            errs.append(f"{rtag} ({name!r}): prefix rows are recorded "
+                        f"after drain — pages_live must be 0, got "
+                        f"{f.get('pages_live')!r} (page leak)")
+
+
 def _check_router_row(name: str, derived: str, rtag: str, errs: list):
     """ISSUE 8: typed schema for serve/router_* load-test rows
     (benchmarks/loadtest.py).  Every row must carry the latency
@@ -311,6 +384,8 @@ def check_bench(path: str) -> list:
                 _check_spec_row(name, derived, rtag, errs)
             elif isinstance(name, str) and name.startswith("serve/router_"):
                 _check_router_row(name, derived, rtag, errs)
+            elif isinstance(name, str) and name.startswith("serve/prefix_"):
+                _check_prefix_row(name, derived, rtag, errs)
             elif isinstance(name, str) \
                     and name.startswith("serve/integrity_"):
                 _check_integrity_row(name, derived, rtag, errs)

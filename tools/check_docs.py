@@ -1,0 +1,145 @@
+"""CI docs gate (ISSUE 10 satellite): fail the build on broken relative
+links or heading anchors in README.md and docs/*.md.
+
+The docs pass (README, docs/architecture.md, docs/serving.md) leans hard
+on cross-references — "see docs/serving.md#prefix-cache", "the contract
+lives in ROADMAP.md" — and those rot silently: a renamed file or a
+reworded heading leaves a dead link that nobody notices until an
+operator follows it.  This gate walks every markdown link in the doc
+set and checks, for relative targets, that the target file exists and
+(when the link carries a ``#fragment`` into a markdown file) that the
+fragment matches a real heading's GitHub-style anchor slug.
+
+Scope (deliberately narrow — stdlib only, no markdown parser):
+
+* Inline links/images ``[text](target)`` outside fenced code blocks.
+  Reference-style definitions ``[label]: target`` are checked too.
+* ``http(s)://`` / ``mailto:`` targets are skipped — CI must not
+  depend on the network.
+* Anchors are slugified the way GitHub renders headings: lowercase,
+  markdown/code-span markup stripped, punctuation dropped, spaces to
+  hyphens, ``-N`` suffixes for duplicates.
+* Anchor checks only apply to ``.md`` targets (including self-links
+  like ``(#section)``); fragments into source files (GitHub line
+  anchors like ``#L10``) are existence-checked only.
+
+Usage:  python tools/check_docs.py [FILES...]
+(default: README.md and docs/*.md under the repo root)
+Exit 0 on pass; exit 1 with one line per broken link.
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_LINK_RE = re.compile(r"!?\[[^\]]*\]\(\s*<?([^)<>\s]+)>?(?:\s+\"[^\"]*\")?\s*\)")
+_REFDEF_RE = re.compile(r"^\s{0,3}\[[^\]]+\]:\s+<?(\S+?)>?\s*$")
+_HEADING_RE = re.compile(r"^(#{1,6})\s+(.+?)\s*#*\s*$")
+_FENCE_RE = re.compile(r"^\s*(```|~~~)")
+
+
+def _slugify(text: str) -> str:
+    """GitHub's heading-anchor slug: markup stripped, lowercased,
+    non-word punctuation dropped, spaces hyphenated."""
+    text = re.sub(r"`([^`]*)`", r"\1", text)              # code spans
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)  # link text
+    text = re.sub(r"[*_]", "", text)                      # emphasis
+    text = text.strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def _iter_md_lines(path: str):
+    """(lineno, line) pairs with fenced code blocks blanked out — links
+    and headings inside ``` fences are examples, not references."""
+    in_fence = False
+    with open(path, encoding="utf-8") as f:
+        for i, line in enumerate(f, 1):
+            if _FENCE_RE.match(line):
+                in_fence = not in_fence
+                continue
+            if not in_fence:
+                yield i, line.rstrip("\n")
+
+
+def heading_anchors(path: str) -> set:
+    """All valid anchor slugs in a markdown file, with GitHub's ``-N``
+    duplicate suffixing."""
+    counts: dict = {}
+    anchors: set = set()
+    for _, line in _iter_md_lines(path):
+        m = _HEADING_RE.match(line)
+        if not m:
+            continue
+        slug = _slugify(m.group(2))
+        n = counts.get(slug, 0)
+        counts[slug] = n + 1
+        anchors.add(slug if n == 0 else f"{slug}-{n}")
+    return anchors
+
+
+def _targets(path: str):
+    """(lineno, target) for every checkable link target in the file."""
+    for i, line in _iter_md_lines(path):
+        # blank inline code spans so `[x](y)` examples aren't links
+        clean = re.sub(r"`[^`]*`", "", line)
+        for m in _LINK_RE.finditer(clean):
+            yield i, m.group(1)
+        m = _REFDEF_RE.match(clean)
+        if m:
+            yield i, m.group(1)
+
+
+def check_file(path: str, anchor_cache: dict) -> list:
+    errs = []
+    base = os.path.dirname(os.path.abspath(path))
+    rel = os.path.relpath(path, REPO)
+    for lineno, target in _targets(path):
+        if re.match(r"^[a-zA-Z][a-zA-Z0-9+.-]*:", target):
+            continue                     # http(s)/mailto/etc — skip
+        frag = ""
+        if "#" in target:
+            target, _, frag = target.partition("#")
+        if target:
+            dest = os.path.normpath(os.path.join(base, target))
+            if not os.path.exists(dest):
+                errs.append(f"{rel}:{lineno}: broken link — "
+                            f"{target!r} does not exist")
+                continue
+        else:
+            dest = os.path.abspath(path)  # pure-fragment self link
+        if frag and dest.endswith(".md") and os.path.isfile(dest):
+            if dest not in anchor_cache:
+                anchor_cache[dest] = heading_anchors(dest)
+            if frag.lower() not in anchor_cache[dest]:
+                errs.append(f"{rel}:{lineno}: broken anchor — no heading "
+                            f"in {os.path.relpath(dest, REPO)!r} slugs to "
+                            f"#{frag}")
+    return errs
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    files = argv or [os.path.join(REPO, "README.md")] + sorted(
+        glob.glob(os.path.join(REPO, "docs", "*.md")))
+    errs: list = []
+    cache: dict = {}
+    for path in files:
+        if not os.path.exists(path):
+            errs.append(f"{os.path.relpath(path, REPO)}: missing")
+            continue
+        errs.extend(check_file(path, cache))
+    for e in errs:
+        print(f"DOCS ERROR: {e}", file=sys.stderr)
+    if not errs:
+        print(f"docs OK: {len(files)} files, all relative links and "
+              f"anchors resolve")
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
